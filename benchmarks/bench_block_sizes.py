@@ -1,0 +1,29 @@
+"""Algorithm 1 runtime scaling — the paper's O(k log k) claim (Thm 1).
+
+Emits one row per k plus the Table III fast/slow target ratios.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.block_sizes import target_block_sizes
+from repro.core.topology import TABLE_III_FAST_SPECS, Topology, scale_to_load
+
+from .common import row, time_us
+
+
+def run() -> list[str]:
+    rows = []
+    n = 1e9
+    for k in (96, 1536, 24576, 393216):
+        topo = scale_to_load(Topology.topo1(k, 1 / 12, 16.0, 13.8), n)
+        us = time_us(lambda: target_block_sizes(n, topo), reps=3)
+        rows.append(row(f"alg1_k{k}", us, f"n={n:.0e}"))
+    # Table III reproduction: tw(fast)/tw(slow) per experiment step
+    for i, (spd, mem) in enumerate(TABLE_III_FAST_SPECS, start=1):
+        for frac, tag in ((1 / 12, "f8"), (1 / 6, "f16")):
+            topo = scale_to_load(Topology.topo1(96, frac, spd, mem), n)
+            tw = target_block_sizes(n, topo)
+            rows.append(row(f"table3_exp{i}_{tag}", 0.0,
+                            f"tw_ratio={tw[0] / tw[-1]:.2f}"))
+    return rows

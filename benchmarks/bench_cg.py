@@ -1,0 +1,79 @@
+"""Fig. 5 analogue: CG time per iteration under different partitions
+(TOPO3-style heterogeneity).
+
+Two measurements per partitioner:
+  * real: measured single-process SpMV+CG microseconds (CPU; homogeneous);
+  * modeled heterogeneous step time, the paper's TOPO3 simulation —
+        T_iter = max_i(|b_i| * c_nnz / speed_i) + alpha * maxCommVolume
+    with c_nnz the measured per-row SpMV cost and alpha the per-word
+    exchange cost (derived from the halo plan, not guessed).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Topology, partition, scale_to_load, \
+    target_block_sizes
+from repro.core.metrics import block_sizes_of, max_comm_volume
+from repro.sparse.cg import cg_solve
+from repro.sparse.generators import rdg
+from repro.sparse.graph import laplacian_csr
+from repro.sparse.spmv import csr_to_padded_coo, spmv_coo
+
+from .common import row
+
+
+def run() -> list[str]:
+    rows = []
+    g = rdg(30000, seed=4)
+    indptr, indices, data = laplacian_csr(g, shift=1e-2)
+    rows_a, cols_a, vals_a = (jnp.asarray(a) for a in
+                              csr_to_padded_coo(indptr, indices, data))
+    b = jnp.asarray(np.random.default_rng(0).normal(size=g.n), jnp.float32)
+
+    # real single-device SpMV + CG cost
+    y = spmv_coo(rows_a, cols_a, vals_a, b)
+    y.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(20):
+        y = spmv_coo(rows_a, cols_a, vals_a, b)
+    y.block_until_ready()
+    spmv_us = (time.perf_counter() - t0) / 20 * 1e6
+    res = cg_solve(lambda x: spmv_coo(rows_a, cols_a, vals_a, x), b,
+                   tol=1e-6, max_iters=300)
+    res.x.block_until_ready()
+    t0 = time.perf_counter()
+    res = cg_solve(lambda x: spmv_coo(rows_a, cols_a, vals_a, x), b,
+                   tol=1e-6, max_iters=300)
+    res.x.block_until_ready()
+    cg_total = (time.perf_counter() - t0) * 1e6
+    iters = max(int(res.iters), 1)
+    rows.append(row("cg_real_per_iter", cg_total / iters,
+                    f"iters={iters};spmv_us={spmv_us:.0f}"))
+
+    # modeled heterogeneous per-iteration time (paper's TOPO3 simulation)
+    c_row = spmv_us / g.n                     # measured per-row cost, us
+    alpha = 4 * c_row                         # per-halo-word exchange cost
+    topo = scale_to_load(
+        Topology.topo3(nodes=4, cores_per_node=6, fast_nodes=1), g.n)
+    tw = target_block_sizes(g.n, topo)
+    for m in ("sfc", "rcb", "geoKM", "geoRef"):
+        part, _ = partition(g, topo, m, tw=tw)
+        sizes = block_sizes_of(part, topo.k)
+        t_comp = np.max(sizes / topo.speeds) * c_row
+        t_comm = alpha * max_comm_volume(g, part, topo.k)
+        rows.append(row(f"cg_model_topo3__{m}", t_comp + t_comm,
+                        f"comp={t_comp:.0f};comm={t_comm:.0f}"))
+    # uniform blocks (heterogeneity-oblivious) baseline: same model
+    uni = np.round(np.full(topo.k, g.n / topo.k)).astype(int)
+    part_u, _ = partition(g, topo, "geoKM",
+                          tw=np.full(topo.k, g.n / topo.k))
+    sizes = block_sizes_of(part_u, topo.k)
+    t_comp = np.max(sizes / topo.speeds) * c_row
+    t_comm = alpha * max_comm_volume(g, part_u, topo.k)
+    rows.append(row("cg_model_topo3__uniform_oblivious", t_comp + t_comm,
+                    f"comp={t_comp:.0f};comm={t_comm:.0f}"))
+    return rows

@@ -1,0 +1,39 @@
+"""Fig. 1 analogue: flat balanced k-means vs the hierarchical version —
+relative edge cut and max comm volume (paper: within ~±1%, hierarchy helps
+mapping)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import Topology, scale_to_load, target_block_sizes
+from repro.core.balanced_kmeans import (partition_balanced_kmeans,
+                                        partition_hierarchical_kmeans)
+from repro.core.metrics import edge_cut, max_comm_volume
+from repro.sparse.generators import rdg, rgg
+
+from .common import row
+
+
+def run() -> list[str]:
+    rows = []
+    for gname, g in (("rdg_2d", rdg(15000, seed=2)),
+                     ("rgg_2d", rgg(15000, dim=2, seed=2))):
+        topo = scale_to_load(
+            Topology.topo3(nodes=4, cores_per_node=6, fast_nodes=2), g.n)
+        tw = target_block_sizes(g.n, topo)
+        t0 = time.perf_counter()
+        flat = partition_balanced_kmeans(g, tw, seed=0)
+        t_flat = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        hier = partition_hierarchical_kmeans(g, tw, topo.fanouts, seed=0)
+        t_hier = time.perf_counter() - t0
+        cut_f, cut_h = edge_cut(g, flat), edge_cut(g, hier)
+        cv_f = max_comm_volume(g, flat, topo.k)
+        cv_h = max_comm_volume(g, hier, topo.k)
+        rows.append(row(f"hier_vs_flat__{gname}", t_hier * 1e6,
+                        f"cut_rel={cut_h / cut_f:.3f};"
+                        f"cv_rel={cv_h / max(cv_f, 1):.3f};"
+                        f"t_rel={t_hier / t_flat:.2f}"))
+    return rows

@@ -1,0 +1,55 @@
+"""Table IV analogue: cut / maxCommVolume / partition time per tool, per
+graph, per heterogeneous topology.
+
+Topology naming follows the paper's x-axis: t1_f8_fs16 = TOPO1, 8 fast PUs,
+fast speed 16 (of 96 PUs total -> |F| = k/12).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import METHODS, Topology, partition, scale_to_load, \
+    target_block_sizes
+from repro.core.metrics import edge_cut, max_comm_volume
+from repro.sparse.generators import grid, rdg, rgg
+
+from .common import row
+
+GRAPHS = {
+    "rdg_2d": lambda: rdg(20000, seed=1),
+    "rgg_2d": lambda: rgg(20000, dim=2, seed=1),
+    "rgg_3d": lambda: rgg(15000, dim=3, seed=1),
+    "grid_2d": lambda: grid((140, 140)),
+}
+
+# k=24 scaled-down analogue of the paper's 96-PU runs (CPU container)
+TOPOS = {
+    "t1_f2_fs4": lambda n: scale_to_load(
+        Topology.topo1(24, 1 / 12, 4.0, 5.2), n),
+    "t1_f2_fs16": lambda n: scale_to_load(
+        Topology.topo1(24, 1 / 12, 16.0, 13.8), n),
+    "t2_f4_fs16": lambda n: scale_to_load(
+        Topology.topo2(24, 1 / 6, 16.0, 13.8), n),
+}
+
+BENCH_METHODS = ("sfc", "rcb", "rib", "geoKM", "geoRef", "greedyRef")
+
+
+def run(methods=BENCH_METHODS, graphs=None, topos=None) -> list[str]:
+    rows = []
+    for gname, gf in (graphs or GRAPHS).items():
+        g = gf()
+        for tname, tf in (topos or TOPOS).items():
+            topo = tf(g.n)
+            tw = target_block_sizes(g.n, topo)
+            for m in methods:
+                t0 = time.perf_counter()
+                part, _ = partition(g, topo, m, tw=tw)
+                dt = time.perf_counter() - t0
+                cut = edge_cut(g, part)
+                mcv = max_comm_volume(g, part, topo.k)
+                rows.append(row(f"{gname}__{tname}__{m}", dt * 1e6,
+                                f"cut={cut:.0f};maxCV={mcv}"))
+    return rows

@@ -1,0 +1,28 @@
+"""Fig. 3/4 analogue: quality and partition time vs number of PUs k
+(TOPO2 heterogeneity, rgg graphs)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import Topology, partition, scale_to_load, \
+    target_block_sizes
+from repro.core.metrics import edge_cut, max_comm_volume
+from repro.sparse.generators import rgg
+
+from .common import row
+
+
+def run() -> list[str]:
+    rows = []
+    g = rgg(30000, dim=2, seed=3)
+    for k in (24, 48, 96):
+        topo = scale_to_load(Topology.topo2(k, 1 / 6, 16.0, 13.8), g.n)
+        tw = target_block_sizes(g.n, topo)
+        for m in ("sfc", "geoKM", "geoRef"):
+            t0 = time.perf_counter()
+            part, _ = partition(g, topo, m, tw=tw)
+            dt = time.perf_counter() - t0
+            rows.append(row(f"scaling_b{k}__{m}", dt * 1e6,
+                            f"cut={edge_cut(g, part):.0f};"
+                            f"maxCV={max_comm_volume(g, part, k)}"))
+    return rows

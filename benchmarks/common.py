@@ -1,0 +1,18 @@
+"""Shared benchmark utilities — timing + CSV row emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def time_us(fn: Callable, *args, reps: int = 5, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn(*args)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,42 @@
+"""End-to-end distributed application: heterogeneous partition -> shard_map
+CG solve on 8 (forced host) devices, with edge-colored ppermute halo
+exchange.  Compares the paper-aware partition against an SFC baseline.
+
+  PYTHONPATH=src python examples/heterogeneous_cg.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Topology, partition, scale_to_load
+from repro.core.metrics import max_comm_volume
+from repro.sparse.distributed import build_plan, make_dist_cg
+from repro.sparse.generators import rdg
+from repro.sparse.graph import laplacian_csr
+
+g = rdg(6000, seed=1)
+topo = scale_to_load(Topology.topo1(8, 2 / 8, 8.0, 8.5), g.n)
+indptr, indices, data = laplacian_csr(g, shift=1e-2)
+mesh = jax.sharding.Mesh(np.array(jax.devices()[:8]), ("pu",))
+rng = np.random.default_rng(0)
+b = rng.normal(size=g.n).astype(np.float32)
+
+for method in ("sfc", "geoRef"):
+    part, tw = partition(g, topo, method)
+    plan = build_plan(indptr, indices, data, part, 8)
+    cg = make_dist_cg(plan, mesh, tol=1e-6, max_iters=1000)
+    x, res, iters = cg(jnp.asarray(plan.scatter_vec(b)))
+    import scipy.sparse as sp
+    A = sp.csr_matrix((data, indices, indptr), shape=(g.n, g.n))
+    rel = np.linalg.norm(A @ plan.gather_vec(np.asarray(x)) - b) \
+        / np.linalg.norm(b)
+    print(f"{method:7s}: maxCommVol={max_comm_volume(g, part, 8):5d} "
+          f"halo_slots={plan.S:5d} rounds={plan.n_rounds} "
+          f"cg_iters={int(iters)} rel_res={rel:.2e}")
+print("note: halo_slots ~ comm volume — the partitioner quality the paper "
+      "optimizes maps 1:1 onto ppermute buffer sizes here.")

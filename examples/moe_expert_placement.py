@@ -1,0 +1,72 @@
+"""LDHT expert placement for a MoE LM — the paper's Algorithm 1 + swap
+refinement applied to the olmoe-style expert-parallel layer.
+
+Pipeline (mirrors the paper's two-stage LDHT process, Sec. IV):
+  1. profile routing on a calibration batch -> expert loads + co-activation,
+  2. stage 1: Algorithm 1 computes per-rank load budgets from PU speeds,
+  3. stage 2: LPT greedy + pairwise-swap refinement places experts under
+     the exact E_loc slot constraint (the 'memory capacity' Eq. 3),
+  4. apply the placement: permute stacked expert weights + route via perm,
+  5. verify numerics are unchanged and report the Eq. 2 objective.
+
+Run:  PYTHONPATH=src python examples/moe_expert_placement.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.expert_placement import (coactivation_graph, expert_loads,
+                                         place_experts,
+                                         permute_expert_params)
+from repro.core.topology import PU, Topology
+from repro.models.common import ParamCollector
+from repro.models.mlp import init_moe, moe_forward
+
+B, S, D, E, K, F = 8, 64, 64, 16, 4, 128
+EP = 4                                   # expert-parallel ranks
+
+
+def main():
+    rng = jax.random.PRNGKey(0)
+    col = ParamCollector(rng, dtype=jnp.float32)
+    params, _ = init_moe(col, D, E, F)
+
+    # 1. calibration: run the router, collect top-k statistics
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, D), jnp.float32)
+    logits = x @ params["router"]
+    _, topk = jax.lax.top_k(jax.nn.softmax(logits, -1), K)
+    ids = np.asarray(topk).reshape(-1, K)
+    counts = np.bincount(ids.ravel(), minlength=E)
+    loads = expert_loads(counts)
+    coact = coactivation_graph(ids, E)
+    print(f"expert load spread: min={loads.min():.4f} max={loads.max():.4f}")
+
+    # 2+3. heterogeneous EP ranks: one 2x-speed rank (e.g. a newer chip
+    # generation in the serving pool) and three baseline ranks
+    topo = Topology(pus=[PU(speed=2.0, memory=1e9)]
+                    + [PU(speed=1.0, memory=1e9) for _ in range(EP - 1)])
+    res = place_experts(loads, topo, coact=coact)
+    print(f"rank loads: {np.round(res.load_per_rank, 4)} "
+          f"(speeds {topo.speeds})")
+    print(f"Eq.2 max load/speed: {res.max_load_ratio:.4f}  "
+          f"(uniform contiguous placement: "
+          f"{(loads.reshape(EP, -1).sum(1) / topo.speeds).max():.4f})")
+    print(f"Eq.1 co-activation cut: {res.coact_cut:.1f}")
+
+    # 4. apply placement
+    y0, _ = moe_forward(params, x, n_experts=E, top_k=K, impl="dense")
+    p2 = dict(params)
+    p2.update(permute_expert_params(
+        {k: params[k] for k in ("w1", "w2", "w3")}, res.perm))
+    y1, _ = moe_forward(p2, x, n_experts=E, top_k=K, impl="dense",
+                        expert_perm=jnp.asarray(res.perm))
+
+    # 5. verify
+    err = float(jnp.abs(y0 - y1).max())
+    print(f"placement numerics max|y0-y1| = {err:.2e}")
+    assert err < 1e-5
+    print("OK — placement is numerics-neutral and load-balanced.")
+
+
+if __name__ == "__main__":
+    main()

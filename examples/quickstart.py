@@ -1,0 +1,30 @@
+"""Quickstart: the paper's two-stage LDHT pipeline in ~30 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import Topology, evaluate, partition, scale_to_load, \
+    target_block_sizes
+from repro.core.metrics import summarize
+from repro.sparse.generators import rdg
+
+# 1. an application graph (Delaunay mesh, as in the paper's instances)
+g = rdg(8000, seed=0)
+print(f"graph: n={g.n} m={g.num_edges}")
+
+# 2. a heterogeneous compute system: 2 fast PUs (GPU-like: 16x speed,
+#    limited memory) + 10 slow PUs (TOPO1, Table III exp 5)
+topo = scale_to_load(Topology.topo1(12, 1 / 6, 16.0, 13.8), g.n)
+
+# 3. stage 1 — Algorithm 1: optimal target block sizes
+tw = target_block_sizes(g.n, topo)
+print("target weights:", np.round(tw).astype(int).tolist())
+print(f"tw(fast)/tw(slow) = {tw[0] / tw[-1]:.1f}")
+
+# 4. stage 2 — cut-minimizing partition honoring those sizes
+part, _ = partition(g, topo, method="geoRef", tw=tw)
+print("metrics:", summarize(g, part, topo, tw))
+
+# 5. compare the whole tool zoo (Table IV analogue)
+evaluate(g, topo, methods=("sfc", "rcb", "rib", "geoKM", "geoRef"))

@@ -1,0 +1,18 @@
+"""Batched serving example: prefill a prompt batch, decode with KV/state
+caches (works for every assigned architecture family).
+
+  PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b --smoke
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    # serve.py is the production entry point; this example simply drives it
+    # for a couple of architectures to show family coverage.
+    archs = sys.argv[1:] or ["qwen1.5-0.5b", "mamba2-130m",
+                             "recurrentgemma-2b"]
+    for arch in archs:
+        print(f"=== {arch} ===", flush=True)
+        subprocess.run([sys.executable, "-m", "repro.launch.serve",
+                        "--arch", arch, "--smoke", "--batch", "2",
+                        "--prompt-len", "16", "--gen", "8"], check=True)

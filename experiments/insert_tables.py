@@ -1,0 +1,49 @@
+"""Regenerate the §Roofline tables inside EXPERIMENTS.md from the dry-run
+JSON artifacts.  Idempotent: replaces everything between the
+ROOFLINE-TABLES marker and the next '---' rule.
+
+  PYTHONPATH=src python experiments/insert_tables.py
+"""
+import io
+import re
+import sys
+from contextlib import redirect_stdout
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+from repro.launch.report import HEADER, fmt_row, load  # noqa: E402
+
+ROOT = Path(__file__).resolve().parent.parent
+MD = ROOT / "EXPERIMENTS.md"
+MARK = "<!-- ROOFLINE-TABLES -->"
+
+
+def table(dirname: str, mesh: str) -> str:
+    recs = load(ROOT / "experiments" / dirname, mesh)
+    rows = "\n".join(fmt_row(r) for r in recs)
+    return f"{HEADER}\n{rows}"
+
+
+def main():
+    parts = [MARK, ""]
+    parts.append("### Optimized defaults — single pod 16×16 "
+                 "(experiments/dryrun_opt)\n")
+    parts.append(table("dryrun_opt", "16x16"))
+    parts.append("\n### Optimized defaults — multi-pod 2×16×16 "
+                 "(proves the `pod` axis shards)\n")
+    parts.append(table("dryrun_opt", "2x16x16"))
+    parts.append("\n### Paper-faithful baseline — single pod 16×16 "
+                 "(experiments/dryrun, pre-correction collective parser)\n")
+    parts.append(table("dryrun", "16x16"))
+    block = "\n".join(parts) + "\n"
+
+    text = MD.read_text()
+    pat = re.compile(re.escape(MARK) + r".*?(?=\n---)", re.S)
+    assert pat.search(text), "marker not found"
+    MD.write_text(pat.sub(lambda _: block, text))
+    print("tables inserted")
+
+
+if __name__ == "__main__":
+    main()

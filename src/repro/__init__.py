@@ -1,0 +1,2 @@
+"""repro: heterogeneous load distribution (LDHT) framework in JAX."""
+__version__ = "1.0.0"

@@ -1,0 +1,30 @@
+"""Assigned input shapes (LM-family): seq_len x global_batch per mode.
+
+``decode_*`` / ``long_*`` lower serve_step (one new token against a KV cache
+of seq_len), NOT train_step.  ``long_500k`` requires sub-quadratic decode
+state and is only run for SSM/hybrid archs (cfg.sub_quadratic).
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable(cfg, shape: Shape) -> bool:
+    """long_500k only for sub-quadratic archs (see DESIGN.md §Arch-applicability)."""
+    if shape.name == "long_500k":
+        return cfg.sub_quadratic
+    return True

@@ -1,0 +1,158 @@
+"""Algorithm 1 of the paper: optimal target block sizes for LDHT.
+
+Given n (total unit-weight load), and k PUs with speeds c_s and memory caps
+m_cap, compute target weights tw(b_i) that
+
+    minimize  max_i tw(b_i) / c_s(p_i)           (Eq. 2)
+    s.t.      tw(b_i) <= m_cap(p_i)              (Eq. 3)
+              sum_i tw(b_i) = n
+
+Greedy water-filling: sort PUs by decreasing c_s/m_cap; assign each its
+proportional share of the *remaining* load, clamped to its memory.  Theorem 1
+proves optimality for (2)+(3); Lemma 1 proves the saturated PUs form a prefix
+of the sorted order.  Runs in O(k log k).
+
+Two implementations:
+  * ``target_block_sizes`` — NumPy, exact, O(k log k), the reference.
+  * ``target_block_sizes_jax`` — jit-able JAX version (scan-free closed form
+    via the saturated-prefix structure) for use inside traced programs, e.g.
+    elastic re-balancing inside a compiled training loop.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .topology import Topology
+
+
+def target_block_sizes(n: float, topo: Topology,
+                       integral: bool = False) -> np.ndarray:
+    """Algorithm 1 — returns tw in the ORIGINAL PU order.
+
+    Args:
+      n: total load (|V| of the application graph).
+      topo: the compute topology (leaves only are used).
+      integral: if True, round to integers that still sum to n (largest
+        remainder method, respecting memory caps).
+    """
+    speeds = topo.speeds
+    mems = topo.memories
+    if not topo.feasible(n):
+        raise ValueError(
+            f"infeasible: load {n} exceeds total memory {topo.total_memory}")
+
+    k = topo.k
+    order = np.argsort(-(speeds / mems), kind="stable")  # Line 1
+    tw = np.zeros(k, dtype=np.float64)
+    j_load = float(n)                                    # Line 2
+    j_speed = float(speeds.sum())                        # Line 3
+    for idx in order:                                    # Line 4
+        des_w = speeds[idx] * j_load / j_speed           # Line 5
+        if des_w > mems[idx]:                            # Line 6
+            tw[idx] = mems[idx]                          # Line 7  (saturated)
+        else:
+            tw[idx] = des_w                              # Line 10 (non-sat.)
+        j_load -= tw[idx]                                # Line 11
+        j_speed -= speeds[idx]                           # Line 12
+    if integral:
+        tw = _round_preserving_sum(tw, int(round(n)), mems)
+    return tw
+
+
+def _round_preserving_sum(tw: np.ndarray, total: int,
+                          mems: np.ndarray) -> np.ndarray:
+    """Largest-remainder rounding, keeping sum == total and tw <= m_cap."""
+    base = np.floor(tw).astype(np.int64)
+    rem = tw - base
+    deficit = total - int(base.sum())
+    # hand out +1 by largest remainder where memory allows
+    order = np.argsort(-rem, kind="stable")
+    out = base.astype(np.float64)
+    i = 0
+    while deficit > 0 and i < 4 * len(tw):
+        idx = order[i % len(tw)]
+        if out[idx] + 1 <= mems[idx] + 1e-9:
+            out[idx] += 1
+            deficit -= 1
+        i += 1
+    if deficit != 0:
+        raise ValueError("could not round block sizes within memory caps")
+    return out
+
+
+def saturated_mask(n: float, topo: Topology) -> np.ndarray:
+    """Which PUs end up saturated (tw == m_cap) — Lemma 1 diagnostics."""
+    tw = target_block_sizes(n, topo)
+    return np.isclose(tw, topo.memories) & (tw < n * topo.speeds /
+                                            topo.total_speed + 1e-9)
+
+
+def max_load_ratio(tw: np.ndarray, topo: Topology) -> float:
+    """Objective (2): max_i tw(b_i)/c_s(p_i)."""
+    return float(np.max(np.asarray(tw) / topo.speeds))
+
+
+# ---------------------------------------------------------------------------
+# JAX version.  Structure: after sorting by c_s/m_cap desc, saturated PUs form
+# a prefix (Lemma 1).  For a candidate prefix length s, the assignment is
+#   tw_i = m_cap_i                   for i < s
+#   tw_i = c_s_i * L_s / S_s         for i >= s
+# where L_s = n - sum_{i<s} m_cap_i and S_s = sum_{i>=s} c_s_i.  The correct s
+# is the smallest one for which no i >= s violates memory, i.e.
+#   max_{i>=s} (c_s_i/m_cap_i) * L_s / S_s <= 1.
+# We evaluate all k+1 prefixes vectorized and pick the smallest feasible one —
+# O(k) after the sort, fully jit-able, no data-dependent control flow.
+# ---------------------------------------------------------------------------
+
+def target_block_sizes_jax(n: jnp.ndarray, speeds: jnp.ndarray,
+                           mems: jnp.ndarray) -> jnp.ndarray:
+    """jit-able Algorithm 1.  Returns tw in the original PU order.
+
+    Args:
+      n: scalar total load.
+      speeds, mems: shape (k,) arrays.
+    """
+    k = speeds.shape[0]
+    ratio = speeds / mems
+    order = jnp.argsort(-ratio, stable=True)
+    s_sorted = speeds[order]
+    m_sorted = mems[order]
+    r_sorted = ratio[order]
+
+    # prefix sums: cum_mem[s] = sum_{i<s} m_i, suf_speed[s] = sum_{i>=s} c_i
+    cum_mem = jnp.concatenate([jnp.zeros(1, m_sorted.dtype),
+                               jnp.cumsum(m_sorted)])          # (k+1,)
+    total_speed = jnp.sum(s_sorted)
+    suf_speed = total_speed - jnp.concatenate(
+        [jnp.zeros(1, s_sorted.dtype), jnp.cumsum(s_sorted)])   # (k+1,)
+
+    load_s = n - cum_mem                                        # (k+1,)
+    # max ratio among the suffix i >= s; sorted desc => it's r_sorted[s]
+    r_suffix_max = jnp.concatenate([r_sorted, jnp.zeros(1, r_sorted.dtype)])
+    safe_speed = jnp.where(suf_speed > 0, suf_speed, 1.0)
+    feasible = r_suffix_max * load_s / safe_speed <= 1.0 + 1e-12
+    feasible = feasible | (suf_speed <= 0)  # s == k: everyone saturated
+    s_star = jnp.argmax(feasible)           # smallest feasible prefix length
+
+    idx = jnp.arange(k)
+    load = load_s[s_star]
+    sspd = jnp.where(suf_speed[s_star] > 0, suf_speed[s_star], 1.0)
+    tw_sorted = jnp.where(idx < s_star, m_sorted, s_sorted * load / sspd)
+
+    tw = jnp.zeros_like(tw_sorted).at[order].set(tw_sorted)
+    return tw
+
+
+def hetero_batch_split(global_batch: int, topo: Topology) -> np.ndarray:
+    """Per-PU batch share for heterogeneous data parallelism (beyond-paper).
+
+    Uses Algorithm 1 with load = global_batch, memory in units of
+    'max microbatch that fits on the PU'.  Returns integral shares summing to
+    global_batch.
+    """
+    return target_block_sizes(float(global_batch), topo,
+                              integral=True).astype(np.int64)

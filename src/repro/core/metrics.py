@@ -1,0 +1,88 @@
+"""Partition quality metrics (Sec. II-A / VI-a).
+
+  * edge cut          — weight of edges with endpoints in different blocks
+  * comm volume       — per block b: # of vertices outside b adjacent to b
+                        (data words b must receive); max over blocks is the
+                        paper's maxCommVolume
+  * imbalance         — max_i tw_actual(b_i)/tw_target(b_i)
+  * load ratio        — objective (2): max_i |b_i| / c_s(p_i)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..sparse.graph import Graph
+from .topology import Topology
+
+
+def edge_cut(g: Graph, part: np.ndarray) -> float:
+    src, dst, w = g.edge_list()
+    cut2 = np.sum(w * (part[src] != part[dst]))   # both directions counted
+    return float(cut2) / 2.0
+
+
+def comm_volumes(g: Graph, part: np.ndarray, k: int) -> np.ndarray:
+    """Received-words per block: for block b, the number of distinct remote
+    vertices adjacent to b (the halo size — exactly what distributed SpMV
+    must fetch)."""
+    src, dst, _ = g.edge_list()
+    pb, pv = part[src], part[dst]
+    ext = pb != pv
+    # distinct (receiving block, remote vertex) pairs
+    pairs = np.unique(pb[ext].astype(np.int64) * g.n + dst[ext].astype(np.int64))
+    blocks = pairs // g.n
+    return np.bincount(blocks, minlength=k)
+
+
+def max_comm_volume(g: Graph, part: np.ndarray, k: int) -> int:
+    return int(comm_volumes(g, part, k).max(initial=0))
+
+
+def total_comm_volume(g: Graph, part: np.ndarray, k: int) -> int:
+    return int(comm_volumes(g, part, k).sum())
+
+
+def block_sizes_of(part: np.ndarray, k: int) -> np.ndarray:
+    return np.bincount(part, minlength=k)
+
+
+def imbalance(part: np.ndarray, tw: np.ndarray) -> float:
+    """max_i actual/target — 1.0 is perfectly on-target."""
+    sizes = block_sizes_of(part, len(tw))
+    with np.errstate(divide="ignore"):
+        r = sizes / np.maximum(tw, 1e-12)
+    return float(r.max())
+
+
+def load_ratio(part: np.ndarray, topo: Topology) -> float:
+    """Objective (2) evaluated on the realized partition."""
+    sizes = block_sizes_of(part, topo.k)
+    return float(np.max(sizes / topo.speeds))
+
+
+def memory_violations(part: np.ndarray, topo: Topology,
+                      slack: float = 0.0) -> int:
+    """# of blocks violating constraint (3), with optional relative slack."""
+    sizes = block_sizes_of(part, topo.k)
+    return int(np.sum(sizes > topo.memories * (1.0 + slack)))
+
+
+def boundary_mask(g: Graph, part: np.ndarray) -> np.ndarray:
+    """Vertices with >=1 neighbor in another block."""
+    src, dst, _ = g.edge_list()
+    ext = part[src] != part[dst]
+    mask = np.zeros(g.n, dtype=bool)
+    mask[src[ext]] = True
+    return mask
+
+
+def summarize(g: Graph, part: np.ndarray, topo: Topology,
+              tw: np.ndarray) -> dict:
+    return {
+        "cut": edge_cut(g, part),
+        "max_comm_volume": max_comm_volume(g, part, topo.k),
+        "total_comm_volume": total_comm_volume(g, part, topo.k),
+        "imbalance": imbalance(part, tw),
+        "load_ratio": load_ratio(part, topo),
+        "mem_violations": memory_violations(part, topo, slack=0.03),
+    }

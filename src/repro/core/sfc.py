@@ -1,0 +1,20 @@
+"""Space-filling-curve partitioner (zSFC analogue, Sec. III-a).
+
+Sort vertices by Morton code, then slice the order at the cumulative target
+weights from Algorithm 1.  O(n log n), embarrassingly parallel, lowest
+quality of the geometric family — exactly the paper's baseline role.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..sparse.graph import Graph
+from .geometry import morton_codes, weighted_split_assignment
+
+
+def partition_sfc(g: Graph, tw: np.ndarray, seed: int = 0) -> np.ndarray:
+    assert g.coords is not None, "SFC needs coordinates"
+    codes = np.asarray(morton_codes(jnp.asarray(g.coords)))
+    order = np.argsort(codes, kind="stable")
+    return weighted_split_assignment(order, np.asarray(tw))

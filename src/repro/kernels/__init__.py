@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU).
+
+  pdist.py     — pairwise squared distance (balanced k-means hot loop)
+  spmv_bell.py — block-ELL SpMV (the paper's HPC kernel, TPU-native re-tile)
+  flash.py     — flash attention (LM stack hot loop)
+  ops.py       — jit'd wrappers;  ref.py — pure-jnp oracles
+"""

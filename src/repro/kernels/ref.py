@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets for tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sqdist_ref(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """(n, d), (k, d) -> (n, k): ||x - c||^2, computed directly."""
+    diff = x[:, None, :].astype(jnp.float32) - c[None, :, :].astype(jnp.float32)
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def spmv_block_ell_ref(blocks: jnp.ndarray, cols: jnp.ndarray,
+                       x: jnp.ndarray) -> jnp.ndarray:
+    """Dense oracle for the block-ELL SpMV."""
+    S, NNZB, BM, BK = blocks.shape
+    n = x.shape[0]
+    P = -(-n // BK)
+    xp = jnp.zeros((P * BK,), jnp.float32).at[:n].set(x.astype(jnp.float32))
+    xp = xp.reshape(P, BK)
+    # y[s] = sum_b blocks[s, b] @ xp[cols[s, b]]
+    xg = xp[cols]                              # (S, NNZB, BK)
+    y = jnp.einsum("sbmk,sbk->sm", blocks, xg)
+    return y.reshape(-1)[:n]
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, scale: float | None = None):
+    """Plain softmax attention oracle. q,k,v: (B, H, S, D) (H may be kv-expanded)."""
+    import jax
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

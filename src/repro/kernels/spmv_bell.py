@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: block-ELL SpMV — the paper's HPC kernel (Sec. VI-a)
+re-thought for the TPU memory hierarchy.
+
+GPU SpMV is gather-heavy CSR; TPUs have no efficient per-lane gather, but an
+MXU that eats dense (8x128-aligned) tiles.  We therefore re-tile the sparse
+matrix into a *block-ELL* format:
+
+  * rows grouped into stripes of BM rows,
+  * columns grouped into panels of BK columns,
+  * each stripe stores exactly NNZB dense (BM, BK) blocks (the densest
+    panels; zero-padded if the stripe has fewer) plus their panel indices.
+
+y[stripe] = sum_b  A_blocks[stripe, b] @ x[cols[stripe, b]]
+
+The kernel walks grid (stripes, NNZB); the x panel for each step is selected
+with a data-dependent BlockSpec index_map fed by scalar prefetch
+(PrefetchScalarGridSpec), so the right (BK,) slice of x is already in VMEM
+when the MXU needs it.  Output accumulates across the NNZB grid dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# --------------------------------------------------------------------------
+# Format conversion (host-side, NumPy): CSR -> block-ELL
+# --------------------------------------------------------------------------
+
+def csr_to_block_ell(indptr: np.ndarray, indices: np.ndarray,
+                     data: np.ndarray, n: int, bm: int = 8, bk: int = 128,
+                     nnzb: int | None = None):
+    """Convert CSR to block-ELL.
+
+    Returns (blocks, cols, meta) where
+      blocks: (S, NNZB, BM, BK) float32 — dense blocks per stripe
+      cols:   (S, NNZB) int32 — column-panel index of each block
+      meta:   dict(n=n, bm=bm, bk=bk, fill=fraction of nonzero cells kept)
+    If nnzb is None it is set to the max #panels touched by any stripe
+    (lossless).  Smaller nnzb drops the sparsest panels (lossy — for
+    preconditioner-style use; tests use lossless).
+    """
+    S = -(-n // bm)
+    P = -(-n // bk)
+    per_stripe: list[dict[int, np.ndarray]] = [dict() for _ in range(S)]
+    for i in range(n):
+        s = i // bm
+        row = slice(indptr[i], indptr[i + 1])
+        for j, v in zip(indices[row], data[row]):
+            p = int(j) // bk
+            blk = per_stripe[s].get(p)
+            if blk is None:
+                blk = np.zeros((bm, bk), dtype=np.float32)
+                per_stripe[s][p] = blk
+            blk[i % bm, int(j) % bk] += v
+    max_panels = max((len(d) for d in per_stripe), default=1) or 1
+    if nnzb is None:
+        nnzb = max_panels
+    blocks = np.zeros((S, nnzb, bm, bk), dtype=np.float32)
+    cols = np.zeros((S, nnzb), dtype=np.int32)
+    kept = total = 0
+    for s, panels in enumerate(per_stripe):
+        items = sorted(panels.items(),
+                       key=lambda kv: -np.count_nonzero(kv[1]))
+        total += sum(np.count_nonzero(b) for _, b in items)
+        for b, (p, blk) in enumerate(items[:nnzb]):
+            blocks[s, b] = blk
+            cols[s, b] = p
+            kept += np.count_nonzero(blk)
+    meta = dict(n=n, bm=bm, bk=bk, nnzb=nnzb,
+                fill=kept / max(total, 1))
+    return blocks, cols, meta
+
+
+# --------------------------------------------------------------------------
+# Kernel
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spmv_block_ell(blocks: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
+                   interpret: bool = True) -> jnp.ndarray:
+    """y = A @ x with A in block-ELL.  x: (n,) f32; returns (n,) f32."""
+    S, NNZB, BM, BK = blocks.shape
+    n = x.shape[0]
+    P = -(-n // BK)
+    xp = jnp.zeros((P, BK), jnp.float32).at[
+        jnp.arange(n) // BK, jnp.arange(n) % BK].set(x.astype(jnp.float32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(S, NNZB),
+        in_specs=[
+            pl.BlockSpec((1, 1, BM, BK), lambda s, b, cols: (s, b, 0, 0)),
+            pl.BlockSpec((1, BK), lambda s, b, cols: (cols[s, b], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BM), lambda s, b, cols: (s, 0)),
+    )
+
+    def kernel(cols_ref, blocks_ref, x_ref, y_ref):
+        b = pl.program_id(1)
+
+        @pl.when(b == 0)
+        def _init():
+            y_ref[...] = jnp.zeros_like(y_ref)
+
+        a = blocks_ref[0, 0]                  # (BM, BK)
+        xv = x_ref[...]                       # (1, BK)
+        y_ref[...] += jax.lax.dot_general(
+            xv, a, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)  # (1, BM)
+
+    y = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, BM), jnp.float32),
+        interpret=interpret,
+    )(cols, blocks, xp)
+    return y.reshape(-1)[:n]

@@ -1,0 +1,47 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS so importing this module never touches jax device state
+(device count is frozen at first jax init; the dry-run sets
+xla_force_host_platform_device_count=512 before importing anything).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(k: int = 8, axes: tuple[str, ...] = ("data",)):
+    """Small mesh for subprocess tests (host platform devices)."""
+    devs = jax.devices()[:k]
+    shape = (k,) if len(axes) == 1 else None
+    return jax.sharding.Mesh(np.array(devs).reshape(
+        shape or (k // 2, 2)), axes)
+
+
+# TPU v5e-class hardware constants (per chip) for the roofline analysis.
+HW = dict(
+    peak_flops=197e12,      # bf16 FLOP/s
+    hbm_bw=819e9,           # B/s
+    link_bw=50e9,           # B/s per ICI link
+)
+
+# Deployment flags for real TPU pods: compute/communication overlap is
+# XLA's latency-hiding scheduler — the collective schedule this framework
+# emits (weight all-gathers ahead of their dots, grad reduce-scatters
+# behind the backward) is what the scheduler overlaps.  The CPU dry-run
+# backend runs collectives synchronously, so these are set at launch, not
+# measured here.
+TPU_XLA_FLAGS = (
+    "--xla_tpu_enable_async_collective_fusion=true "
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true "
+    "--xla_tpu_overlap_compute_collective_tc=true "
+    "--xla_enable_async_all_gather=true "
+    "--xla_enable_async_collective_permute=true "
+)

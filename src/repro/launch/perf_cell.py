@@ -1,0 +1,77 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb runner: lower one (arch, shape) cell under a named
+variant (set of optimization toggles) and record the roofline terms to
+experiments/perf/<arch>__<shape>__<mesh>__<variant>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.perf_cell --arch olmoe-1b-7b \
+      --shape train_4k --variant baseline --moe-impl dense --seq-sp off
+"""
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--moe-impl", default=None,
+                    choices=("dense", "shard_map", "auto"))
+    ap.add_argument("--seq-sp", default=None, choices=("on", "off", "auto"))
+    ap.add_argument("--remat", default=None,
+                    choices=("full", "dots", "dots_nb", "none"))
+    ap.add_argument("--no-serve-rules", action="store_true",
+                    help="serve cells with the training FSDPxTP layout")
+    ap.add_argument("--remat-chunks", type=int, default=None)
+    ap.add_argument("--grad-compression", default=None, choices=("int8",))
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    from ..configs.registry import get_config
+    from . import dryrun
+
+    cfg = get_config(args.arch)
+    repl = {}
+    if args.moe_impl is not None:
+        repl["moe_impl"] = args.moe_impl
+    if args.seq_sp is not None:
+        repl["seq_sp"] = args.seq_sp
+    if args.remat is not None:
+        repl["remat"] = args.remat
+    if args.remat_chunks is not None:
+        repl["remat_chunks"] = args.remat_chunks
+    if repl:
+        cfg = dataclasses.replace(cfg, **repl)
+    if args.accum is not None:
+        dryrun.ACCUM_STEPS[args.arch] = args.accum
+    if args.no_serve_rules:
+        dryrun.SERVING_RULES_ENABLED = False
+    if args.grad_compression:
+        dryrun.GRAD_COMPRESSION = args.grad_compression
+
+    rec = dryrun.lower_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                            cfg=cfg, extra_tag=args.variant)
+    mesh = "2x16x16" if args.multi_pod else "16x16"
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    path = outdir / f"{args.arch}__{args.shape}__{mesh}__{args.variant}.json"
+    path.write_text(json.dumps(rec, indent=2, default=str))
+    for k in ("compute_s", "memory_s", "collective_s", "dominant",
+              "roofline_fraction"):
+        if k in rec:
+            print(f"{k}: {rec[k]}")
+    if "collectives" in rec:
+        print("collectives:", rec["collectives"])
+    print(f"[saved {path}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""Dry-run 'profiler': dump the largest collectives (with source context)
+from the compiled HLO of one (arch, shape, mesh) cell.
+
+This is the §Perf iteration tool — no wall-clock on CPU, so the profile is
+the post-SPMD HLO itself: what gets all-gathered/all-reduced, how big, and
+from which source line (XLA keeps `metadata.op_name` / source hints).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.profile_hlo --arch olmoe-1b-7b \
+      --shape train_4k [--groups 1] [--top 25] [--dump-hlo /tmp/x.hlo]
+"""
+import argparse
+import re
+
+from .roofline import _SHAPE_RE, _DTYPE_BYTES
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.-]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.M)
+
+_META_RE = re.compile(r'metadata=\{([^}]*)\}')
+
+
+def top_collectives(hlo_text: str, top: int = 25):
+    rows = []
+    for m in _LINE_RE.finditer(hlo_text):
+        name, shape_str, kind, start = m.groups()
+        nbytes = _shape_bytes(shape_str)
+        line_end = hlo_text.find("\n", m.end())
+        line = hlo_text[m.start():line_end]
+        meta = _META_RE.search(line)
+        op_name = ""
+        if meta:
+            mm = re.search(r'op_name="([^"]*)"', meta.group(1))
+            if mm:
+                op_name = mm.group(1)
+        dims = re.search(r'(replica_groups=\S+|source_target_pairs=\S+)', line)
+        rows.append((nbytes, kind, name, shape_str[:60], op_name[:110],
+                     (dims.group(1)[:60] if dims else "")))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--groups", type=int, default=1,
+                    help="layer-groups in cost mode (0 = deployable program)")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--dump-hlo", default="")
+    args = ap.parse_args()
+
+    from ..configs.registry import get_config
+    from ..configs.shapes import SHAPES
+    from ..models.costmode import cost_mode
+    from .mesh import make_production_mesh
+    from .dryrun import ACCUM_STEPS, _cost_cfg, _lower
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    accum = ACCUM_STEPS.get(args.arch, 1) if shape.mode == "train" else 1
+
+    if args.groups > 0:
+        with cost_mode():
+            _, compiled = _lower(_cost_cfg(cfg, args.groups), shape.mode,
+                                 shape.global_batch, shape.seq_len, mesh,
+                                 accum_steps=accum)
+    else:
+        _, compiled = _lower(cfg, shape.mode, shape.global_batch,
+                             shape.seq_len, mesh, accum_steps=accum)
+    hlo = compiled.as_text()
+    if args.dump_hlo:
+        with open(args.dump_hlo, "w") as f:
+            f.write(hlo)
+        print(f"[dumped {len(hlo)} chars to {args.dump_hlo}]")
+
+    rows = top_collectives(hlo, args.top)
+    total = {}
+    for nbytes, kind, *_ in rows:
+        total[kind] = total.get(kind, 0) + nbytes
+    print(f"{'bytes':>14s}  {'kind':18s} {'shape':60s} op_name")
+    for nbytes, kind, name, shape_str, op_name, dims in rows:
+        print(f"{nbytes:14,d}  {kind:18s} {shape_str:60s} {op_name}")
+        if dims:
+            print(f"{'':14s}  {'':18s} {dims}")
+    print("\n[top-N subtotal by kind]")
+    for k, v in sorted(total.items(), key=lambda kv: -kv[1]):
+        print(f"  {k:20s} {v:15,d}")
+
+
+if __name__ == "__main__":
+    main()

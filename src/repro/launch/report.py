@@ -1,0 +1,108 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md §Roofline
+table.
+
+MODEL_FLOPS (useful math) per cell:
+  train:   6 * N_active * tokens      (fwd 2x + bwd 4x per param per token)
+  prefill: 2 * N_active * tokens
+  decode:  2 * N_active * batch   (+ KV-cache attention reads are counted in
+           the memory term, not FLOPs)
+Ratio MODEL_FLOPS / HLO_FLOPS measures how much compiled compute is useful —
+remat recompute, attention scores, and dispatch overhead push it below 1.
+
+Usage:  python -m repro.launch.report [--dir experiments/dryrun] [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops(rec: dict) -> float:
+    n = rec.get("model_params_active") or rec.get("model_params", 0)
+    B, S = rec["global_batch"], rec["seq_len"]
+    if rec["mode"] == "train":
+        return 6.0 * n * B * S
+    if rec["mode"] == "prefill":
+        return 2.0 * n * B * S
+    return 2.0 * n * B          # decode: one token per sequence
+
+
+def load(dirpath: Path, mesh: str | None = None) -> list[dict]:
+    out = []
+    for p in sorted(dirpath.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if "error" in rec:
+            rec.setdefault("arch", p.stem.split("__")[0])
+            rec.setdefault("shape", p.stem.split("__")[1])
+            rec.setdefault("mesh", p.stem.split("__")[2])
+        if mesh and rec.get("mesh", p.stem.split("__")[-1]) != mesh:
+            continue
+        out.append(rec)
+    return out
+
+
+def fmt_row(rec: dict) -> str:
+    if "skipped" in rec:
+        return (f"| {rec['arch']} | {rec['shape']} | — | — | — | — | skip | "
+                f"— | — | — | — | — | sub-quadratic only |")
+    if "error" in rec:
+        return (f"| {rec['arch']} | {rec['shape']} | — | — | — | — | ERROR "
+                f"| — | — | — | — | — | see json |")
+    chips = CHIPS[rec["mesh"]]
+    mf = model_flops(rec)
+    hlo_global = rec["hlo_flops"] * chips
+    ratio = mf / hlo_global if hlo_global else 0.0
+    dom = rec["dominant"].replace("_s", "")
+    peak = rec.get("memory", {}).get("peak_bytes") or 0
+    temp = rec.get("memory", {}).get("temp_bytes") or 0
+    frac = rec.get("roofline_fraction", 0.0)
+    bound_raw = max(rec["compute_s"], rec["memory_s"], rec["collective_s"])
+    # MFU-style fraction: *useful* model FLOPs over the bound — unlike the
+    # HLO-compute fraction this cannot be inflated by remat recompute
+    t_useful = mf / (chips * 197e12)
+    mfu_raw = t_useful / bound_raw if bound_raw else 0.0
+    mem_fl = rec.get("memory_s_structural_flash")
+    if mem_fl is not None:
+        # TPU-adjusted dominance/fraction (see §Roofline measurement notes)
+        bound_adj = max(rec["compute_s"], mem_fl, rec["collective_s"])
+        frac_adj = rec["compute_s"] / bound_adj if bound_adj else 0.0
+        mfu_adj = t_useful / bound_adj if bound_adj else 0.0
+        adj = f"{mem_fl:.4f} | {frac_adj:.3f} | {mfu_adj:.3f}"
+    else:
+        adj = "— | — | —"
+    return (f"| {rec['arch']} | {rec['shape']} | {rec['compute_s']:.4f} | "
+            f"{rec['memory_s']:.4f} | {rec['collective_s']:.4f} | "
+            f"**{dom}** | {frac:.3f} | {mfu_raw:.3f} | {adj} | {ratio:.2f} | "
+            f"{(peak + temp) / 2**30:.1f} GiB |")
+
+
+HEADER = ("| arch | shape | compute s | memory s | collective s | dominant "
+          "| roofline frac | MFU frac | mem s (tpu-adj) | frac (tpu-adj) "
+          "| MFU (tpu-adj) | useful/HLO | dev mem |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    recs = load(Path(args.dir), args.mesh)
+    print(HEADER)
+    for rec in recs:
+        print(fmt_row(rec))
+    done = [r for r in recs if "compute_s" in r]
+    if done:
+        worst = min(done, key=lambda r: r.get("roofline_fraction", 1))
+        collb = max(done, key=lambda r: r["collective_s"]
+                    / max(r["compute_s"], 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']}/{worst['shape']}"
+              f" ({worst.get('roofline_fraction', 0):.3f})")
+        print(f"most collective-bound: {collb['arch']}/{collb['shape']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,238 @@
+"""GQA attention: training (chunked, causal / sliding-window), prefill and
+decode-with-cache paths.  Pure functions; params from init_attention.
+
+Memory note: full S x S score materialization at 32k+ would blow VMEM/HBM,
+so the training/prefill path scans over query chunks (flash-style: only a
+(qc, S) strip is ever live).  The Pallas flash kernel (kernels/flash.py) is
+the TPU-native version of the same loop; the jnp path here is what the
+dry-run lowers (Mosaic doesn't lower on the CPU host backend).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import costmode
+from .common import ParamCollector, apply_rope, rope_table
+
+
+def init_attention(col: ParamCollector, d_model: int, n_heads: int,
+                   n_kv: int, head_dim: int, qkv_bias: bool = False):
+    p, s = {}, {}
+    p["wq"], s["wq"] = col.param((d_model, n_heads * head_dim),
+                                 ("embed", "heads"))
+    p["wk"], s["wk"] = col.param((d_model, n_kv * head_dim),
+                                 ("embed", "kv"))
+    p["wv"], s["wv"] = col.param((d_model, n_kv * head_dim),
+                                 ("embed", "kv"))
+    p["wo"], s["wo"] = col.param((n_heads * head_dim, d_model),
+                                 ("heads", "embed"))
+    if qkv_bias:
+        p["bq"], s["bq"] = col.param((n_heads * head_dim,), ("act_heads",),
+                                     init="zeros")
+        p["bk"], s["bk"] = col.param((n_kv * head_dim,), (None,),
+                                     init="zeros")
+        p["bv"], s["bv"] = col.param((n_kv * head_dim,), (None,),
+                                     init="zeros")
+    return p, s
+
+
+def _project_qkv(p, x, n_heads, n_kv, head_dim, rope_theta, pos_offset=0,
+                 use_rope=True):
+    B, S, D = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, n_heads, head_dim)
+    k = k.reshape(B, S, n_kv, head_dim)
+    v = v.reshape(B, S, n_kv, head_dim)
+    if use_rope:
+        cos, sin = rope_table(S, head_dim, rope_theta, offset=pos_offset)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _pick_chunk(S: int, target: int = 512) -> int:
+    if costmode.COST_MODE:
+        return S          # no lax.map: scan bodies are cost-counted once
+    c = min(S, target)
+    while S % c:
+        c -= 1
+    return c
+
+
+def _causal_chunked_skip(qg, k, v, scale, nc: int):
+    """Unrolled causal attention: chunk ci attends only to keys
+    [0, (ci+1)*chunk) — ~47% of the full S^2 FLOPs/bytes at nc=16.
+    Unrolled (not lax.map) so every chunk has a static prefix shape AND
+    cost_analysis counts each chunk — the §Roofline numbers are faithful.
+    qg: (B, Sq, Hkv, G, hd)."""
+    B, Sq, Hkv, G, hd = qg.shape
+    chunk = Sq // nc
+    outs = []
+    for ci in range(nc):
+        qc = qg[:, ci * chunk:(ci + 1) * chunk]
+        if outs:
+            # serialize the (independent) chunks: without this barrier the
+            # scheduler may keep every chunk's (c, prefix) f32 strip live
+            # at once — measured 37-55 GiB temp on 32k prefill; serialized,
+            # one strip is live at a time
+            qc, _ = jax.lax.optimization_barrier((qc, outs[-1]))
+        end = (ci + 1) * chunk
+        kc, vc = k[:, :end], v[:, :end]
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                            preferred_element_type=jnp.float32) * scale
+        qpos = ci * chunk + jnp.arange(chunk)
+        mask = jnp.arange(end)[None, :] <= qpos[:, None]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1).astype(vc.dtype)
+        outs.append(jnp.einsum("bhgqk,bkhd->bqhgd", p, vc,
+                               preferred_element_type=jnp.float32))
+    out = jnp.concatenate(outs, axis=1)
+    return out.reshape(B, Sq, Hkv * G, hd).astype(qg.dtype)
+
+
+def gqa_attend(q, k, v, *, causal: bool = True, window: int | None = None,
+               q_offset: int = 0, chunk: int | None = None,
+               causal_skip_min_seq: int = 1 << 30):
+    """q: (B, Sq, Hq, hd); k, v: (B, Sk, Hkv, hd).  Hq % Hkv == 0.
+
+    Scans over query chunks; each step computes a (qc, Sk) strip in f32.
+    ``q_offset`` is the absolute position of q[0] (for decode/windows).
+
+    ``causal_skip_min_seq``: opt-in threshold for the prefix-sliced
+    unrolled path (_causal_chunked_skip) that skips the fully-masked upper
+    triangle — a measured 35-40% cut of the 32k-prefill roofline bound,
+    but OFF by default: the CPU backend assigns every unrolled chunk its
+    own f32 strip buffer (no reuse, 37-55 GiB temp at 32k), so the
+    fits-in-HBM evidence regresses.  On the TPU target the same
+    upper-triangle skip is done properly inside the Pallas flash kernel
+    (kernels/flash.py) with O(1) VMEM strips; see EXPERIMENTS.md §Perf.
+    """
+    B, Sq, Hq, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = hd ** -0.5
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    if (causal and window is None and q_offset == 0 and Sq == Sk
+            and Sq >= causal_skip_min_seq and Sq % 16 == 0):
+        nc = max(2, min(16, Sq // 2048))
+        while Sq % nc:
+            nc //= 2
+        return _causal_chunked_skip(qg, k, v, scale, nc)
+    chunk = chunk or _pick_chunk(Sq)
+    nc = Sq // chunk
+    qg = qg.reshape(B, nc, chunk, Hkv, G, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    kpos = jnp.arange(Sk)
+
+    def one_chunk(ci, qc):
+        # qc: (B, chunk, Hkv, G, hd).  Operands stay bf16 (halves the bytes
+        # XLA moves for SP gathers/reshards); accumulation is f32 via
+        # preferred_element_type — exactly the MXU bf16-in/f32-acc contract.
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qc, k,
+                            preferred_element_type=jnp.float32) * scale
+        qpos = q_offset + ci * chunk + jnp.arange(chunk)
+        mask = jnp.ones((chunk, Sk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhgqk,bkhd->bqhgd", p, v,
+                          preferred_element_type=jnp.float32)
+
+    if nc == 1:
+        out = one_chunk(0, qg[0])[None]
+    else:
+        out = jax.lax.map(lambda args: one_chunk(args[0], args[1]),
+                          (jnp.arange(nc), qg))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hq, hd)
+    return out.astype(q.dtype)
+
+
+def attn_forward(p, x, *, n_heads, n_kv, head_dim, rope_theta=10000.0,
+                 causal=True, window=None, use_rope=True):
+    """Training / encoding path."""
+    B, S, D = x.shape
+    q, k, v = _project_qkv(p, x, n_heads, n_kv, head_dim, rope_theta,
+                           use_rope=use_rope)
+    out = gqa_attend(q, k, v, causal=causal, window=window)
+    return out.reshape(B, S, n_heads * head_dim) @ p["wo"]
+
+
+def attn_prefill(p, x, cache_len, *, n_heads, n_kv, head_dim,
+                 rope_theta=10000.0, window=None, use_rope=True):
+    """Prefill: forward + build the KV cache (padded to cache_len)."""
+    B, S, D = x.shape
+    q, k, v = _project_qkv(p, x, n_heads, n_kv, head_dim, rope_theta,
+                           use_rope=use_rope)
+    out = gqa_attend(q, k, v, causal=True, window=window)
+    y = out.reshape(B, S, n_heads * head_dim) @ p["wo"]
+    if window is not None and cache_len <= S:
+        # ring-buffer cache (hybrid local attention): keep the last
+        # cache_len positions at slots pos % cache_len, matching attn_decode.
+        L = cache_len
+        tail_k, tail_v = k[:, S - L:], v[:, S - L:]
+        slots = (jnp.arange(S - L, S) % L)
+        kc = jnp.zeros((B, L, n_kv, head_dim), k.dtype).at[:, slots].set(
+            tail_k)
+        vc = jnp.zeros((B, L, n_kv, head_dim), v.dtype).at[:, slots].set(
+            tail_v)
+        return y, (kc, vc)
+    kc = jnp.zeros((B, cache_len, n_kv, head_dim), k.dtype).at[:, :S].set(k)
+    vc = jnp.zeros((B, cache_len, n_kv, head_dim), v.dtype).at[:, :S].set(v)
+    return y, (kc, vc)
+
+
+def attn_decode(p, x, cache, pos, *, n_heads, n_kv, head_dim,
+                rope_theta=10000.0, window=None, use_rope=True):
+    """One decode step.  x: (B, 1, D); cache: (k, v) each (B, L, Hkv, hd);
+    pos: scalar int32 — current absolute position (same across batch)."""
+    B, _, D = x.shape
+    kc, vc = cache
+    L = kc.shape[1]
+    q = (x @ p["wq"])
+    k = (x @ p["wk"])
+    v = (x @ p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, 1, n_heads, head_dim)
+    k = k.reshape(B, 1, n_kv, head_dim)
+    v = v.reshape(B, 1, n_kv, head_dim)
+    inv = 1.0 / (rope_theta ** (jnp.arange(0, head_dim, 2,
+                                           dtype=jnp.float32) / head_dim))
+    if use_rope:
+        ang = pos.astype(jnp.float32) * inv
+        cos, sin = jnp.cos(ang)[None, :], jnp.sin(ang)[None, :]
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    if window is None:
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+        kpos = jnp.arange(L)
+        valid = kpos <= pos
+    else:
+        slot = pos % L                     # ring buffer of size window
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+        kpos = jnp.arange(L)
+        age = (pos - kpos) % L             # ring: 0 = current
+        valid = (age < L) & ((kpos <= pos) | (pos >= L))
+    G = n_heads // n_kv
+    qg = q.reshape(B, n_kv, G, head_dim)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                        kc.astype(jnp.float32)) * head_dim ** -0.5
+    logits = jnp.where(valid[None, None, None], logits, -1e30)
+    pr = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", pr, vc.astype(jnp.float32))
+    out = out.reshape(B, 1, n_heads * head_dim).astype(x.dtype)
+    return out @ p["wo"], (kc, vc)

@@ -1,0 +1,31 @@
+"""Cost-faithful lowering mode.
+
+XLA's cost_analysis counts a while/scan body ONCE, not times its trip count,
+so a scanned layer stack under-reports FLOPs/bytes/collectives by ~n_layers.
+Under COST_MODE the models (a) unroll the layer-group scan into a Python
+loop and (b) disable query-chunking in attention (the lax.map there is also
+a scan).  The dry-run lowers unrolled variants with 1 and 2 groups and
+extrapolates linearly — exact for homogeneous stacks:
+
+    cost(G) = a + b * G   =>   b = cost(2) - cost(1),  total = cost(1) + (G-1) b
+
+The deployable (scanned, chunked) program is still compiled for
+memory_analysis and as the runnability proof; COST_MODE only affects the
+cost-measurement lowering.
+"""
+from __future__ import annotations
+
+import contextlib
+
+COST_MODE = False
+
+
+@contextlib.contextmanager
+def cost_mode():
+    global COST_MODE
+    old = COST_MODE
+    COST_MODE = True
+    try:
+        yield
+    finally:
+        COST_MODE = old

@@ -1,0 +1,282 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356), backbone only.
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings (B, n_frames, d_model).  Encoder: non-causal
+self-attention + GELU MLP, sinusoidal positions.  Decoder: causal
+self-attention + cross-attention to the encoder output + GELU MLP, learned
+positions.  LayerNorm throughout (pre-norm).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import costmode
+from .attention import (attn_decode, attn_forward, gqa_attend,
+                        init_attention)
+from .common import ParamCollector, apply_norm, init_norm, maybe_constrain
+from .config import ModelConfig
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _sinusoid(length: int, d: int):
+    pos = np.arange(length)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * dim / d))
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], axis=1),
+                       jnp.float32)
+
+
+def _init_cross(col, cfg):
+    return init_attention(col, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                          cfg.head_dim)
+
+
+def init_model(rng, cfg: ModelConfig,
+               mesh_axes: tuple[str, ...] = ("data", "model")):
+    col = ParamCollector(rng, dtype=_dtype(cfg), mesh_axes=mesh_axes)
+    p: dict[str, Any] = {}
+    s: dict[str, Any] = {}
+    p["embed"], s["embed"] = col.param((cfg.vocab_padded, cfg.d_model),
+                                       ("vocab", "embed"), scale=0.02)
+    p["pos_dec"], s["pos_dec"] = col.param((cfg.max_seq, cfg.d_model),
+                                           (None, "embed"), scale=0.02)
+
+    def enc_layer():
+        lp, ls = {}, {}
+        lp["norm1"], ls["norm1"] = init_norm(col, cfg.d_model, cfg.norm)
+        lp["attn"], ls["attn"] = init_attention(
+            col, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+        lp["norm2"], ls["norm2"] = init_norm(col, cfg.d_model, cfg.norm)
+        from .mlp import init_mlp
+        lp["ffn"], ls["ffn"] = init_mlp(col, cfg.d_model, cfg.d_ff,
+                                        cfg.activation)
+        return lp, ls
+
+    def dec_layer():
+        lp, ls = enc_layer()
+        lp["norm_x"], ls["norm_x"] = init_norm(col, cfg.d_model, cfg.norm)
+        lp["xattn"], ls["xattn"] = _init_cross(col, cfg)
+        return lp, ls
+
+    from .transformer import _stack, _stack_specs
+    enc = [enc_layer() for _ in range(cfg.enc_layers)]
+    dec = [dec_layer() for _ in range(cfg.n_layers)]
+    p["enc"], s["enc"] = _stack([e[0] for e in enc]), _stack_specs(enc[0][1])
+    p["dec"], s["dec"] = _stack([d[0] for d in dec]), _stack_specs(dec[0][1])
+    p["norm_enc"], s["norm_enc"] = init_norm(col, cfg.d_model, cfg.norm)
+    p["norm_dec"], s["norm_dec"] = init_norm(col, cfg.d_model, cfg.norm)
+    return p, s
+
+
+def _maybe_unrolled_scan(body, x, stacked, n):
+    """lax.scan, or an unrolled loop under COST_MODE (ys discarded)."""
+    if costmode.COST_MODE:
+        for g in range(n):
+            lp = jax.tree.map(lambda a: a[g], stacked)
+            x, _ = body(x, lp)
+        return x
+    x, _ = jax.lax.scan(body, x, stacked)
+    return x
+
+
+def _attn_args(cfg):
+    return dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+                use_rope=False)   # Whisper: learned/sinusoidal positions
+
+
+def _cross_attend(p, x, enc_out, cfg):
+    """Cross-attention: q from decoder, k/v from encoder output."""
+    B, S, D = x.shape
+    Se = enc_out.shape[1]
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = (enc_out @ p["wk"]).reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+    v = (enc_out @ p["wv"]).reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+    out = gqa_attend(q, k, v, causal=False)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def encode(params, cfg: ModelConfig, frames: jnp.ndarray):
+    """frames: (B, T, D) stub embeddings -> encoder states."""
+    x = frames.astype(_dtype(cfg)) + _sinusoid(
+        frames.shape[1], cfg.d_model).astype(_dtype(cfg))
+    x = maybe_constrain(x, ("batch", "seq", "act_embed"))
+    from .mlp import mlp_forward
+
+    def body(x, lp):
+        h = apply_norm(cfg.norm, x, lp["norm1"])
+        x = x + attn_forward(lp["attn"], h, causal=False, **_attn_args(cfg))
+        h = apply_norm(cfg.norm, x, lp["norm2"])
+        x = x + mlp_forward(lp["ffn"], h, cfg.activation)
+        return x, None
+
+    x = _maybe_unrolled_scan(jax.checkpoint(body), x, params["enc"],
+                             cfg.enc_layers)
+    return apply_norm(cfg.norm, x, params["norm_enc"])
+
+
+def forward(params, cfg: ModelConfig, frames: jnp.ndarray,
+            tokens: jnp.ndarray):
+    """Training path.  Returns (logits, aux=0)."""
+    enc_out = encode(params, cfg, frames)
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(_dtype(cfg)) \
+        + params["pos_dec"][:S].astype(_dtype(cfg))
+    x = maybe_constrain(x, ("batch", "seq", "act_embed"))
+    from .mlp import mlp_forward
+
+    def body(x, lp):
+        h = apply_norm(cfg.norm, x, lp["norm1"])
+        x = x + attn_forward(lp["attn"], h, causal=True, **_attn_args(cfg))
+        h = apply_norm(cfg.norm, x, lp["norm_x"])
+        x = x + _cross_attend(lp["xattn"], h, enc_out, cfg)
+        h = apply_norm(cfg.norm, x, lp["norm2"])
+        x = x + mlp_forward(lp["ffn"], h, cfg.activation)
+        x = maybe_constrain(x, ("batch", "seq", "act_embed"))
+        return x, None
+
+    x = _maybe_unrolled_scan(jax.checkpoint(body), x, params["dec"],
+                             cfg.n_layers)
+    x = apply_norm(cfg.norm, x, params["norm_dec"])
+    logits = x @ params["embed"].T.astype(x.dtype)
+    logits = maybe_constrain(logits, ("batch", "seq", "act_vocab"))
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_cache(params, cfg: ModelConfig, frames: jnp.ndarray,
+               cache_len: int):
+    """Precompute encoder output + cross k/v; empty self cache."""
+    enc_out = encode(params, cfg, frames)
+    B = frames.shape[0]
+    Se = frames.shape[1]
+
+    def per_layer(lp):
+        k = (enc_out @ lp["xattn"]["wk"]).reshape(B, Se, cfg.n_kv_heads,
+                                                  cfg.head_dim)
+        v = (enc_out @ lp["xattn"]["wv"]).reshape(B, Se, cfg.n_kv_heads,
+                                                  cfg.head_dim)
+        return k, v
+
+    cross = jax.vmap(per_layer)(params["dec"])  # stacked over layers? no —
+    # params["dec"] is already layer-stacked; vmap maps over that axis.
+    dt = _dtype(cfg)
+    shape = (cfg.n_layers, B, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"cross_k": cross[0], "cross_v": cross[1],
+            "self_k": jnp.zeros(shape, dt), "self_v": jnp.zeros(shape, dt)}
+
+
+def cache_shape(cfg: ModelConfig, batch: int, cache_len: int):
+    """ShapeDtypeStructs for the decode cache (dry-run, no allocation)."""
+    dt = _dtype(cfg)
+    self_s = (cfg.n_layers, batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    cross_s = (cfg.n_layers, batch, cfg.n_frames, cfg.n_kv_heads,
+               cfg.head_dim)
+    sds = jax.ShapeDtypeStruct
+    return {"self_k": sds(self_s, dt), "self_v": sds(self_s, dt),
+            "cross_k": sds(cross_s, dt), "cross_v": sds(cross_s, dt)}
+
+
+def cache_specs(cfg: ModelConfig,
+                mesh_axes: tuple[str, ...] = ("data", "model")):
+    from .common import logical_to_spec as l2s
+    # self cache sequence shards over 'model'; cross cache seq (n_frames,
+    # typically 1500) is not mesh-divisible -> replicated.
+    self_s = l2s((None, "batch", "cache_seq", None, None),
+                 mesh_axes=mesh_axes)
+    cross_s = l2s((None, "batch", None, None, None), mesh_axes=mesh_axes)
+    return {"self_k": self_s, "self_v": self_s,
+            "cross_k": cross_s, "cross_v": cross_s}
+
+
+def prefill_forward(params, cfg: ModelConfig, frames: jnp.ndarray,
+                    tokens: jnp.ndarray, cache_len: int | None = None):
+    """Encode + decoder prefill.  Returns (last logits (B,1,V), cache)."""
+    enc_out = encode(params, cfg, frames)
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    x = params["embed"][tokens].astype(_dtype(cfg)) \
+        + params["pos_dec"][:S].astype(_dtype(cfg))
+    from .attention import attn_prefill
+    from .mlp import mlp_forward
+    Se = frames.shape[1]
+
+    def body(x, lp):
+        h = apply_norm(cfg.norm, x, lp["norm1"])
+        y, (ck, cv) = attn_prefill(lp["attn"], h, cache_len,
+                                   **_attn_args(cfg))
+        x = x + y
+        h = apply_norm(cfg.norm, x, lp["norm_x"])
+        x = x + _cross_attend(lp["xattn"], h, enc_out, cfg)
+        h = apply_norm(cfg.norm, x, lp["norm2"])
+        x = x + mlp_forward(lp["ffn"], h, cfg.activation)
+        xk = (enc_out @ lp["xattn"]["wk"]).reshape(B, Se, cfg.n_kv_heads,
+                                                   cfg.head_dim)
+        xv = (enc_out @ lp["xattn"]["wv"]).reshape(B, Se, cfg.n_kv_heads,
+                                                   cfg.head_dim)
+        return x, (ck, cv, xk, xv)
+
+    if costmode.COST_MODE:
+        outs = []
+        for g in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[g], params["dec"])
+            x, o = body(x, lp)
+            outs.append(o)
+        ck, cv, xk, xv = (jnp.stack([o[i] for o in outs])
+                          for i in range(4))
+    else:
+        x, (ck, cv, xk, xv) = jax.lax.scan(body, x, params["dec"])
+    x = apply_norm(cfg.norm, x[:, -1:], params["norm_dec"])
+    logits = x @ params["embed"].T.astype(x.dtype)
+    return logits, {"self_k": ck, "self_v": cv,
+                    "cross_k": xk, "cross_v": xv}
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens: jnp.ndarray,
+                pos: jnp.ndarray):
+    """tokens: (B, 1).  Returns (logits, new_cache)."""
+    B = tokens.shape[0]
+    x = params["embed"][tokens].astype(_dtype(cfg)) \
+        + jax.lax.dynamic_slice_in_dim(params["pos_dec"], pos, 1
+                                       ).astype(_dtype(cfg))
+    from .mlp import mlp_forward
+
+    def body(x, xs):
+        lp, ck, cv, xk, xv = xs
+        h = apply_norm(cfg.norm, x, lp["norm1"])
+        y, (ck, cv) = attn_decode(lp["attn"], h, (ck, cv), pos,
+                                  **_attn_args(cfg))
+        x = x + y
+        h = apply_norm(cfg.norm, x, lp["norm_x"])
+        # cross attention against precomputed cross k/v
+        q = (h @ lp["xattn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        out = gqa_attend(q, xk, xv, causal=False)
+        x = x + out.reshape(B, 1, -1) @ lp["xattn"]["wo"]
+        h = apply_norm(cfg.norm, x, lp["norm2"])
+        x = x + mlp_forward(lp["ffn"], h, cfg.activation)
+        return x, (ck, cv)
+
+    if costmode.COST_MODE:
+        outs = []
+        for g in range(cfg.n_layers):
+            xs = jax.tree.map(lambda a: a[g],
+                              (params["dec"], cache["self_k"],
+                               cache["self_v"], cache["cross_k"],
+                               cache["cross_v"]))
+            x, o = body(x, xs)
+            outs.append(o)
+        new_k = jnp.stack([o[0] for o in outs])
+        new_v = jnp.stack([o[1] for o in outs])
+    else:
+        x, (new_k, new_v) = jax.lax.scan(
+            body, x, (params["dec"], cache["self_k"], cache["self_v"],
+                      cache["cross_k"], cache["cross_v"]))
+    cache = dict(cache, self_k=new_k, self_v=new_v)
+    x = apply_norm(cfg.norm, x, params["norm_dec"])
+    return x @ params["embed"].T.astype(x.dtype), cache

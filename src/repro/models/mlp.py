@@ -1,0 +1,325 @@
+"""Dense MLP (SwiGLU / GELU) and token-choice top-k MoE with capacity-based
+scatter dispatch (GShard-style) — expert axis sharded on 'model' (EP).
+
+The MoE layer is also where the paper's LDHT technique hooks into the LM
+stack: ``expert_placement.py`` computes a device assignment for experts from
+their co-activation graph under heterogeneous HBM caps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import ParamCollector, maybe_constrain
+
+
+def init_mlp(col: ParamCollector, d_model: int, d_ff: int,
+             activation: str = "swiglu"):
+    p, s = {}, {}
+    p["w1"], s["w1"] = col.param((d_model, d_ff), ("embed", "mlp"))
+    p["w2"], s["w2"] = col.param((d_ff, d_model), ("mlp", "embed"))
+    if activation == "swiglu":
+        p["w3"], s["w3"] = col.param((d_model, d_ff), ("embed", "mlp"))
+    return p, s
+
+
+def mlp_forward(p, x, activation: str = "swiglu"):
+    if activation == "swiglu":
+        return (jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])) @ p["w2"]
+    return jax.nn.gelu(x @ p["w1"]) @ p["w2"]
+
+
+# -- MoE ----------------------------------------------------------------------
+
+def init_moe(col: ParamCollector, d_model: int, n_experts: int, d_expert: int,
+             activation: str = "swiglu"):
+    p, s = {}, {}
+    p["router"], s["router"] = col.param((d_model, n_experts),
+                                         ("embed", None))
+    p["w1"], s["w1"] = col.param((n_experts, d_model, d_expert),
+                                 ("experts", "embed", "expert_mlp"))
+    p["w2"], s["w2"] = col.param((n_experts, d_expert, d_model),
+                                 ("experts", "expert_mlp", "embed"))
+    if activation == "swiglu":
+        p["w3"], s["w3"] = col.param((n_experts, d_model, d_expert),
+                                     ("experts", "embed", "expert_mlp"))
+    return p, s
+
+
+def moe_forward(p, x, *, n_experts: int, top_k: int,
+                activation: str = "swiglu", capacity_factor: float = 1.25,
+                expert_perm: jnp.ndarray | None = None,
+                impl: str = "auto", seq_sharded: bool = False):
+    """Token-choice top-k MoE.  x: (B, S, D) -> (y, aux_loss).
+
+    impl:
+      - "dense":     XLA-SPMD GShard scatter dispatch (paper-faithful
+                     baseline).  The partitioner replicates the (B, S*K, D)
+                     dispatch intermediates across the mesh — measured
+                     collective-bound by the dry-run (§Perf baseline).
+      - "shard_map": expert-parallel dispatch hand-sharded over the 'model'
+                     axis; dispatch/combine stay device-local and the only
+                     collective is one activation-size psum (§Perf optimized).
+      - "auto":      shard_map when a mesh with a >1 'model' axis is ambient,
+                     dense otherwise (single-device tests).
+    """
+    if expert_perm is None:
+        # LDHT placement travels inside the param tree (set by
+        # core.expert_placement.permute_expert_params) so every caller —
+        # train_step, prefill, decode — applies it without plumbing.
+        expert_perm = p.get("perm")
+    if impl == "auto":
+        impl = "shard_map" if _ambient_moe_mesh() is not None else "dense"
+    if impl == "shard_map":
+        mesh = _ambient_moe_mesh()
+        if mesh is not None:
+            return _moe_forward_shard_map(
+                p, x, mesh, n_experts=n_experts, top_k=top_k,
+                activation=activation, capacity_factor=capacity_factor,
+                expert_perm=expert_perm, seq_sharded=seq_sharded)
+    return _moe_forward_dense(p, x, n_experts=n_experts, top_k=top_k,
+                              activation=activation,
+                              capacity_factor=capacity_factor,
+                              expert_perm=expert_perm)
+
+
+def _ambient_moe_mesh():
+    """The ambient AbstractMesh iff it can host expert parallelism."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return None
+    return mesh
+
+
+def _moe_forward_dense(p, x, *, n_experts: int, top_k: int,
+                       activation: str = "swiglu",
+                       capacity_factor: float = 1.25,
+                       expert_perm: jnp.ndarray | None = None):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    GShard-style *grouped* capacity dispatch: each batch row is a dispatch
+    group with capacity C = ceil(S * top_k / E * cf) per expert, so every
+    dispatch/combine tensor keeps a leading B axis — sharded over 'data' —
+    while the expert axis shards over 'model' (EP).  Without grouping the
+    (E, C_global, D) slots replicate across the data axis and per-device
+    MoE compute blows up by the DP degree.
+
+    Overflow tokens (> C per expert within a row) lose that expert's
+    contribution (standard GShard semantics).  ``expert_perm`` (E,)
+    optionally reorders experts to devices — the LDHT expert-placement hook.
+    """
+    B, S, D = x.shape
+    E, K = n_experts, top_k
+    logits = (x @ p["router"]).astype(jnp.float32)            # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, exp_ids = jax.lax.top_k(probs, K)              # (B, S, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+    aux_ids = exp_ids                 # aux stats in *original* expert ids
+    if expert_perm is not None:
+        exp_ids = expert_perm[exp_ids]
+
+    C = int(-(-S * K // E) * capacity_factor)
+    C = max(4, -(-C // 4) * 4)
+
+    # slot assignment within each row: position in the expert's queue
+    flat_e = exp_ids.reshape(B, S * K)                        # (B, S*K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)       # (B, S*K, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1
+    slot = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]
+    keep = slot < C                                           # (B, S*K)
+    gate_flat = gate_vals.reshape(B, S * K) * keep
+    slot = jnp.where(keep, slot, 0)
+
+    # dispatch: (B, E, C, D) via per-row scatter-add
+    tok_ids = jnp.repeat(jnp.arange(S), K)                    # (S*K,)
+    xk = x[:, tok_ids]                                        # (B, S*K, D)
+    brow = jnp.arange(B)[:, None]
+    disp = jnp.zeros((B, E, C, D), x.dtype)
+    disp = disp.at[brow, flat_e, slot].add(
+        jnp.where(keep[..., None], xk, 0))
+    disp = maybe_constrain(disp, ("batch", "experts", None, None))
+
+    # expert compute: (B, E, C, D) x (E, D, F); B over data, E over model
+    h = jnp.einsum("becd,edf->becf", disp, p["w1"])
+    if activation == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("becd,edf->becf", disp, p["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    eout = jnp.einsum("becf,efd->becd", h, p["w2"])           # (B, E, C, D)
+    eout = maybe_constrain(eout, ("batch", "experts", None, None))
+
+    # combine: gather each kept (token, k) contribution back to its row
+    contrib = eout[brow, flat_e, slot]                        # (B, S*K, D)
+    contrib = contrib * gate_flat[..., None].astype(eout.dtype)
+    y = jnp.zeros((B, S, D), eout.dtype).at[:, tok_ids].add(contrib)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    f = jnp.mean(jax.nn.one_hot(aux_ids[..., 0], E, dtype=jnp.float32),
+                 axis=(0, 1))
+    pmean = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(f * pmean)
+    return y.astype(x.dtype), aux
+
+
+# -- expert-parallel shard_map MoE (§Perf optimized path) ----------------------
+
+def _moe_forward_shard_map(p, x, mesh, *, n_experts: int, top_k: int,
+                           activation: str, capacity_factor: float,
+                           expert_perm: jnp.ndarray | None,
+                           seq_sharded: bool = False):
+    """Hand-sharded EP dispatch.
+
+    Device grid: batch over ('pod','data') [whatever subset the ambient rules
+    map 'batch' to], experts over 'model'.  Per device:
+
+      1. route locally (router weight replicated),
+      2. build a slot->token *index map* (B, E_loc, C) for only the experts
+         this device owns — integer scatter, O(B*S*K) work,
+      3. dispatch = gather x rows through the map (no K-times-activation
+         (B, S*K, D) tensor is ever materialized),
+      4. expert einsums on (B, E_loc, C, D),
+      5. combine = scatter-add back to (B, S, D) weighted by gates,
+      6. one psum over 'model' — the layer's only collective.
+
+    This removes the all-gather/all-reduce storm the XLA partitioner emits
+    for the scatter-based dense path (measured: >400 GB of collectives per
+    layer-group for olmoe train_4k; see EXPERIMENTS.md §Perf).
+    """
+    from .common import logical_to_spec as l2s
+
+    mesh_axes = tuple(mesh.axis_names)
+    x_spec = l2s(("batch", "seq", "act_embed"), mesh_axes=mesh_axes)
+    batch_axes = x_spec[0]                      # mesh axes 'batch' maps to
+    if batch_axes is None:
+        batch_axes = ()
+    elif isinstance(batch_axes, str):
+        batch_axes = (batch_axes,)
+    ep_size = mesh.shape["model"]
+    E, K = n_experts, top_k
+    if E % ep_size != 0:
+        return _moe_forward_dense(p, x, n_experts=n_experts, top_k=top_k,
+                                  activation=activation,
+                                  capacity_factor=capacity_factor,
+                                  expert_perm=expert_perm)
+    E_loc = E // ep_size
+
+    p_specs = {
+        "router": P(None, None),
+        "w1": P("model", None, None),
+        "w2": P("model", None, None),
+    }
+    if "w3" in p:
+        p_specs["w3"] = P("model", None, None)
+    if "perm" in p:
+        p_specs["perm"] = P(None)         # replicated routing permutation
+    n_batch_shards = 1
+    for a in batch_axes:
+        n_batch_shards *= mesh.shape[a]
+
+    def body(pl, xl):
+        B, S, D = xl.shape                      # B is already local
+        j = jax.lax.axis_index("model")
+        logits = (xl @ pl["router"]).astype(jnp.float32)      # (B, S, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, exp_ids = jax.lax.top_k(probs, K)          # (B, S, K)
+        gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+        aux_ids = exp_ids             # aux stats in *original* expert ids
+        if expert_perm is not None:
+            exp_ids = expert_perm[exp_ids]
+
+        C = int(-(-S * K // E) * capacity_factor)
+        C = max(4, -(-C // 4) * 4)
+
+        # slot of each (token, k) in its expert's queue, via stable sort —
+        # O(T log T) on (B, T) int32 instead of the (B, T, E) one-hot
+        # cumsum (E x more memory traffic).  Routing math is replicated and
+        # identical on every model-rank.
+        T = S * K
+        flat_e = exp_ids.reshape(B, T)
+        sort_idx = jnp.argsort(flat_e, axis=1, stable=True)       # (B, T)
+        se = jnp.take_along_axis(flat_e, sort_idx, axis=1)
+        pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+        is_start = jnp.concatenate(
+            [jnp.ones((B, 1), bool), se[:, 1:] != se[:, :-1]], axis=1)
+        run_start = jax.lax.cummax(jnp.where(is_start, pos, 0), axis=1)
+        slot_sorted = pos - run_start
+        slot = jnp.zeros_like(flat_e).at[
+            jnp.arange(B)[:, None], sort_idx].set(slot_sorted)
+        keep = slot < C
+        gate_flat = (gate_vals.reshape(B, S * K)
+                     * keep).astype(xl.dtype)
+        slot = jnp.where(keep, slot, 0)
+
+        # my experts only; non-mine entries are routed out of bounds and
+        # dropped by the scatter (a 'mine' write must never collide with a
+        # masked one — scatter-set order is unspecified)
+        loc_e = flat_e - j * E_loc
+        mine = keep & (loc_e >= 0) & (loc_e < E_loc)
+        loc_e = jnp.where(mine, loc_e, E_loc)                 # E_loc = OOB
+        slot_m = jnp.where(mine, slot, 0)
+
+        # slot->token index map + per-slot gate, via int/f scatter
+        tok_ids = jnp.repeat(jnp.arange(S), K)                # (S*K,)
+        brow = jnp.arange(B)[:, None]
+        slot_tok = jnp.zeros((B, E_loc, C), jnp.int32)
+        slot_tok = slot_tok.at[brow, loc_e, slot_m].set(
+            jnp.broadcast_to(tok_ids[None], (B, S * K)), mode="drop")
+        valid = jnp.zeros((B, E_loc, C), xl.dtype)
+        valid = valid.at[brow, loc_e, slot_m].set(
+            jnp.ones((B, S * K), xl.dtype), mode="drop")
+        gate_slot = jnp.zeros((B, E_loc, C), xl.dtype)
+        gate_slot = gate_slot.at[brow, loc_e, slot_m].set(
+            gate_flat, mode="drop")
+
+        # dispatch: gather rows of x -> (B, E_loc, C, D)
+        disp = xl[brow[:, :, None], slot_tok] * valid[..., None]
+
+        h = jnp.einsum("becd,edf->becf", disp, pl["w1"])
+        if activation == "swiglu":
+            h = jax.nn.silu(h) * jnp.einsum("becd,edf->becf", disp,
+                                            pl["w3"])
+        else:
+            h = jax.nn.gelu(h)
+        eout = jnp.einsum("becf,efd->becd", h, pl["w2"])
+
+        # combine: scatter-add back to tokens, gate-weighted.  When the
+        # residual stream is sequence-parallel (seq_sp), reduce-scatter the
+        # combine directly into the S-sharded layout — half the bytes of a
+        # full psum and no re-scatter afterwards.
+        y = jnp.zeros((B, S, D), eout.dtype)
+        y = y.at[brow[:, :, None], slot_tok].add(
+            eout * (valid * gate_slot)[..., None], mode="drop")
+        if seq_scatter:
+            y = jax.lax.psum_scatter(y, "model", scatter_dimension=1,
+                                     tiled=True)
+        else:
+            y = jax.lax.psum(y, "model")
+
+        # aux loss from *global* token statistics: psum local sums
+        f_loc = jnp.sum(jax.nn.one_hot(aux_ids[..., 0], E,
+                                       dtype=jnp.float32), axis=(0, 1))
+        pm_loc = jnp.sum(probs, axis=(0, 1))
+        if batch_axes:
+            f_loc = jax.lax.psum(f_loc, batch_axes)
+            pm_loc = jax.lax.psum(pm_loc, batch_axes)
+        T = B * S * n_batch_shards
+        aux = E * jnp.sum((f_loc / T) * (pm_loc / T))
+        return y.astype(xl.dtype), aux
+
+    # reduce-scatter the combine only when the caller's residual stream is
+    # itself sequence-sharded — otherwise the RS is immediately re-gathered
+    # (measured as an extra AG per layer; §Perf olmoe iteration log)
+    S_glob = x.shape[1]
+    seq_scatter = seq_sharded and S_glob % ep_size == 0 and S_glob > 1
+    y_spec = (P(x_spec[0], "model", x_spec[2]) if seq_scatter else x_spec)
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(p_specs, x_spec),
+        out_specs=(y_spec, P()),
+        check_vma=False)
+    pp = {k: p[k] for k in p_specs}
+    return fn(pp, x)

@@ -1,0 +1,96 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: x -> { gate branch: W_gate -> GeLU } * { rec branch: W_in -> causal
+conv1d -> RG-LRU } -> W_out.
+
+RG-LRU:  r_t = sigma(W_a x + b_a);  i_t = sigma(W_x x + b_x)
+         log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+
+Training uses jax.lax.associative_scan on the first-order recurrence
+(log-space gates for stability); decode is the single-step update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamCollector
+
+_C = 8.0
+
+
+def init_rglru(col: ParamCollector, d_model: int, conv_kernel: int = 4):
+    d = d_model
+    p, s = {}, {}
+    p["w_in"], s["w_in"] = col.param((d, d), ("embed", "heads"))
+    p["w_gate"], s["w_gate"] = col.param((d, d), ("embed", "heads"))
+    p["w_out"], s["w_out"] = col.param((d, d), ("heads", "embed"))
+    p["conv_w"], s["conv_w"] = col.param((conv_kernel, d), ("conv", "heads"),
+                                         scale=0.5)
+    p["conv_b"], s["conv_b"] = col.param((d,), ("act_heads",), init="zeros")
+    p["w_a"], s["w_a"] = col.param((d, d), ("embed", "heads"))
+    p["b_a"], s["b_a"] = col.param((d,), ("act_heads",), init="zeros")
+    p["w_x"], s["w_x"] = col.param((d, d), ("embed", "heads"))
+    p["b_x"], s["b_x"] = col.param((d,), ("act_heads",), init="zeros")
+    # Lambda init so that a^c in [0.9, 0.999] (paper's recommendation)
+    p["lam"], s["lam"] = col.param((d,), ("act_heads",), init="ones")
+    return p, s
+
+
+def _causal_conv(xc, w, b):
+    K = w.shape[0]
+    pad = jnp.pad(xc, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + xc.shape[1]] * w[i] for i in range(K)) + b
+
+
+def _gates(p, u):
+    """u: (..., d) post-conv activations -> (log_a, gated_input) in f32."""
+    r = jax.nn.sigmoid((u @ p["w_a"] + p["b_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ p["w_x"] + p["b_x"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a2 = jnp.exp(2.0 * log_a)
+    gx = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-9)) * i * u.astype(jnp.float32)
+    return log_a, gx
+
+
+def rglru_forward(p, x, return_state: bool = False):
+    """Training / prefill.  x: (B, S, D) -> (B, S, D)."""
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    xin = x @ p["w_in"]
+    u = _causal_conv(xin, p["conv_w"], p["conv_b"])
+    log_a, gx = _gates(p, u)
+
+    def combine(c1, c2):
+        la1, b1 = c1
+        la2, b2 = c2
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, gx), axis=1)
+    out = (h.astype(x.dtype) * gate) @ p["w_out"]
+    if return_state:
+        K = p["conv_w"].shape[0]
+        cache = {"conv": xin[:, x.shape[1] - (K - 1):], "h": h[:, -1]}
+        return out, cache
+    return out
+
+
+def rglru_init_cache(d_model: int, batch: int, conv_kernel: int = 4,
+                     dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, conv_kernel - 1, d_model), dtype),
+        "h": jnp.zeros((batch, d_model), jnp.float32),
+    }
+
+
+def rglru_decode(p, x, cache):
+    """One step.  x: (B, 1, D)."""
+    xt = x[:, 0]
+    gate = jax.nn.gelu(xt @ p["w_gate"])
+    xin = xt @ p["w_in"]                                  # (B, D)
+    hist = jnp.concatenate([cache["conv"], xin[:, None]], axis=1)
+    u = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    log_a, gx = _gates(p, u)
+    h = jnp.exp(log_a) * cache["h"] + gx
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return y[:, None], {"conv": hist[:, 1:], "h": h}

@@ -1,0 +1,170 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Training path: the chunked SSD algorithm (intra-chunk 'attention-like' term
+via the decay matrix L = exp(segsum(dA)), inter-chunk state recurrence).
+Decode path: the O(1) recurrent update h = h * exp(dt*a) + dt * x B^T.
+
+Shapes (ngroups = 1):
+  d_inner = expand * d_model;  H = d_inner / headdim heads;  N = ssm_state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamCollector, rmsnorm
+
+
+def init_ssm(col: ParamCollector, d_model: int, ssm_state: int,
+             headdim: int = 64, expand: int = 2, conv_kernel: int = 4):
+    d_in = expand * d_model
+    H = d_in // headdim
+    conv_dim = d_in + 2 * ssm_state
+    p, s = {}, {}
+    # separate projections (z, x, B, C, dt) so every output dim shards
+    # cleanly: the fused 2*d_in + 2*N + H dim of the reference impl is not
+    # divisible by typical TP degrees.
+    p["w_z"], s["w_z"] = col.param((d_model, d_in), ("embed", "heads"))
+    p["w_x"], s["w_x"] = col.param((d_model, d_in), ("embed", "heads"))
+    p["w_B"], s["w_B"] = col.param((d_model, ssm_state), ("embed", None))
+    p["w_C"], s["w_C"] = col.param((d_model, ssm_state), ("embed", None))
+    p["w_dt"], s["w_dt"] = col.param((d_model, H), ("embed", None))
+    p["conv_w"], s["conv_w"] = col.param((conv_kernel, conv_dim),
+                                         ("conv", "heads"), scale=0.5)
+    p["conv_b"], s["conv_b"] = col.param((conv_dim,), ("act_heads",),
+                                         init="zeros")
+    p["A_log"], s["A_log"] = col.param((H,), (None,), init="zeros")
+    p["D"], s["D"] = col.param((H,), (None,), init="ones")
+    p["dt_bias"], s["dt_bias"] = col.param((H,), (None,), init="zeros")
+    p["norm_scale"], s["norm_scale"] = col.param((d_in,), ("act_heads",),
+                                                 init="ones")
+    p["out_proj"], s["out_proj"] = col.param((d_in, d_model),
+                                             ("heads", "embed"))
+    return p, s
+
+
+def _segsum(x):
+    """x: (..., T) -> (..., T, T) with out[i, j] = sum_{j < k <= i} x_k
+    (lower-triangular incl. diagonal at 0; -inf above)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def _split_proj(p, x, d_in, N, H):
+    return (x @ p["w_z"], x @ p["w_x"], x @ p["w_B"], x @ p["w_C"],
+            x @ p["w_dt"])
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv1d.  xbc: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def ssm_forward(p, x, *, ssm_state: int, headdim: int = 64, expand: int = 2,
+                chunk: int = 256, return_state: bool = False):
+    """Training / prefill SSD.  x: (B, S, D) -> (B, S, D)
+    (or (y, cache) when return_state)."""
+    Bsz, S, D = x.shape
+    d_in = expand * D
+    N = ssm_state
+    H = d_in // headdim
+    P = headdim
+    z, xs, Bm, Cm, dt = _split_proj(p, x, d_in, N, H)
+    xbc_raw = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))              # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+    xh = xs.reshape(Bsz, nc, c, H, P).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, c, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, c, N).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, c, H)
+    dA = (dtc * a).transpose(0, 3, 1, 2)                      # (B,H,nc,c)
+    xdt = xh * dtc[..., None]                                 # X * dt
+
+    # intra-chunk
+    L = jnp.exp(_segsum(dA))                                  # (B,H,nc,c,c)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, L, xdt)
+
+    # chunk states
+    A_cum = jnp.cumsum(dA, axis=-1)                           # (B,H,nc,c)
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, xdt)
+
+    # inter-chunk recurrence
+    A_last = A_cum[..., -1]                                   # (B,H,nc)
+    pad = jnp.pad(A_last, ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(_segsum(pad))                       # (B,H,nc+1,nc+1)
+    init = jnp.zeros((Bsz, 1, H, P, N), states.dtype)
+    st = jnp.concatenate([init, states], axis=1)              # (B,nc+1,...)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, st)
+    prev = new_states[:, :-1]                                 # (B,nc,H,P,N)
+    final_state = new_states[:, -1]                           # (B,H,P,N)
+
+    out_decay = jnp.exp(A_cum)                                # (B,H,nc,c)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, prev, out_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] \
+        * xs.reshape(Bsz, S, H, P).astype(jnp.float32)
+    y = y.reshape(Bsz, S, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    out = y @ p["out_proj"]
+    if return_state:
+        K = p["conv_w"].shape[0]
+        conv_tail = xbc_raw[:, S - (K - 1):]   # pre-conv inputs, K-1 last
+        return out, {"conv": conv_tail, "h": final_state}
+    return out
+
+
+def ssm_init_cache(cfg_d_model: int, ssm_state: int, batch: int,
+                   headdim: int = 64, expand: int = 2, conv_kernel: int = 4,
+                   dtype=jnp.float32):
+    d_in = expand * cfg_d_model
+    H = d_in // headdim
+    conv_dim = d_in + 2 * ssm_state
+    return {
+        "conv": jnp.zeros((batch, conv_kernel - 1, conv_dim), dtype),
+        "h": jnp.zeros((batch, H, headdim, ssm_state), jnp.float32),
+    }
+
+
+def ssm_decode(p, x, cache, *, ssm_state: int, headdim: int = 64,
+               expand: int = 2):
+    """One decode step.  x: (B, 1, D)."""
+    Bsz, _, D = x.shape
+    d_in = expand * D
+    N = ssm_state
+    H = d_in // headdim
+    P = headdim
+    z, xs, Bm, Cm, dt = _split_proj(p, x[:, 0], d_in, N, H)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)              # (B, conv_dim)
+    hist = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # (B,K,Cd)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:]
+    xs, Bm, Cm = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    dA = jnp.exp(dtv * a)                                     # (B,H)
+    xh = xs.reshape(Bsz, H, P).astype(jnp.float32)
+    h = cache["h"] * dA[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xh * dtv[..., None], Bm.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(Bsz, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    return (y @ p["out_proj"])[:, None], {"conv": new_conv, "h": h}

@@ -1,0 +1,456 @@
+"""Unified decoder LM covering dense / MoE / SSM / hybrid / VLM backbones.
+
+Layers are stacked and applied with lax.scan over *groups* (one group = the
+config's repeating unit, e.g. ("rec","rec","attn") for RecurrentGemma), with
+jax.checkpoint on the group body — compile time is depth-independent and the
+remat policy is uniform.  Remainder layers (n_layers % len(unit)) get their
+own unscanned params.
+
+All init functions return twin (params, specs) trees; the launcher feeds the
+specs straight into jit in_shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from . import costmode
+from .attention import (attn_decode, attn_forward, attn_prefill,
+                        init_attention)
+from .common import (ParamCollector, apply_norm, cross_entropy, init_norm,
+                     maybe_constrain)
+from .config import ModelConfig
+from .mlp import init_mlp, init_moe, mlp_forward, moe_forward
+from .rglru import init_rglru, rglru_decode, rglru_forward, rglru_init_cache
+from .ssm import init_ssm, ssm_decode, ssm_forward, ssm_init_cache
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# -- layer init ---------------------------------------------------------------
+
+def _init_layer(col: ParamCollector, kind: str, cfg: ModelConfig):
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = init_norm(col, cfg.d_model, cfg.norm)
+    if kind in ("dense", "moe", "attn"):
+        p["attn"], s["attn"] = init_attention(
+            col, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            cfg.qkv_bias)
+        p["norm2"], s["norm2"] = init_norm(col, cfg.d_model, cfg.norm)
+        if kind == "moe":
+            p["ffn"], s["ffn"] = init_moe(col, cfg.d_model, cfg.n_experts,
+                                          cfg.d_expert, cfg.activation)
+        else:
+            p["ffn"], s["ffn"] = init_mlp(col, cfg.d_model, cfg.d_ff,
+                                          cfg.activation)
+    elif kind == "rec":
+        p["rec"], s["rec"] = init_rglru(col, cfg.d_model, cfg.conv_kernel)
+        p["norm2"], s["norm2"] = init_norm(col, cfg.d_model, cfg.norm)
+        p["ffn"], s["ffn"] = init_mlp(col, cfg.d_model, cfg.d_ff,
+                                      cfg.activation)
+    elif kind == "ssm":
+        p["ssm"], s["ssm"] = init_ssm(col, cfg.d_model, cfg.ssm_state,
+                                      cfg.ssm_headdim, cfg.ssm_expand,
+                                      cfg.conv_kernel)
+    else:
+        raise ValueError(kind)
+    return p, s
+
+
+def _stack(trees: list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _stack_specs(spec_tree, prefix: str | None = None):
+    return jax.tree.map(lambda s: P(prefix, *s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def init_model(rng, cfg: ModelConfig,
+               mesh_axes: tuple[str, ...] = ("data", "model")):
+    """Returns (params, specs)."""
+    col = ParamCollector(rng, dtype=_dtype(cfg), mesh_axes=mesh_axes)
+    params: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+    params["embed"], specs["embed"] = col.param(
+        (cfg.vocab_padded, cfg.d_model), ("vocab", "embed"), scale=0.02)
+    unit = cfg.unit
+    group_ps, group_ss = [], []
+    for _ in range(cfg.n_groups):
+        gp, gs = {}, {}
+        for i, kind in enumerate(unit):
+            gp[f"{i}:{kind}"], gs[f"{i}:{kind}"] = _init_layer(col, kind, cfg)
+        group_ps.append(gp)
+        group_ss.append(gs)
+    params["layers"] = _stack(group_ps)
+    specs["layers"] = _stack_specs(group_ss[0])
+    rem_p, rem_s = {}, {}
+    for i, kind in enumerate(cfg.remainder):
+        rem_p[f"{i}:{kind}"], rem_s[f"{i}:{kind}"] = _init_layer(col, kind,
+                                                                 cfg)
+    params["rem"] = rem_p
+    specs["rem"] = rem_s
+    params["final_norm"], specs["final_norm"] = init_norm(
+        col, cfg.d_model, cfg.norm)
+    if not cfg.tie_embeddings:
+        params["lm_head"], specs["lm_head"] = col.param(
+            (cfg.d_model, cfg.vocab_padded), ("embed", "vocab"), scale=0.02)
+    return params, specs
+
+
+# -- layer apply ---------------------------------------------------------------
+
+def _apply_layer(kind: str, p, x, cfg: ModelConfig, aux: list):
+    # With sequence parallelism the block *outputs* are constrained to the
+    # S-sharded layout before the residual add, steering the partitioner to
+    # reduce-scatter the TP partial sums instead of all-reduce + slice.
+    seq_ax = "seq_sp" if cfg.seq_shard_activations else "seq"
+    h = apply_norm(cfg.norm, x, p["norm1"])
+    if kind in ("dense", "moe", "attn"):
+        window = cfg.window if (kind == "attn" and cfg.family == "hybrid"
+                                and cfg.window) else None
+        y_attn = attn_forward(p["attn"], h, n_heads=cfg.n_heads,
+                              n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                              rope_theta=cfg.rope_theta, window=window)
+        x = x + maybe_constrain(y_attn, ("batch", seq_ax, "act_embed"))
+        h2 = apply_norm(cfg.norm, x, p["norm2"])
+        if kind == "moe":
+            y, a = moe_forward(p["ffn"], h2, n_experts=cfg.n_experts,
+                               top_k=cfg.top_k, activation=cfg.activation,
+                               capacity_factor=cfg.moe_capacity,
+                               impl=cfg.moe_impl,
+                               seq_sharded=cfg.seq_shard_activations)
+            aux.append(a)
+            x = x + y
+        else:
+            y = mlp_forward(p["ffn"], h2, cfg.activation)
+            x = x + maybe_constrain(y, ("batch", seq_ax, "act_embed"))
+    elif kind == "rec":
+        x = x + rglru_forward(p["rec"], h)
+        h2 = apply_norm(cfg.norm, x, p["norm2"])
+        x = x + mlp_forward(p["ffn"], h2, cfg.activation)
+    elif kind == "ssm":
+        x = x + ssm_forward(p["ssm"], h, ssm_state=cfg.ssm_state,
+                            headdim=cfg.ssm_headdim, expand=cfg.ssm_expand)
+    return x
+
+
+def forward(params, cfg: ModelConfig, tokens: jnp.ndarray,
+            img_embeds: jnp.ndarray | None = None,
+            remat: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward.  Returns (logits, aux_loss)."""
+    tokens = maybe_constrain(tokens, ("batch", "seq"))
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    x = maybe_constrain(x, ("batch", "seq", "act_embed"))
+    if img_embeds is not None and cfg.n_img_tokens:
+        x = x.at[:, :cfg.n_img_tokens].set(img_embeds.astype(x.dtype))
+    unit = cfg.unit
+    aux_total = jnp.zeros((), jnp.float32)
+    seq_ax = "seq_sp" if cfg.seq_shard_activations else "seq"
+
+    def body(carry, gp):
+        x, aux_acc = carry
+        aux: list = []
+        for i, kind in enumerate(unit):
+            x = _apply_layer(kind, gp[f"{i}:{kind}"], x, cfg, aux)
+            x = maybe_constrain(x, ("batch", seq_ax, "act_embed"))
+        for a in aux:
+            aux_acc = aux_acc + a
+        return (x, aux_acc), None
+
+    mode = cfg.remat if remat else "none"
+    if mode == "full":
+        scan_body = jax.checkpoint(body)
+    elif mode == "dots":
+        # save matmul outputs, recompute the cheap elementwise chains —
+        # trades HBM for ~half the remat recompute traffic.  NOTE: saves
+        # the S^2 attention-score dots too; use "dots_nb" where that
+        # breaks the HBM budget.
+        scan_body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_saveable)
+    elif mode == "dots_nb":
+        # save only no-batch-dim dots (weight projections); the S^2
+        # attention einsums (batched) are recomputed — the HBM-safe
+        # middle ground between "full" and "dots"
+        scan_body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    else:
+        scan_body = body
+    if cfg.n_groups > 0:
+        if costmode.COST_MODE:
+            for g in range(cfg.n_groups):
+                gp = jax.tree.map(lambda a: a[g], params["layers"])
+                (x, aux_total), _ = scan_body((x, aux_total), gp)
+        elif (cfg.remat_chunks > 1 and mode != "none"
+                and cfg.n_groups % cfg.remat_chunks == 0):
+            # two-level (sqrt-N) remat: only `remat_chunks` outer
+            # boundaries are stashed; inner boundaries are recomputed
+            # inside each outer block's backward.  Cuts the per-device
+            # boundary stash from n_groups*|x| to (outer+inner)*|x| at the
+            # cost of one extra forward pass of the stack.
+            inner = cfg.n_groups // cfg.remat_chunks
+            lay2 = jax.tree.map(
+                lambda a: a.reshape(cfg.remat_chunks, inner, *a.shape[1:]),
+                params["layers"])
+
+            def outer_body(carry, gp_outer):
+                carry, _ = jax.lax.scan(scan_body, carry, gp_outer)
+                return carry, None
+
+            (x, aux_total), _ = jax.lax.scan(
+                jax.checkpoint(outer_body), (x, aux_total), lay2)
+        else:
+            (x, aux_total), _ = jax.lax.scan(scan_body, (x, aux_total),
+                                             params["layers"])
+    aux: list = []
+    for i, kind in enumerate(cfg.remainder):
+        x = _apply_layer(kind, params["rem"][f"{i}:{kind}"], x, cfg, aux)
+    for a in aux:
+        aux_total = aux_total + a
+    x = apply_norm(cfg.norm, x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = x @ head.astype(x.dtype)
+    logits = maybe_constrain(logits, ("batch", "seq", "act_vocab"))
+    return logits, aux_total / max(cfg.n_layers, 1)
+
+
+# -- cache ----------------------------------------------------------------------
+
+def _layer_cache(kind: str, cfg: ModelConfig, batch: int, cache_len: int):
+    dt = _dtype(cfg)
+    if kind in ("dense", "moe"):
+        shape = (batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+        return (jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+    if kind == "attn":                      # hybrid local attention: ring
+        L = min(cfg.window or cache_len, cache_len)
+        shape = (batch, L, cfg.n_kv_heads, cfg.head_dim)
+        return (jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+    if kind == "rec":
+        return rglru_init_cache(cfg.d_model, batch, cfg.conv_kernel, dt)
+    if kind == "ssm":
+        return ssm_init_cache(cfg.d_model, cfg.ssm_state, batch,
+                              cfg.ssm_headdim, cfg.ssm_expand,
+                              cfg.conv_kernel, dt)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    unit = cfg.unit
+
+    def group_cache():
+        return {f"{i}:{kind}": _layer_cache(kind, cfg, batch, cache_len)
+                for i, kind in enumerate(unit)}
+
+    stacked = (_stack([group_cache() for _ in range(cfg.n_groups)])
+               if cfg.n_groups else {})
+    rem = {f"{i}:{kind}": _layer_cache(kind, cfg, batch, cache_len)
+           for i, kind in enumerate(cfg.remainder)}
+    return {"layers": stacked, "rem": rem}
+
+
+def cache_specs(cfg: ModelConfig,
+                mesh_axes: tuple[str, ...] = ("data", "model")):
+    """PartitionSpecs mirroring init_cache: batch over (pod,data); attention
+    cache sequence over 'model' (flash-decode style — XLA inserts the
+    softmax reductions); ssm/rec states replicated over 'model'."""
+    from .common import logical_to_spec as l2s
+
+    def layer_spec(kind):
+        if kind in ("dense", "moe", "attn"):
+            s = l2s(("batch", "cache_seq", "kv", None), mesh_axes=mesh_axes)
+            return (s, s)
+        if kind == "rec":
+            return {"conv": l2s(("batch", None, "heads"),
+                                mesh_axes=mesh_axes),
+                    "h": l2s(("batch", "heads"), mesh_axes=mesh_axes)}
+        if kind == "ssm":
+            # h: (B, H, P, N) — H (24) is not divisible by typical TP
+            # degrees; the state is small, so replicate over 'model'.
+            return {"conv": l2s(("batch", None, "heads"),
+                                mesh_axes=mesh_axes),
+                    "h": l2s(("batch", None, None, None),
+                             mesh_axes=mesh_axes)}
+        raise ValueError(kind)
+
+    unit = cfg.unit
+    grp = {f"{i}:{kind}": layer_spec(kind) for i, kind in enumerate(unit)}
+
+    def add_layer_axis(tree):
+        return jax.tree.map(lambda s: P(None, *s), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    stacked = add_layer_axis(grp) if cfg.n_groups else {}
+    rem = {f"{i}:{kind}": layer_spec(kind)
+           for i, kind in enumerate(cfg.remainder)}
+    return {"layers": stacked, "rem": rem}
+
+
+# -- prefill ---------------------------------------------------------------------
+
+def _apply_layer_prefill(kind: str, p, x, cfg: ModelConfig, cache_len: int):
+    h = apply_norm(cfg.norm, x, p["norm1"])
+    if kind in ("dense", "moe", "attn"):
+        window = cfg.window if (kind == "attn" and cfg.family == "hybrid"
+                                and cfg.window) else None
+        clen = min(cfg.window or cache_len, cache_len) if kind == "attn" \
+            else cache_len
+        y, c = attn_prefill(p["attn"], h, clen, n_heads=cfg.n_heads,
+                            n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                            rope_theta=cfg.rope_theta, window=window)
+        x = x + y
+        h2 = apply_norm(cfg.norm, x, p["norm2"])
+        if kind == "moe":
+            y2, _ = moe_forward(p["ffn"], h2, n_experts=cfg.n_experts,
+                                top_k=cfg.top_k, activation=cfg.activation,
+                                capacity_factor=cfg.moe_capacity,
+                                impl=cfg.moe_impl,
+                                seq_sharded=cfg.seq_shard_activations)
+            x = x + y2
+        else:
+            x = x + mlp_forward(p["ffn"], h2, cfg.activation)
+    elif kind == "rec":
+        y, c = rglru_forward(p["rec"], h, return_state=True)
+        x = x + y
+        h2 = apply_norm(cfg.norm, x, p["norm2"])
+        x = x + mlp_forward(p["ffn"], h2, cfg.activation)
+    elif kind == "ssm":
+        y, c = ssm_forward(p["ssm"], h, ssm_state=cfg.ssm_state,
+                           headdim=cfg.ssm_headdim, expand=cfg.ssm_expand,
+                           return_state=True)
+        x = x + y
+    else:
+        raise ValueError(kind)
+    return x, c
+
+
+def prefill_forward(params, cfg: ModelConfig, tokens: jnp.ndarray,
+                    cache_len: int | None = None,
+                    img_embeds: jnp.ndarray | None = None):
+    """Prefill: returns (last-token logits (B, 1, V), cache).
+
+    The full (B, S, V) logit tensor is never materialized — at 32k seq and
+    150k vocab it would dominate memory for no serving purpose.
+    """
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    tokens = maybe_constrain(tokens, ("batch", "seq"))
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    if img_embeds is not None and cfg.n_img_tokens:
+        x = x.at[:, :cfg.n_img_tokens].set(img_embeds.astype(x.dtype))
+    x = maybe_constrain(x, ("batch", "seq", "act_embed"))
+    unit = cfg.unit
+    seq_ax = "seq_sp" if cfg.seq_shard_activations else "seq"
+
+    def body(x, gp):
+        caches = {}
+        for i, kind in enumerate(unit):
+            key = f"{i}:{kind}"
+            x, caches[key] = _apply_layer_prefill(kind, gp[key], x, cfg,
+                                                  cache_len)
+            x = maybe_constrain(x, ("batch", seq_ax, "act_embed"))
+        return x, caches
+
+    cache: dict[str, Any] = {"layers": {}, "rem": {}}
+    if cfg.n_groups > 0:
+        if costmode.COST_MODE:
+            per_group = []
+            for g in range(cfg.n_groups):
+                gp = jax.tree.map(lambda a: a[g], params["layers"])
+                x, cg = body(x, gp)
+                per_group.append(cg)
+            cache["layers"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *per_group)
+        else:
+            x, cache["layers"] = jax.lax.scan(body, x, params["layers"])
+    for i, kind in enumerate(cfg.remainder):
+        key = f"{i}:{kind}"
+        x, cache["rem"][key] = _apply_layer_prefill(
+            kind, params["rem"][key], x, cfg, cache_len)
+    x = apply_norm(cfg.norm, x[:, -1:], params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = maybe_constrain(x @ head.astype(x.dtype),
+                             ("batch", None, "act_vocab"))
+    return logits, cache
+
+
+# -- decode ----------------------------------------------------------------------
+
+def _apply_layer_decode(kind: str, p, c, x, pos, cfg: ModelConfig):
+    h = apply_norm(cfg.norm, x, p["norm1"])
+    if kind in ("dense", "moe", "attn"):
+        window = cfg.window if (kind == "attn" and cfg.family == "hybrid"
+                                and cfg.window) else None
+        y, c = attn_decode(p["attn"], h, c, pos, n_heads=cfg.n_heads,
+                           n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                           rope_theta=cfg.rope_theta, window=window)
+        x = x + y
+        h2 = apply_norm(cfg.norm, x, p["norm2"])
+        if kind == "moe":
+            y2, _ = moe_forward(p["ffn"], h2, n_experts=cfg.n_experts,
+                                top_k=cfg.top_k, activation=cfg.activation,
+                                capacity_factor=2.0, impl=cfg.moe_impl)
+            x = x + y2
+        else:
+            x = x + mlp_forward(p["ffn"], h2, cfg.activation)
+    elif kind == "rec":
+        y, c = rglru_decode(p["rec"], h, c)
+        x = x + y
+        h2 = apply_norm(cfg.norm, x, p["norm2"])
+        x = x + mlp_forward(p["ffn"], h2, cfg.activation)
+    elif kind == "ssm":
+        y, c = ssm_decode(p["ssm"], h, c, ssm_state=cfg.ssm_state,
+                          headdim=cfg.ssm_headdim, expand=cfg.ssm_expand)
+        x = x + y
+    return x, c
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens: jnp.ndarray,
+                pos: jnp.ndarray):
+    """One token for the whole batch.  tokens: (B, 1); pos: scalar int32.
+    Returns (logits (B, 1, V), new_cache)."""
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    x = maybe_constrain(x, ("batch", None, "act_embed"))
+    unit = cfg.unit
+
+    def body(x, pc):
+        gp, gc = pc
+        new_c = {}
+        for i, kind in enumerate(unit):
+            key = f"{i}:{kind}"
+            x, new_c[key] = _apply_layer_decode(kind, gp[key], gc[key], x,
+                                                pos, cfg)
+            x = maybe_constrain(x, ("batch", None, "act_embed"))
+        return x, new_c
+
+    new_cache: dict[str, Any] = {"layers": {}, "rem": {}}
+    if cfg.n_groups > 0:
+        if costmode.COST_MODE:
+            per_group = []
+            for g in range(cfg.n_groups):
+                pc = jax.tree.map(lambda a: a[g],
+                                  (params["layers"], cache["layers"]))
+                x, cg = body(x, pc)
+                per_group.append(cg)
+            new_cache["layers"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *per_group)
+        else:
+            x, new_cache["layers"] = jax.lax.scan(
+                body, x, (params["layers"], cache["layers"]))
+    for i, kind in enumerate(cfg.remainder):
+        key = f"{i}:{kind}"
+        x, new_cache["rem"][key] = _apply_layer_decode(
+            kind, params["rem"][key], cache["rem"][key], x, pos, cfg)
+    x = apply_norm(cfg.norm, x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = maybe_constrain(x @ head.astype(x.dtype),
+                             ("batch", None, "act_vocab"))
+    return logits, new_cache

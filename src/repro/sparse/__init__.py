@@ -1,0 +1,1 @@
+"""Sparse matrix / graph substrate."""

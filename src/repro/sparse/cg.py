@@ -1,0 +1,53 @@
+"""Conjugate-gradient solver (Sec. VI-a: 'CG solver from LAMA ... applied to
+systems derived from the graph's Laplacian') — JAX, lax.while_loop.
+
+The operator is passed as a closure so the same solver drives the
+single-device padded-COO SpMV, the Pallas block-ELL kernel, and the
+distributed shard_map SpMV.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CGResult(NamedTuple):
+    x: jnp.ndarray
+    iters: jnp.ndarray
+    residual: jnp.ndarray
+
+
+def cg_solve(matvec: Callable[[jnp.ndarray], jnp.ndarray], b: jnp.ndarray,
+             x0: jnp.ndarray | None = None, tol: float = 1e-6,
+             max_iters: int = 500,
+             dot: Callable | None = None) -> CGResult:
+    """Unpreconditioned CG.  ``dot`` may be overridden for distributed use
+    (e.g. a psum-reduced local dot inside shard_map)."""
+    dot = dot or (lambda u, v: jnp.vdot(u, v))
+    x = jnp.zeros_like(b) if x0 is None else x0
+    r = b - matvec(x)
+    p = r
+    rs = dot(r, r)
+    b2 = dot(b, b)
+    tol2 = tol * tol * jnp.maximum(b2, 1e-30)
+
+    def cond(state):
+        _, _, _, rs, it = state
+        return (rs > tol2) & (it < max_iters)
+
+    def body(state):
+        x, r, p, rs, it = state
+        ap = matvec(p)
+        alpha = rs / (dot(p, ap) + 1e-30)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = dot(r, r)
+        p = r + (rs_new / (rs + 1e-30)) * p
+        return x, r, p, rs_new, it + 1
+
+    x, r, p, rs, it = jax.lax.while_loop(
+        cond, body, (x, r, p, rs, jnp.zeros((), jnp.int32)))
+    return CGResult(x=x, iters=it, residual=jnp.sqrt(rs))

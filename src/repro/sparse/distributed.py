@@ -1,0 +1,324 @@
+"""Distributed SpMV / CG over a heterogeneous partition — shard_map version
+of the paper's application layer (Sec. VI-a: SpMV and CG on the Laplacian,
+distributed according to the partition produced by the respective tool).
+
+MPI-rank-per-PU becomes one mesh index per block.  Because XLA SPMD shards
+are uniform, each block is padded to B = max block size; `row_mask` marks
+real rows.  The padding waste is exactly the heterogeneity spread: with
+Algorithm-1 target sizes the fast PUs own the largest blocks, so B equals
+the largest tw and slow PUs carry ghost rows.  (On a real heterogeneous
+machine the fast PU also *is* faster, so wall-clock stays balanced — the
+simulated-speed benchmark in benchmarks/bench_cg.py models this.)
+
+Halo exchange: the quotient graph of the partition is edge-colored
+(core.refinement.greedy_edge_coloring) and each color class becomes one
+`lax.ppermute` round — at most one partner per device per round, the exact
+communication schedule Geographer-R uses for its pairwise refinement.  The
+halo buffer layout is (rounds, S) with stable slots, so column indices are
+remapped once on the host.
+
+Both exchange strategies are provided:
+  * ``halo``       — ppermute rounds, comm volume = O(boundary)  [default]
+  * ``allgather``  — all_gather of the whole padded vector, comm volume
+                     = O(n); the baseline a partitioner-oblivious system
+                     would use.  The benchmark compares the two.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.refinement import greedy_edge_coloring, quotient_graph
+from .graph import Graph
+
+
+@dataclasses.dataclass
+class DistPlan:
+    """Host-built plan + device arrays for the distributed operator.
+
+    All arrays carry a leading block axis of size k and are sharded
+    one-block-per-device by ``shard``.
+    """
+
+    k: int
+    B: int                      # padded rows per block
+    S: int                      # padded halo slots per round
+    n_rounds: int
+    n: int                      # true global size
+    perm: np.ndarray            # old vertex id -> new (block-contiguous) id
+    block_of: np.ndarray        # (k,) first new id of each block
+    # device data
+    rows: jnp.ndarray           # (k, nnz_pad) int32 local row
+    cols: jnp.ndarray           # (k, nnz_pad) int32 local col in [0, B+R*S)
+    vals: jnp.ndarray           # (k, nnz_pad) f32
+    row_mask: jnp.ndarray       # (k, B) f32
+    send_idx: jnp.ndarray       # (k, R, S) int32 local indices to send
+    send_mask: jnp.ndarray      # (k, R, S) f32
+    round_perms: tuple          # per round: tuple of (src, dst) pairs
+
+    def scatter_vec(self, x: np.ndarray) -> np.ndarray:
+        """(n,) global vector -> (k, B) padded block-major layout."""
+        out = np.zeros((self.k, self.B), dtype=np.float32)
+        new = self.perm
+        blk = np.searchsorted(self.block_of, new, side="right") - 1
+        out[blk, new - self.block_of[blk]] = x
+        return out
+
+    def gather_vec(self, xb: np.ndarray) -> np.ndarray:
+        """(k, B) -> (n,) global order."""
+        new = self.perm
+        blk = np.searchsorted(self.block_of, new, side="right") - 1
+        return np.asarray(xb)[blk, new - self.block_of[blk]]
+
+
+def build_plan(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
+               part: np.ndarray, k: int) -> DistPlan:
+    """Build the distributed plan for matrix (CSR) + partition."""
+    n = len(indptr) - 1
+    part = np.asarray(part)
+    sizes = np.bincount(part, minlength=k)
+    B = int(sizes.max())
+    # block-contiguous reordering
+    order = np.argsort(part, kind="stable")       # new -> old
+    perm = np.empty(n, dtype=np.int64)            # old -> new (within-global)
+    starts = np.zeros(k + 1, dtype=np.int64)
+    np.cumsum(sizes, out=starts[1:])
+    # pad blocks: new id of old vertex v = pad_start[part[v]] + rank within block
+    rank_in_block = np.empty(n, dtype=np.int64)
+    rank_in_block[order] = np.arange(n) - starts[part[order]]
+    perm = part.astype(np.int64) * B + rank_in_block   # padded new id
+    block_of = np.arange(k, dtype=np.int64) * B
+
+    # halo plan: for each ordered pair (owner -> receiver), vertices needed
+    src = np.repeat(np.arange(n), np.diff(indptr))
+    dst = indices
+    ext = part[src] != part[dst]
+    # receiver = part[src] needs vertex dst owned by part[dst]
+    recv_blk = part[src][ext].astype(np.int64)
+    own_blk = part[dst][ext].astype(np.int64)
+    needed = dst[ext].astype(np.int64)
+    pair_key = recv_blk * k + own_blk
+    uniq_keys, inv = np.unique(pair_key, return_inverse=True)
+    # per (receiver, owner): sorted unique needed vertices
+    need_map: dict[tuple[int, int], np.ndarray] = {}
+    for i, key in enumerate(uniq_keys):
+        r, o = int(key // k), int(key % k)
+        need_map[(r, o)] = np.unique(needed[inv == i])
+
+    # color the undirected quotient graph
+    und_pairs = sorted({(min(r, o), max(r, o)) for (r, o) in need_map})
+    qp = np.array(und_pairs, dtype=np.int64).reshape(-1, 2)
+    qw = np.array([len(need_map.get((a, b), ())) +
+                   len(need_map.get((b, a), ())) for a, b in und_pairs],
+                  dtype=np.float64)
+    colors = (greedy_edge_coloring(qp, qw) if len(qp)
+              else np.zeros(0, np.int32))
+    n_rounds = int(colors.max() + 1) if len(colors) else 1
+    S = max(1, max((len(v) for v in need_map.values()), default=1))
+
+    send_idx = np.zeros((k, n_rounds, S), dtype=np.int32)
+    send_mask = np.zeros((k, n_rounds, S), dtype=np.float32)
+    # halo slot of remote vertex u on receiver r: B + c*S + pos
+    halo_slot: dict[tuple[int, int], int] = {}
+    round_perms: list[list[tuple[int, int]]] = [[] for _ in range(n_rounds)]
+    for e, (a, b) in enumerate(und_pairs):
+        c = int(colors[e])
+        for (o, r) in ((a, b), (b, a)):              # both directions
+            need = need_map.get((r, o))
+            if need is None or len(need) == 0:
+                continue
+            loc = (need - block_of[part[need]] * 0   # local index on owner
+                   ) % B  # placeholder, fixed below
+            loc = rank_in_block[need].astype(np.int32)
+            send_idx[o, c, :len(need)] = loc
+            send_mask[o, c, :len(need)] = 1.0
+            for p, u in enumerate(need):
+                halo_slot[(r, int(u))] = B + c * S + p
+        # schedule: o->r and r->o in the same round (bidirectional swap)
+        round_perms[c].append((a, b))
+        round_perms[c].append((b, a))
+
+    # local matrix in padded-COO with remapped columns
+    rows_l = rank_in_block[src].astype(np.int32)
+    cols_l = np.empty(len(dst), dtype=np.int32)
+    same = ~ext
+    cols_l[same] = rank_in_block[dst[same]].astype(np.int32)
+    ext_ids = np.nonzero(ext)[0]
+    for i in ext_ids:
+        cols_l[i] = halo_slot[(int(part[src[i]]), int(dst[i]))]
+    own = part[src]
+    per_blk = np.bincount(own, minlength=k)
+    nnz_pad = int(per_blk.max()) if len(per_blk) else 1
+    rows_a = np.zeros((k, nnz_pad), dtype=np.int32)
+    cols_a = np.zeros((k, nnz_pad), dtype=np.int32)
+    vals_a = np.zeros((k, nnz_pad), dtype=np.float32)
+    fill = np.zeros(k, dtype=np.int64)
+    ord2 = np.argsort(own, kind="stable")
+    off = np.zeros(k + 1, dtype=np.int64)
+    np.cumsum(per_blk, out=off[1:])
+    for b in range(k):
+        sl = ord2[off[b]:off[b + 1]]
+        rows_a[b, :len(sl)] = rows_l[sl]
+        cols_a[b, :len(sl)] = cols_l[sl]
+        vals_a[b, :len(sl)] = data[sl]
+
+    row_mask = np.zeros((k, B), dtype=np.float32)
+    for b in range(k):
+        row_mask[b, :sizes[b]] = 1.0
+
+    return DistPlan(
+        k=k, B=B, S=S, n_rounds=n_rounds, n=n, perm=perm, block_of=block_of,
+        rows=jnp.asarray(rows_a), cols=jnp.asarray(cols_a),
+        vals=jnp.asarray(vals_a), row_mask=jnp.asarray(row_mask),
+        send_idx=jnp.asarray(send_idx), send_mask=jnp.asarray(send_mask),
+        round_perms=tuple(tuple(r) for r in round_perms),
+    )
+
+
+# --------------------------------------------------------------------------
+# shard_map programs
+# --------------------------------------------------------------------------
+
+def _halo_exchange(plan: DistPlan, x_loc, send_idx, send_mask, axis: str):
+    """x_loc: (B,).  Returns (B + R*S,) extended vector."""
+    bufs = []
+    for c in range(plan.n_rounds):
+        buf = x_loc[send_idx[c]] * send_mask[c]            # (S,)
+        perm = plan.round_perms[c]
+        if perm:
+            buf = jax.lax.ppermute(buf, axis, perm)
+        else:
+            buf = jnp.zeros_like(buf)
+        bufs.append(buf)
+    return jnp.concatenate([x_loc] + bufs)
+
+
+def make_dist_spmv(plan: DistPlan, mesh: Mesh, axis: str = "pu",
+                   comm: str = "halo") -> Callable:
+    """Returns jit'd y = A @ x on (k, B) block-major vectors."""
+
+    def local_matvec(rows, cols, vals, row_mask, send_idx, send_mask, x):
+        x = x[0]                                            # (B,)
+        if comm == "halo":
+            x_ext = _halo_exchange(plan, x, send_idx[0], send_mask[0], axis)
+        elif comm == "allgather":
+            x_all = jax.lax.all_gather(x, axis)             # (k, B)
+            # columns for remote entries index halo slots; rebuild them from
+            # the halo layout is halo-specific, so allgather mode instead
+            # uses global padded ids: col_global = blk*B + loc.  We pass the
+            # same cols but they are remapped by the caller (see
+            # make_dist_spmv_allgather).
+            raise RuntimeError("use make_dist_spmv_allgather")
+        y = jnp.zeros(plan.B, jnp.float32).at[rows[0]].add(
+            vals[0] * x_ext[cols[0]])
+        return (y * row_mask[0])[None]
+
+    spec = P(axis)
+    fn = jax.shard_map(
+        local_matvec, mesh=mesh,
+        in_specs=(spec,) * 6 + (spec,), out_specs=spec)
+
+    @jax.jit
+    def spmv(x):
+        return fn(plan.rows, plan.cols, plan.vals, plan.row_mask,
+                  plan.send_idx, plan.send_mask, x)
+
+    return spmv
+
+
+def build_allgather_cols(plan: DistPlan, indptr, indices, part) -> jnp.ndarray:
+    """Column ids in global padded space (blk*B + rank) for allgather mode."""
+    n = len(indptr) - 1
+    src = np.repeat(np.arange(n), np.diff(indptr))
+    own = part[src]
+    k, B = plan.k, plan.B
+    new_id = plan.perm[indices]                     # padded global id
+    per_blk = np.bincount(own, minlength=k)
+    nnz_pad = plan.rows.shape[1]
+    cols_a = np.zeros((k, nnz_pad), dtype=np.int32)
+    ord2 = np.argsort(own, kind="stable")
+    off = np.zeros(k + 1, dtype=np.int64)
+    np.cumsum(per_blk, out=off[1:])
+    for b in range(k):
+        sl = ord2[off[b]:off[b + 1]]
+        cols_a[b, :len(sl)] = new_id[sl]
+    return jnp.asarray(cols_a)
+
+
+def make_dist_spmv_allgather(plan: DistPlan, cols_global: jnp.ndarray,
+                             mesh: Mesh, axis: str = "pu") -> Callable:
+    def local_matvec(rows, cols, vals, row_mask, x):
+        x_all = jax.lax.all_gather(x[0], axis).reshape(-1)   # (k*B,)
+        y = jnp.zeros(plan.B, jnp.float32).at[rows[0]].add(
+            vals[0] * x_all[cols[0]])
+        return (y * row_mask[0])[None]
+
+    spec = P(axis)
+    fn = jax.shard_map(local_matvec, mesh=mesh,
+                       in_specs=(spec,) * 5, out_specs=spec)
+
+    @jax.jit
+    def spmv(x):
+        return fn(plan.rows, cols_global, plan.vals, plan.row_mask, x)
+
+    return spmv
+
+
+def make_dist_cg(plan: DistPlan, mesh: Mesh, axis: str = "pu",
+                 tol: float = 1e-6, max_iters: int = 500) -> Callable:
+    """Whole-CG SPMD program: the while_loop runs inside shard_map; dot
+    products are psum-reduced local dots; the matvec uses the halo rounds."""
+
+    def cg_local(rows, cols, vals, row_mask, send_idx, send_mask, b):
+        rows, cols, vals, row_mask = rows[0], cols[0], vals[0], row_mask[0]
+        send_idx, send_mask, b = send_idx[0], send_mask[0], b[0]
+
+        def matvec(x):
+            x_ext = _halo_exchange(plan, x, send_idx, send_mask, axis)
+            y = jnp.zeros(plan.B, jnp.float32).at[rows].add(
+                vals * x_ext[cols])
+            return y * row_mask
+
+        def dot(u, v):
+            return jax.lax.psum(jnp.vdot(u * row_mask, v), axis)
+
+        x = jnp.zeros_like(b)
+        r = b - matvec(x)
+        p = r
+        rs = dot(r, r)
+        tol2 = tol * tol * jnp.maximum(dot(b, b), 1e-30)
+
+        def cond(s):
+            return (s[3] > tol2) & (s[4] < max_iters)
+
+        def body(s):
+            x, r, p, rs, it = s
+            ap = matvec(p)
+            alpha = rs / (dot(p, ap) + 1e-30)
+            x = x + alpha * p
+            r = r - alpha * ap
+            rs2 = dot(r, r)
+            p = r + (rs2 / (rs + 1e-30)) * p
+            return x, r, p, rs2, it + 1
+
+        x, r, p, rs, it = jax.lax.while_loop(
+            cond, body, (x, r, p, rs, jnp.zeros((), jnp.int32)))
+        return x[None], rs[None], it[None]
+
+    spec = P(axis)
+    fn = jax.shard_map(cg_local, mesh=mesh, in_specs=(spec,) * 7,
+                       out_specs=(spec, spec, spec))
+
+    @jax.jit
+    def solve(b):
+        x, rs, it = fn(plan.rows, plan.cols, plan.vals, plan.row_mask,
+                       plan.send_idx, plan.send_mask, b)
+        return x, jnp.sqrt(rs[0]), it[0]
+
+    return solve

@@ -1,0 +1,42 @@
+"""Single-device SpMV and CG building blocks (pure JAX).
+
+Formats:
+  * padded-COO  — (rows, cols, vals) each (nnz_pad,); padding rows point at a
+    scratch row.  segment_sum based; works for any sparsity.
+  * block-ELL   — see kernels/spmv_bell.py (the Pallas TPU kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def csr_to_padded_coo(indptr: np.ndarray, indices: np.ndarray,
+                      data: np.ndarray, nnz_pad: int | None = None):
+    """CSR -> padded COO (rows, cols, vals); padded entries have val 0."""
+    n = len(indptr) - 1
+    nnz = len(indices)
+    nnz_pad = nnz_pad or nnz
+    rows = np.repeat(np.arange(n, dtype=np.int32), np.diff(indptr))
+    out_r = np.zeros(nnz_pad, dtype=np.int32)
+    out_c = np.zeros(nnz_pad, dtype=np.int32)
+    out_v = np.zeros(nnz_pad, dtype=np.float32)
+    out_r[:nnz], out_c[:nnz], out_v[:nnz] = rows, indices, data
+    return out_r, out_c, out_v
+
+
+@jax.jit
+def spmv_coo(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
+             x: jnp.ndarray, n: int | None = None) -> jnp.ndarray:
+    """y = A @ x for padded COO."""
+    n = n if n is not None else x.shape[0]
+    return jnp.zeros(n, vals.dtype).at[rows].add(vals * x[cols])
+
+
+def dense_from_coo(rows, cols, vals, n):
+    a = np.zeros((n, n), dtype=np.float64)
+    np.add.at(a, (rows, cols), vals)
+    return a

@@ -1,0 +1,107 @@
+"""Property-based tests for Algorithm 1 (the paper's Theorem 1 / Lemma 1,
+executed as code)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.block_sizes import (max_load_ratio, saturated_mask,
+                                    target_block_sizes,
+                                    target_block_sizes_jax)
+from repro.core.topology import PU, Topology
+
+
+def topo_strategy(max_k=12):
+    pu = st.tuples(st.floats(0.1, 32.0), st.floats(0.5, 64.0))
+    return st.lists(pu, min_size=1, max_size=max_k)
+
+
+def make_topo(spec):
+    return Topology(tuple(PU(s, m, f"p{i}") for i, (s, m) in enumerate(spec)))
+
+
+def binary_search_optimum(n, speeds, mems, iters=200):
+    """Independent oracle: optimal t* = min t s.t. sum min(c_i t, m_i) >= n
+    (water-filling KKT condition for minimize max tw_i/c_i)."""
+    lo, hi = 0.0, 10.0 * n / speeds.sum() + n / speeds.min()
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        if np.sum(np.minimum(speeds * mid, mems)) >= n:
+            hi = mid
+        else:
+            lo = mid
+    return hi
+
+
+@settings(max_examples=200, deadline=None)
+@given(topo_strategy(), st.floats(1.0, 1000.0))
+def test_algorithm1_optimal(spec, frac):
+    """Theorem 1: greedy == water-filling optimum of objective (2)."""
+    topo = make_topo(spec)
+    n = frac / 1000.0 * topo.total_memory        # always feasible
+    tw = target_block_sizes(n, topo)
+    # constraint (3): memory respected
+    assert np.all(tw <= topo.memories + 1e-9)
+    # mass conservation
+    assert np.isclose(tw.sum(), n, rtol=1e-9)
+    # non-negative
+    assert np.all(tw >= -1e-12)
+    # optimality vs independent oracle
+    t_star = binary_search_optimum(n, topo.speeds, topo.memories)
+    assert max_load_ratio(tw, topo) <= t_star * (1 + 1e-6)
+
+
+@settings(max_examples=100, deadline=None)
+@given(topo_strategy(), st.floats(1.0, 999.0))
+def test_lemma1_saturated_prefix(spec, frac):
+    """Lemma 1: saturated PUs form a prefix of the c_s/m_cap-sorted order."""
+    topo = make_topo(spec)
+    n = frac / 1000.0 * topo.total_memory
+    tw = target_block_sizes(n, topo)
+    order = np.argsort(-(topo.speeds / topo.memories), kind="stable")
+    sat = np.isclose(tw, topo.memories)[order]
+    # once non-saturated, never saturated again
+    seen_nonsat = False
+    for s in sat:
+        if not s:
+            seen_nonsat = True
+        assert not (s and seen_nonsat), "saturated PU after non-saturated"
+
+
+@settings(max_examples=100, deadline=None)
+@given(topo_strategy())
+def test_jax_matches_numpy(spec):
+    import jax.numpy as jnp
+    topo = make_topo(spec)
+    n = 0.9 * topo.total_memory
+    tw_np = target_block_sizes(n, topo)
+    tw_jx = np.asarray(target_block_sizes_jax(
+        jnp.float32(n), jnp.asarray(topo.speeds, jnp.float32),
+        jnp.asarray(topo.memories, jnp.float32)))
+    assert np.allclose(tw_np, tw_jx, rtol=2e-4, atol=2e-4 * n)
+
+
+def test_infeasible_raises():
+    topo = Topology((PU(1, 1.0), PU(1, 1.0)))
+    with pytest.raises(ValueError):
+        target_block_sizes(3.0, topo)
+
+
+def test_integral_rounding():
+    topo = Topology((PU(3, 100), PU(1, 100), PU(1, 100)))
+    tw = target_block_sizes(101, topo, integral=True)
+    assert tw.sum() == 101
+    assert np.all(tw == np.round(tw))
+    assert np.all(tw <= topo.memories)
+
+
+def test_homogeneous_is_uniform():
+    topo = Topology.homogeneous(8, memory=1000.0)
+    tw = target_block_sizes(800, topo)
+    assert np.allclose(tw, 100.0)
+
+
+def test_trivial_case_proportional():
+    """Eq. 4: ample memory => proportional to speed."""
+    topo = Topology((PU(4, 1e9), PU(1, 1e9), PU(3, 1e9)))
+    tw = target_block_sizes(80, topo)
+    assert np.allclose(tw, [40, 10, 30])

@@ -1,0 +1,88 @@
+"""Distributed SpMV/CG over shard_map — run in a subprocess with 8 forced
+host devices (the main pytest process must keep the default 1 device)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.core import Topology, scale_to_load, partition
+    from repro.sparse.generators import rdg
+    from repro.sparse.graph import laplacian_csr
+    from repro.sparse.distributed import (build_plan, make_dist_spmv,
+        make_dist_cg, build_allgather_cols, make_dist_spmv_allgather)
+    import scipy.sparse as sp
+
+    g = rdg(2000, seed=11)
+    topo = scale_to_load(Topology.topo1(8, 2/8, 8.0, 8.5), g.n)
+    part, tw = partition(g, topo, "geoRef")
+    indptr, indices, data = laplacian_csr(g, shift=1e-2)
+    A = sp.csr_matrix((data, indices, indptr), shape=(g.n, g.n))
+    plan = build_plan(indptr, indices, data, part, 8)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()), ("pu",))
+
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=g.n).astype(np.float32)
+    xb = jnp.asarray(plan.scatter_vec(x))
+
+    spmv = make_dist_spmv(plan, mesh)
+    err_halo = float(np.abs(plan.gather_vec(np.asarray(spmv(xb)))
+                            - A @ x).max())
+
+    cols_g = build_allgather_cols(plan, indptr, indices, part)
+    spmv2 = make_dist_spmv_allgather(plan, cols_g, mesh)
+    err_ag = float(np.abs(plan.gather_vec(np.asarray(spmv2(xb)))
+                          - A @ x).max())
+
+    b = rng.normal(size=g.n).astype(np.float32)
+    cg = make_dist_cg(plan, mesh, tol=1e-6, max_iters=1500)
+    xs, res, iters = cg(jnp.asarray(plan.scatter_vec(b)))
+    xg = plan.gather_vec(np.asarray(xs))
+    rel = float(np.linalg.norm(A @ xg - b) / np.linalg.norm(b))
+
+    # round-trip of scatter/gather
+    rt = float(np.abs(plan.gather_vec(plan.scatter_vec(x)) - x).max())
+
+    print(json.dumps({
+        "err_halo": err_halo, "err_ag": err_ag, "cg_rel": rel,
+        "iters": int(iters), "roundtrip": rt,
+        "rounds": plan.n_rounds, "halo_slots": plan.S,
+    }))
+""")
+
+
+@pytest.fixture(scope="module")
+def dist_results():
+    proc = subprocess.run([sys.executable, "-c", SCRIPT],
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_halo_spmv_exact(dist_results):
+    assert dist_results["err_halo"] < 1e-3
+
+
+def test_allgather_spmv_exact(dist_results):
+    assert dist_results["err_ag"] < 1e-3
+
+
+def test_distributed_cg_converges(dist_results):
+    assert dist_results["cg_rel"] < 1e-3
+    assert dist_results["iters"] < 1500
+
+
+def test_scatter_gather_roundtrip(dist_results):
+    assert dist_results["roundtrip"] == 0.0
+
+
+def test_edge_coloring_rounds_bounded(dist_results):
+    # 8 blocks => quotient graph degree <= 7; greedy coloring <= 2*7-1
+    assert 1 <= dist_results["rounds"] <= 13

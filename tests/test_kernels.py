@@ -1,0 +1,113 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.pdist import pairwise_sqdist_pallas
+from repro.kernels.spmv_bell import csr_to_block_ell, spmv_block_ell
+
+
+@pytest.mark.parametrize("n,k,d", [(32, 8, 2), (100, 7, 3), (257, 33, 2),
+                                   (512, 128, 3), (65, 1, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pdist_shapes(n, k, d, dtype):
+    rng = np.random.default_rng(n + k)
+    x = jnp.asarray(rng.normal(size=(n, d)), dtype)
+    c = jnp.asarray(rng.normal(size=(k, d)), dtype)
+    got = pairwise_sqdist_pallas(x, c, interpret=True)
+    want = ref.pairwise_sqdist_ref(x, c)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(8, 200), st.integers(1, 24))
+def test_pdist_property(n, k):
+    rng = np.random.default_rng(n * 131 + k)
+    x = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, 2)), jnp.float32)
+    got = np.asarray(pairwise_sqdist_pallas(x, c, interpret=True))
+    assert got.shape == (n, k)
+    assert np.all(got >= -1e-4)             # distances non-negative
+    want = np.asarray(ref.pairwise_sqdist_ref(x, c))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("n,density,bm,bk", [
+    (64, 0.1, 8, 128), (300, 0.02, 8, 128), (513, 0.01, 8, 128),
+    (128, 0.05, 16, 128), (200, 0.03, 8, 256),
+])
+def test_spmv_block_ell(n, density, bm, bk):
+    from scipy.sparse import random as sprand
+    A = sprand(n, n, density=density, random_state=n, format="csr")
+    A = (A + A.T).tocsr()
+    blocks, cols, meta = csr_to_block_ell(A.indptr, A.indices,
+                                          A.data.astype(np.float32), n,
+                                          bm=bm, bk=bk)
+    assert meta["fill"] == 1.0               # lossless conversion
+    rng = np.random.default_rng(n)
+    x = rng.normal(size=n).astype(np.float32)
+    got = np.asarray(spmv_block_ell(jnp.asarray(blocks), jnp.asarray(cols),
+                                    jnp.asarray(x), interpret=True))
+    want = A @ x
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+    # oracle agrees too
+    want2 = np.asarray(ref.spmv_block_ell_ref(jnp.asarray(blocks),
+                                              jnp.asarray(cols),
+                                              jnp.asarray(x)))
+    np.testing.assert_allclose(got, want2, atol=1e-4, rtol=1e-4)
+
+
+def test_spmv_empty_rows():
+    """Rows with no nonzeros must produce exact zeros."""
+    n = 40
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    indptr[2:] = 3                           # only row 1 has entries
+    indices = np.array([0, 5, 7], dtype=np.int32)
+    data = np.array([1.0, 2.0, 3.0], dtype=np.float32)
+    blocks, cols, _ = csr_to_block_ell(indptr, indices, data, n)
+    x = np.arange(n, dtype=np.float32)
+    y = np.asarray(spmv_block_ell(jnp.asarray(blocks), jnp.asarray(cols),
+                                  jnp.asarray(x), interpret=True))
+    assert y[1] == pytest.approx(0 * 1 + 5 * 2 + 7 * 3)
+    assert np.all(y[2:] == 0) and y[0] == 0
+
+
+def test_ops_wrappers():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(50, 3)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(6, 3)), jnp.float32)
+    d = ops.pairwise_sqdist(x, c)
+    assert d.shape == (50, 6)
+
+
+def test_flash_attention_kernel():
+    from repro.kernels.flash import flash_attention
+    rng = np.random.default_rng(1)
+    B, H, S, D = 2, 4, 256, 64
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("S,causal", [(128, True), (128, False),
+                                      (384, True)])
+def test_flash_attention_sweep(S, causal):
+    from repro.kernels.flash import flash_attention
+    rng = np.random.default_rng(S)
+    B, H, D = 1, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=2e-3)

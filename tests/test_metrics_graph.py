@@ -1,0 +1,87 @@
+"""Graph container, generators, and partition metrics on known instances."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metrics import (boundary_mask, comm_volumes, edge_cut,
+                                max_comm_volume, total_comm_volume)
+from repro.core.refinement import greedy_edge_coloring, quotient_graph
+from repro.sparse.generators import GENERATORS, grid, rdg, rgg
+from repro.sparse.graph import Graph, from_edges, laplacian_csr
+
+
+def path_graph(n):
+    return from_edges(n, np.arange(n - 1), np.arange(1, n),
+                      symmetrize=True)
+
+
+def test_from_edges_symmetric_dedup():
+    g = from_edges(3, [0, 0, 1, 0], [1, 1, 2, 0], symmetrize=True)
+    g.validate()
+    assert g.num_edges == 2                   # dedup + self-loop dropped
+    assert g.degrees.tolist() == [1, 2, 1]
+
+
+def test_edge_cut_path():
+    g = path_graph(10)
+    part = np.array([0] * 5 + [1] * 5)
+    assert edge_cut(g, part) == 1.0
+    assert max_comm_volume(g, part, 2) == 1
+    assert boundary_mask(g, part).sum() == 2
+
+
+def test_comm_volume_star():
+    """Star: center in block 0, leaves in k-1 other blocks — each leaf block
+    receives 1 (the center); block 0 receives all leaves."""
+    n = 9
+    g = from_edges(n, np.zeros(8, int), np.arange(1, 9), symmetrize=True)
+    part = np.array([0, 1, 1, 2, 2, 3, 3, 4, 4])
+    cv = comm_volumes(g, part, 5)
+    assert cv[0] == 8
+    assert np.all(cv[1:] == 1)
+    assert total_comm_volume(g, part, 5) == 12
+
+
+def test_quotient_and_coloring():
+    g = grid((6, 6))
+    part = (np.arange(36) // 9).astype(np.int32)    # 4 blocks
+    pairs, w = quotient_graph(g, part, 4)
+    assert len(pairs) >= 3
+    colors = greedy_edge_coloring(pairs, w)
+    # proper edge coloring: no two same-colored edges share a block
+    for c in range(colors.max() + 1):
+        seen = set()
+        for e in np.nonzero(colors == c)[0]:
+            a, b = pairs[e]
+            assert a not in seen and b not in seen
+            seen.update((int(a), int(b)))
+
+
+@pytest.mark.parametrize("name", sorted(GENERATORS))
+def test_generators_valid(name):
+    g = GENERATORS[name](800, seed=1)
+    g.validate()
+    assert g.n > 100
+    assert g.num_edges > g.n * 0.8
+    assert g.coords is not None
+
+
+def test_laplacian_spd():
+    g = rdg(300, seed=2)
+    indptr, indices, data = laplacian_csr(g, shift=1e-2)
+    import scipy.sparse as sp
+    L = sp.csr_matrix((data, indices, indptr), shape=(g.n, g.n)).toarray()
+    assert np.allclose(L, L.T, atol=1e-5)
+    w = np.linalg.eigvalsh(L)
+    assert w.min() > 0                       # positive definite after shift
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 6), st.integers(20, 120))
+def test_cut_invariant_relabel(k, n):
+    """Edge cut is invariant under block relabeling."""
+    g = path_graph(n)
+    rng = np.random.default_rng(n * k)
+    part = rng.integers(0, k, n).astype(np.int32)
+    perm = rng.permutation(k)
+    assert edge_cut(g, part) == edge_cut(g, perm[part])

@@ -1,0 +1,163 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train step on
+CPU asserting output shapes + no NaNs, plus decode-vs-forward consistency
+for every cache type."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, get_config
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+from repro.models.steps import (input_specs, loss_fn, make_decode_step,
+                                make_train_step)
+from repro.train.optimizer import AdamWConfig, init_opt_state
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                               jnp.int32),
+         "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                               jnp.int32)}
+    if cfg.family == "vlm":
+        b["img_embeds"] = jnp.asarray(
+            rng.normal(scale=0.02, size=(B, cfg.n_img_tokens, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "audio":
+        b["frames"] = jnp.asarray(
+            rng.normal(scale=0.02, size=(B, cfg.n_frames, cfg.d_model)),
+            jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_train(arch):
+    cfg = get_config(arch, smoke=True)
+    mod = encdec if cfg.family == "audio" else transformer
+    params, specs = mod.init_model(jax.random.PRNGKey(0), cfg)
+    # twin trees line up
+    assert jax.tree.structure(params) == jax.tree.structure(
+        specs, is_leaf=lambda x: not isinstance(x, dict))
+    B, S = 2, 32
+    batch = _batch(cfg, B, S)
+    if cfg.family == "audio":
+        logits, _ = encdec.forward(params, cfg, batch["frames"],
+                                   batch["tokens"])
+    else:
+        logits, _ = transformer.forward(params, cfg, batch["tokens"],
+                                        img_embeds=batch.get("img_embeds"))
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    state = {"params": params, "opt": init_opt_state(params)}
+    step = jax.jit(make_train_step(cfg, AdamWConfig()))
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually changed
+    delta = jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        params, state["params"]))
+    assert max(delta) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_decode_smoke(arch):
+    cfg = get_config(arch, smoke=True)
+    B, L = 2, 16
+    if cfg.family == "audio":
+        params, _ = encdec.init_model(jax.random.PRNGKey(0), cfg)
+        frames = jnp.asarray(np.random.default_rng(0).normal(
+            scale=0.02, size=(B, cfg.n_frames, cfg.d_model)), jnp.float32)
+        cache = encdec.init_cache(params, cfg, frames, L)
+    else:
+        params, _ = transformer.init_model(jax.random.PRNGKey(0), cfg)
+        cache = transformer.init_cache(cfg, B, L)
+    step = jax.jit(make_decode_step(cfg))
+    tok = jnp.ones((B, 1), jnp.int32)
+    for t in range(3):
+        logits, cache = step(params, cache, tok, jnp.int32(t))
+    assert logits.shape == (B, 1, cfg.vocab_padded)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("family,kw", [
+    ("dense", dict(qkv_bias=True)),
+    ("ssm", dict(ssm_state=16, ssm_headdim=16, n_layers=2, d_ff=0)),
+    ("hybrid", dict(pattern=("rec", "rec", "attn"), window=8, n_layers=6)),
+    ("moe", dict(n_experts=4, top_k=2, d_expert=32, d_ff=0, n_layers=2,
+                 moe_capacity=4.0)),
+])
+def test_decode_matches_forward(family, kw):
+    base = dict(name=f"t-{family}", family=family, n_layers=4, d_model=64,
+                n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                dtype="float32")
+    base.update(kw)
+    cfg = ModelConfig(**base)
+    params, _ = transformer.init_model(jax.random.PRNGKey(1), cfg)
+    S = 20
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, S), 0, cfg.vocab)
+    full, _ = transformer.forward(params, cfg, toks, remat=False)
+    cache = transformer.init_cache(cfg, 2, S)
+    step = jax.jit(lambda p, c, t, pos:
+                   transformer.decode_step(p, cfg, c, t, pos))
+    errs = []
+    for t in range(S):
+        lg, cache = step(params, cache, toks[:, t:t + 1], jnp.int32(t))
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))))
+    assert max(errs) < 2e-2, errs
+
+
+def test_prefill_matches_forward_then_decode():
+    cfg = ModelConfig("t", "dense", 4, 64, 4, 2, 128, 256, dtype="float32")
+    params, _ = transformer.init_model(jax.random.PRNGKey(1), cfg)
+    S, T0 = 24, 16
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, S), 0, 256)
+    full, _ = transformer.forward(params, cfg, toks, remat=False)
+    lg, cache = transformer.prefill_forward(params, cfg, toks[:, :T0],
+                                            cache_len=S)
+    assert float(jnp.max(jnp.abs(lg[:, 0] - full[:, T0 - 1]))) < 1e-3
+    for t in range(T0, S):
+        lg, cache = transformer.decode_step(params, cfg, cache,
+                                            toks[:, t:t + 1], jnp.int32(t))
+        assert float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))) < 1e-3
+
+
+def test_costmode_equivalence():
+    from repro.models.costmode import cost_mode
+    cfg = ModelConfig("t", "dense", 4, 64, 4, 2, 128, 256, dtype="float32")
+    params, _ = transformer.init_model(jax.random.PRNGKey(1), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, 256)
+    l1, _ = transformer.forward(params, cfg, toks)
+    with cost_mode():
+        l2, _ = transformer.forward(params, cfg, toks)
+    assert float(jnp.max(jnp.abs(l1 - l2))) < 1e-4
+
+
+def test_input_specs_cover_all_archs():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for mode in ("train", "prefill", "decode"):
+            spec = input_specs(cfg, 4, 128, mode)
+            assert "tokens" in spec
+            for v in spec.values():
+                assert isinstance(v, jax.ShapeDtypeStruct)
+
+
+def test_accum_steps_equivalent():
+    """Gradient accumulation == single big batch (same loss trajectory)."""
+    cfg = ModelConfig("t", "dense", 2, 32, 2, 2, 64, 128, dtype="float32")
+    params, _ = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, B=4, S=16)
+    opt = AdamWConfig(lr=1e-3)
+    s1 = {"params": params, "opt": init_opt_state(params)}
+    s2 = jax.tree.map(lambda x: x, s1)
+    st1, m1 = jax.jit(make_train_step(cfg, opt, accum_steps=1))(s1, batch)
+    st2, m2 = jax.jit(make_train_step(cfg, opt, accum_steps=2))(s2, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                     st1["params"], st2["params"])
+    assert max(jax.tree.leaves(d)) < 1e-4

@@ -1,0 +1,112 @@
+"""MoE dispatch invariants + LDHT expert-placement integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.common import ParamCollector
+from repro.models.mlp import init_moe, moe_forward
+
+
+def _setup(E=8, K=2, D=32, F=16, seed=0):
+    col = ParamCollector(jax.random.PRNGKey(seed), dtype=jnp.float32)
+    p, _ = init_moe(col, D, E, F)
+    return p
+
+
+def _dense_moe_ref(p, x, E, K):
+    """Oracle: dense gating with the same renormalized top-k gates and NO
+    capacity limit."""
+    B, S, D = x.shape
+    logits = (x @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = jax.lax.top_k(probs, K)
+    gate = gate / gate.sum(-1, keepdims=True)
+    y = jnp.zeros_like(x)
+    for e in range(E):
+        h = jax.nn.silu(x @ p["w1"][e]) * (x @ p["w3"][e])
+        out_e = h @ p["w2"][e]
+        w_e = jnp.where(ids == e, gate, 0.0).sum(-1)    # (B, S)
+        y = y + out_e * w_e[..., None]
+    return y
+
+
+def test_moe_matches_dense_reference_when_capacity_ample():
+    E, K, D = 8, 2, 32
+    p = _setup(E, K, D)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, D)) * 0.5
+    y, aux = moe_forward(p, x, n_experts=E, top_k=K, capacity_factor=8.0)
+    y_ref = _dense_moe_ref(p, x, E, K)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-3)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_overflow():
+    """With capacity ~0, output ~0 (all tokens dropped)."""
+    E, K, D = 4, 2, 16
+    p = _setup(E, K, D)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 32, D))
+    y_lo, _ = moe_forward(p, x, n_experts=E, top_k=K,
+                          capacity_factor=0.01)
+    y_hi, _ = moe_forward(p, x, n_experts=E, top_k=K, capacity_factor=8.0)
+    assert float(jnp.abs(y_lo).sum()) < float(jnp.abs(y_hi).sum())
+
+
+def test_moe_grad_flows():
+    E, K, D = 4, 2, 16
+    p = _setup(E, K, D)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 8, D))
+
+    def loss(p):
+        y, aux = moe_forward(p, x, n_experts=E, top_k=K,
+                             capacity_factor=4.0)
+        return jnp.sum(y ** 2) + 0.01 * aux
+
+    g = jax.grad(loss)(p)
+    norms = [float(jnp.abs(v).max()) for v in jax.tree.leaves(g)]
+    assert max(norms) > 0
+    assert all(np.isfinite(n) for n in norms)
+
+
+def test_expert_perm_is_relabeling():
+    """LDHT expert placement: permuting experts+weights leaves output
+    invariant."""
+    E, K, D = 4, 2, 16
+    p = _setup(E, K, D)
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 8, D))
+    y0, _ = moe_forward(p, x, n_experts=E, top_k=K, capacity_factor=8.0)
+    perm = jnp.asarray([2, 0, 3, 1])
+    p2 = dict(p)
+    for k in ("w1", "w2", "w3"):
+        p2[k] = p[k][jnp.argsort(perm)][perm][perm.argsort()][perm] * 0 + \
+            p[k]  # placeholder to keep shapes; real check below
+    # permute expert weights to positions given by perm, route with perm
+    p3 = dict(p)
+    inv = jnp.argsort(perm)
+    for k in ("w1", "w2", "w3"):
+        p3[k] = p[k][inv]
+    y1, _ = moe_forward(p3, x, n_experts=E, top_k=K, capacity_factor=8.0,
+                        expert_perm=perm)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-5)
+
+
+def test_expert_placement_partitioner():
+    """Expert co-activation graph partitioned under heterogeneous HBM caps:
+    placement respects memory and balances load."""
+    from repro.core import PU, Topology, target_block_sizes
+    from repro.core.api import _greedy_growing
+    from repro.sparse.graph import from_edges
+    rng = np.random.default_rng(0)
+    E = 16
+    # co-activation graph: experts that fire together, weighted edges
+    src, dst = np.triu_indices(E, k=1)
+    keep = rng.random(len(src)) < 0.3
+    g = from_edges(E, src[keep], dst[keep], symmetrize=True)
+    topo = Topology((PU(2, 6), PU(1, 6), PU(1, 6)))
+    tw = target_block_sizes(E, topo, integral=True)
+    part = _greedy_growing(g, tw, seed=0)
+    sizes = np.bincount(part, minlength=3)
+    assert sizes.sum() == E
+    assert np.all(sizes <= topo.memories)
+    assert sizes[0] >= sizes[1]              # fast PU hosts more experts

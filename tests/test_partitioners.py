@@ -1,0 +1,83 @@
+"""Partitioner invariants: validity, balance, memory constraint, and the
+paper's qualitative claims (refinement improves cut; combinatorial beats
+SFC)."""
+import numpy as np
+import pytest
+
+from repro.core import (METHODS, Topology, partition, scale_to_load,
+                        target_block_sizes)
+from repro.core.metrics import (block_sizes_of, edge_cut, imbalance,
+                                max_comm_volume, memory_violations)
+from repro.sparse.generators import grid, rdg, rgg
+
+
+@pytest.fixture(scope="module")
+def mesh2d():
+    return rdg(2500, seed=3)
+
+
+@pytest.fixture(scope="module")
+def topo8(mesh2d):
+    return scale_to_load(Topology.topo1(8, 2 / 8, 4.0, 5.2), mesh2d.n)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_partition_valid(mesh2d, topo8, method):
+    if method == "geoHier":
+        pytest.skip("hierarchical needs fanouts; covered separately")
+    part, tw = partition(mesh2d, topo8, method)
+    assert part.shape == (mesh2d.n,)
+    assert part.min() >= 0 and part.max() < topo8.k
+    # every block non-empty
+    assert len(np.unique(part)) == topo8.k
+    # balance: within 5% of Algorithm-1 targets
+    assert imbalance(part, tw) < 1.06
+    # constraint (3) with small slack
+    assert memory_violations(part, topo8, slack=0.06) == 0
+
+
+def test_refinement_improves_cut(mesh2d, topo8):
+    p0, tw = partition(mesh2d, topo8, "geoKM")
+    p1, _ = partition(mesh2d, topo8, "geoRef", tw=tw)
+    assert edge_cut(mesh2d, p1) <= edge_cut(mesh2d, p0)
+
+
+def test_combinatorial_beats_sfc(mesh2d, topo8):
+    """Paper Sec. VI: refined methods < space-filling-curve quality."""
+    p_sfc, tw = partition(mesh2d, topo8, "sfc")
+    p_ref, _ = partition(mesh2d, topo8, "geoRef", tw=tw)
+    assert edge_cut(mesh2d, p_ref) < edge_cut(mesh2d, p_sfc)
+
+
+def test_hierarchical_kmeans():
+    g = rdg(1600, seed=5)
+    topo = scale_to_load(
+        Topology.topo3(nodes=2, cores_per_node=4, fast_nodes=1), g.n)
+    part, tw = partition(g, topo, "geoHier")
+    assert len(np.unique(part)) == 8
+    assert imbalance(part, tw) < 1.10
+
+
+def test_grid_partition_cut_scales():
+    """On a k-partitioned sqrt-grid the cut should be O(k * sqrt(n/k))."""
+    g = grid((40, 40))
+    topo = scale_to_load(Topology.homogeneous(4), g.n)
+    part, tw = partition(g, topo, "geoRef")
+    cut = edge_cut(g, part)
+    assert cut < 8 * 40          # generous: 2 straight cuts would be 80
+
+
+def test_heterogeneous_block_sizes_respected():
+    g = rgg(3000, dim=2, seed=7)
+    topo = scale_to_load(Topology.topo1(6, 1 / 6, 16.0, 13.8), g.n)
+    part, tw = partition(g, topo, "geoKM")
+    sizes = block_sizes_of(part, 6)
+    # fast PU block ~ tw[0], slow ~ tw[-1]; ratio must carry through
+    assert sizes[0] > 2.0 * sizes[-1]
+    assert abs(sizes[0] - tw[0]) / tw[0] < 0.05
+
+
+def test_comm_volume_sane(mesh2d, topo8):
+    part, tw = partition(mesh2d, topo8, "geoRef")
+    mcv = max_comm_volume(mesh2d, part, topo8.k)
+    assert 0 < mcv < mesh2d.n // topo8.k

@@ -1,0 +1,49 @@
+"""TOPO1/2/3 constructors and the paper's Table III target-weight ratios."""
+import numpy as np
+import pytest
+
+from repro.core.block_sizes import target_block_sizes
+from repro.core.topology import (TABLE_III_FAST_SPECS, Topology,
+                                 scale_to_load)
+
+
+@pytest.mark.parametrize("frac,expected", [(1 / 12, 9.4), (1 / 6, 11.5)])
+def test_table3_fs16_ratio(frac, expected):
+    """Table III last column: tw(fast)/tw(slow) ~ 9.4 / 11.5 at fs=16."""
+    topo = scale_to_load(Topology.topo1(96, frac, 16.0, 13.8), 1e6)
+    tw = target_block_sizes(1e6, topo)
+    ratio = tw[0] / tw[-1]
+    assert abs(ratio - expected) / expected < 0.02
+
+
+def test_topo1_homogeneous_step():
+    """Table III exp 1: same specs => equal weights."""
+    topo = scale_to_load(Topology.topo1(24, 1 / 12, 1.0, 2.0), 2400)
+    tw = target_block_sizes(2400, topo)
+    assert np.allclose(tw, 100.0)
+
+
+def test_topo2_eq5_ordering():
+    """Eq. 5 holds: r(s1) = r(f)/2; at fs=16 (Table III exp 5) the greedy
+    order is F, then S1, then S2 as the paper states."""
+    topo = Topology.topo2(24, 1 / 6, 16.0, 13.8)
+    r = topo.speeds / topo.memories
+    n_fast, n_s1 = 4, 10
+    assert np.allclose(r[n_fast:n_fast + n_s1], 0.5 * r[0])   # Eq. 5
+    assert np.all(r[:n_fast] > r[n_fast])                     # F first
+    assert np.all(r[n_fast:n_fast + n_s1] > r[n_fast + n_s1:].max())
+
+
+def test_topo3_hierarchy():
+    topo = Topology.topo3(nodes=4, cores_per_node=6, fast_nodes=1)
+    assert topo.k == 24
+    assert topo.fanouts == (4, 6)
+    assert topo.pus[0].speed == 1.0
+    assert topo.pus[-1].speed == 0.5
+
+
+def test_table3_specs_monotone():
+    speeds = [s for s, _ in TABLE_III_FAST_SPECS]
+    mems = [m for _, m in TABLE_III_FAST_SPECS]
+    assert speeds == sorted(speeds)
+    assert mems == sorted(mems)

@@ -1,0 +1,153 @@
+"""Optimizer, checkpointing, data pipeline, trainer fault tolerance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.topology import Topology
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.train.checkpoint import (latest_checkpoint, restore_checkpoint,
+                                    save_checkpoint)
+from repro.train.optimizer import (AdamWConfig, adamw_update, global_norm,
+                                   init_opt_state, lr_schedule)
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+# -- optimizer ----------------------------------------------------------------
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = init_opt_state(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                      total_steps=200)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(cfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_grad_clip():
+    params = {"w": jnp.zeros(3)}
+    state = init_opt_state(params)
+    cfg = AdamWConfig(lr=1.0, grad_clip=1.0, warmup_steps=1)
+    grads = {"w": jnp.asarray([1e6, 0.0, 0.0])}
+    _, _, m = adamw_update(cfg, params, grads, state)
+    assert float(m["grad_norm"]) > 1e5          # reported pre-clip
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.int32(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0
+    assert abs(lrs[99] - 0.1) < 0.05
+    assert max(lrs) <= 1.0 + 1e-6
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert abs(float(global_norm(t)) - 5.0) < 1e-6
+
+
+# -- checkpoint ----------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+             "opt": {"step": jnp.int32(7)}}
+    save_checkpoint(tmp_path, state, step=7)
+    path = latest_checkpoint(tmp_path)
+    assert path is not None and path.name == "step_00000007"
+    restored, manifest = restore_checkpoint(path, state)
+    assert manifest["step"] == 7
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+
+
+def test_checkpoint_gc(tmp_path):
+    state = {"w": jnp.zeros(2)}
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(tmp_path, state, step=s, keep=2)
+    names = sorted(p.name for p in tmp_path.iterdir())
+    assert names == ["step_00000004", "step_00000005"]
+
+
+def test_checkpoint_shape_mismatch(tmp_path):
+    save_checkpoint(tmp_path, {"w": jnp.zeros(3)}, step=1)
+    with pytest.raises(ValueError):
+        restore_checkpoint(latest_checkpoint(tmp_path),
+                           {"w": jnp.zeros(4)})
+
+
+# -- data ------------------------------------------------------------------------
+
+def test_data_deterministic():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=4, seed=3)
+    a = SyntheticLM(cfg).batch(5)
+    b = SyntheticLM(cfg).batch(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticLM(cfg).batch(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_labels_shifted():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=4)
+    b = SyntheticLM(cfg).batch(0)
+    assert b["tokens"].shape == (4, 16)
+    assert np.all(b["labels"] < 100) and np.all(b["tokens"] >= 0)
+
+
+def test_data_rank_disjoint():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=8)
+    d = SyntheticLM(cfg)
+    r0 = d.batch(0, rank=0, world=2)
+    r1 = d.batch(0, rank=1, world=2)
+    assert r0["tokens"].shape == (4, 16)
+    assert not np.array_equal(r0["tokens"], r1["tokens"])
+
+
+# -- trainer fault tolerance -----------------------------------------------------
+
+def test_trainer_fault_and_resume(tmp_path):
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    tcfg = TrainerConfig(steps=30, seq_len=32, global_batch=4,
+                         ckpt_every=10, ckpt_dir=str(tmp_path),
+                         log_every=1000, fail_at_step=25)
+    tr = Trainer(cfg, tcfg)
+    with pytest.raises(RuntimeError, match="injected fault"):
+        tr.run()
+    # restart
+    tcfg2 = TrainerConfig(steps=30, seq_len=32, global_batch=4,
+                          ckpt_every=10, ckpt_dir=str(tmp_path),
+                          log_every=1000)
+    tr2 = Trainer(cfg, tcfg2)
+    assert tr2.maybe_resume()
+    assert tr2.step == 20
+    losses = tr2.run()
+    assert tr2.step == 30
+    assert np.isfinite(losses).all()
+
+
+def test_trainer_loss_decreases(tmp_path):
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    tcfg = TrainerConfig(steps=40, seq_len=32, global_batch=8,
+                         ckpt_every=1000, ckpt_dir=str(tmp_path),
+                         log_every=1000, lr=3e-3)
+    losses = Trainer(cfg, tcfg).run()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
+
+
+def test_trainer_elastic_rebalance(tmp_path):
+    cfg = get_config("mamba2-130m", smoke=True)
+    topo = Topology.topo1(8, 2 / 8, 4.0, 5.2)
+    tcfg = TrainerConfig(steps=1, seq_len=16, global_batch=64,
+                         ckpt_dir=str(tmp_path), log_every=1000)
+    tr = Trainer(cfg, tcfg, topo=topo)
+    assert tr.shares.sum() == 64
+    assert tr.shares[0] > tr.shares[-1]          # fast PU gets more
+    # lose the two fast PUs -> survivors re-balance uniformly
+    survivors = Topology(topo.pus[2:])
+    shares = tr.rebalance(survivors)
+    assert shares.sum() == 64
+    assert len(shares) == 6
+    assert shares.max() - shares.min() <= 1
