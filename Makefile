@@ -1,0 +1,24 @@
+# Repo tooling.  `make test` is the tier-1 gate from ROADMAP.md; run it
+# before every commit so "seed tests failing" can never silently regress.
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test tier1 deps bench-cg bench
+
+deps:
+	$(PYTHON) -m pip install -r requirements-dev.txt
+
+# Full suite, no early exit (collection must be clean even without dev deps)
+test:
+	$(PYTHON) -m pytest -q
+
+# The ROADMAP tier-1 verify command (fail fast)
+tier1:
+	$(PYTHON) -m pytest -x -q
+
+bench-cg:
+	$(PYTHON) -m benchmarks.run --only cg
+
+bench:
+	$(PYTHON) -m benchmarks.run

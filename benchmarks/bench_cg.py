@@ -7,9 +7,20 @@ Two measurements per partitioner:
         T_iter = max_i(|b_i| * c_nnz / speed_i) + alpha * maxCommVolume
     with c_nnz the measured per-row SpMV cost and alpha the per-word
     exchange cost (derived from the halo plan, not guessed).
+
+Plus the Operator-era rows:
+  * ``build_plan`` vectorization speedup vs the seed per-edge builder
+    (256x256 grid Laplacian, k=8, random partition = maximal boundary);
+  * cross-backend CG agreement (coo / bell / dist_halo / dist_allgather
+    through the one ``make_operator`` + ``cg_solve_global`` harness, the
+    distributed ones on 8 forced host devices in a subprocess).
 """
 from __future__ import annotations
 
+import json
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax.numpy as jnp
@@ -19,15 +30,111 @@ from repro.core import Topology, partition, scale_to_load, \
     target_block_sizes
 from repro.core.metrics import block_sizes_of, max_comm_volume
 from repro.sparse.cg import cg_solve
-from repro.sparse.generators import rdg
+from repro.sparse.distributed import build_plan, build_plan_reference
+from repro.sparse.generators import grid, rdg
 from repro.sparse.graph import laplacian_csr
 from repro.sparse.spmv import csr_to_padded_coo, spmv_coo
 
 from .common import row
 
+DIST_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, time
+    import numpy as np
+    import jax
+    from repro.sparse.generators import rdg
+    from repro.sparse.graph import laplacian_csr
+    from repro.sparse import make_operator, cg_solve_global
+
+    g = rdg(512, seed=9)
+    indptr, indices, data = laplacian_csr(g, shift=0.1)
+    part = np.random.default_rng(0).integers(0, 8, g.n)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()), ("pu",))
+    b = np.random.default_rng(1).normal(size=g.n).astype(np.float32)
+
+    out = {}
+    sols = {}
+    for backend in ("coo", "bell", "dist_halo", "dist_allgather"):
+        kw = (dict(part=part, k=8, mesh=mesh)
+              if backend.startswith("dist") else {})
+        op = make_operator(indptr, indices, data, backend, **kw)
+        t0 = time.perf_counter()
+        x, iters, res = cg_solve_global(op, b, tol=1e-7, max_iters=2000)
+        out[backend] = {"iters": iters, "res": res,
+                        "wall_us": (time.perf_counter() - t0) * 1e6}
+        sols[backend] = x
+    scale = float(np.abs(sols["coo"]).max())
+    out["max_pairwise_rel"] = max(
+        float(np.abs(sols[a] - sols[b2]).max()) / scale
+        for a in sols for b2 in sols if a < b2)
+
+    # halo vs allgather SpMV microseconds on a bigger mesh (n=2000)
+    g = rdg(2000, seed=11)
+    indptr, indices, data = laplacian_csr(g, shift=1e-2)
+    part = np.random.default_rng(2).integers(0, 8, g.n)
+    xb = None
+    for backend in ("dist_halo", "dist_allgather"):
+        op = make_operator(indptr, indices, data, backend,
+                           part=part, k=8, mesh=mesh)
+        xb = op.scatter(np.random.default_rng(3).normal(
+            size=g.n).astype(np.float32))
+        op.matvec(xb).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(20):
+            y = op.matvec(xb)
+        y.block_until_ready()
+        out[backend + "_spmv_us"] = (time.perf_counter() - t0) / 20 * 1e6
+    print(json.dumps(out))
+""")
+
+
+def _bench_build_plan(rows: list[str]) -> None:
+    g = grid((256, 256))
+    indptr, indices, data = laplacian_csr(g, shift=1e-2)
+    part = np.random.default_rng(0).integers(0, 8, g.n)
+    build_plan(indptr, indices, data, part, 8)          # warm
+    build_plan_reference(indptr, indices, data, part, 8)
+    t_vec = min(_t(build_plan, indptr, indices, data, part) for _ in range(5))
+    t_ref = min(_t(build_plan_reference, indptr, indices, data, part)
+                for _ in range(3))
+    rows.append(row("build_plan_vectorized", t_vec * 1e6,
+                    "grid256x256;k=8;random_part"))
+    rows.append(row("build_plan_seed_reference", t_ref * 1e6,
+                    f"speedup={t_ref / t_vec:.1f}x"))
+
+
+def _t(fn, *args):
+    t0 = time.perf_counter()
+    fn(*args, 8)
+    return time.perf_counter() - t0
+
+
+def _bench_operator_backends(rows: list[str]) -> None:
+    proc = subprocess.run([sys.executable, "-c", DIST_SCRIPT],
+                          capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        rows.append(row("cg_operator_backends__ERROR", 0,
+                        proc.stderr[-200:].replace(",", ";")))
+        return
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    for backend in ("coo", "bell", "dist_halo", "dist_allgather"):
+        r = out[backend]
+        rows.append(row(f"cg_operator__{backend}", r["wall_us"],
+                        f"iters={r['iters']};res={r['res']:.2e}"))
+    rows.append(row("cg_operator__max_pairwise_rel",
+                    out["max_pairwise_rel"] * 1e6,   # in 1e-6 units
+                    f"agree_1e-5={int(out['max_pairwise_rel'] < 1e-5)}"))
+    rows.append(row("dist_spmv_halo", out["dist_halo_spmv_us"],
+                    "n=2000;k=8"))
+    rows.append(row("dist_spmv_allgather", out["dist_allgather_spmv_us"],
+                    "n=2000;k=8"))
+
 
 def run() -> list[str]:
     rows = []
+    _bench_build_plan(rows)
+    _bench_operator_backends(rows)
     g = rdg(30000, seed=4)
     indptr, indices, data = laplacian_csr(g, shift=1e-2)
     rows_a, cols_a, vals_a = (jnp.asarray(a) for a in

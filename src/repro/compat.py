@@ -1,0 +1,139 @@
+"""JAX version compatibility shims.
+
+Compat policy
+-------------
+The repo targets the *current* JAX API surface (``jax.shard_map``,
+``jax.sharding.use_mesh`` / ``set_mesh``, ``jax.sharding.get_abstract_mesh``)
+but must keep running on the previous generation (0.4.x), where
+
+  * ``shard_map`` lives in ``jax.experimental.shard_map``;
+  * there is no ``set_mesh`` / ``use_mesh`` — the ambient mesh is the
+    thread-resident *physical* mesh set by ``with mesh:``;
+  * there is no ``get_abstract_mesh`` — the ambient mesh is read from
+    ``jax.interpreters.pxla.thread_resources``.
+
+Every call site in this repo goes through this module instead of touching
+the moving pieces directly.  Rules for new code:
+
+  1. Never call ``jax.sharding.set_mesh`` / ``use_mesh`` directly — use
+     :func:`use_mesh` (a context manager on every version).
+  2. Never call ``jax.shard_map`` / ``jax.experimental.shard_map.shard_map``
+     directly — use :func:`shard_map`.
+  3. Never call ``jax.sharding.get_abstract_mesh`` directly — use
+     :func:`get_ambient_mesh` (returns ``None`` when no mesh is ambient).
+
+The shims are resolved once at import time; there is no per-call overhead
+beyond one extra Python frame.
+"""
+from __future__ import annotations
+
+import contextlib
+import inspect
+from typing import Any, Callable
+
+import jax
+
+JAX_VERSION: tuple[int, ...] = tuple(
+    int(p) for p in jax.__version__.split(".")[:3] if p.isdigit())
+
+# Partial-manual shard_map (manual over a subset of mesh axes) only works
+# where it is a first-class API (jax.shard_map with axis_names); the 0.4.x
+# `auto=` spelling trips an XLA CHECK (IsManualSubgroup) when lowered under
+# jit.  Call sites that *optionally* go partial-manual gate on this flag.
+SUPPORTS_PARTIAL_MANUAL: bool = hasattr(jax, "shard_map")
+
+
+# --------------------------------------------------------------------------
+# shard_map
+# --------------------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):                               # jax >= 0.6
+    _shard_map_impl = jax.shard_map
+else:                                                       # jax 0.4.x/0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+# the replication-check kwarg was renamed check_rep -> check_vma upstream;
+# resolve the name once here so call-time errors surface undisturbed
+try:
+    _SM_PARAMS = frozenset(
+        inspect.signature(_shard_map_impl).parameters)
+except (TypeError, ValueError):                             # C-level callable
+    _SM_PARAMS = frozenset()
+_CHECK_KW = ("check_rep" if "check_rep" in _SM_PARAMS
+             else "check_vma" if "check_vma" in _SM_PARAMS else None)
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs,
+              check_rep: bool = False,
+              axis_names: frozenset | set | None = None) -> Callable:
+    """Version-stable ``shard_map``.
+
+    ``check_rep`` (renamed ``check_vma`` upstream) defaults to False: the
+    halo-exchange programs in ``sparse.distributed`` use ``ppermute``,
+    whose replication rules differ across versions.
+
+    ``axis_names`` is the current partial-manual spelling (the set of mesh
+    axes the body is *manual* over); on 0.4.x it is translated to the
+    complementary ``auto=`` frozenset.
+    """
+    kwargs: dict[str, Any] = {}
+    if axis_names is not None:
+        if not SUPPORTS_PARTIAL_MANUAL:
+            # the 0.4.x `auto=` spelling of partial-manual is a known hard
+            # XLA CHECK crash under jit (see SUPPORTS_PARTIAL_MANUAL above)
+            # — fail loudly in Python instead of aborting the process
+            raise NotImplementedError(
+                "partial-manual shard_map (axis_names=...) is not supported "
+                "on this JAX version; gate on compat.SUPPORTS_PARTIAL_MANUAL "
+                "and fall back to a fully-manual program")
+        kwargs["axis_names"] = set(axis_names)
+    if _CHECK_KW is not None:
+        kwargs[_CHECK_KW] = check_rep
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kwargs)
+
+
+# --------------------------------------------------------------------------
+# ambient mesh
+# --------------------------------------------------------------------------
+
+def use_mesh(mesh) -> contextlib.AbstractContextManager:
+    """Context manager making ``mesh`` ambient for sharding decisions.
+
+    Prefers ``jax.sharding.use_mesh`` / ``set_mesh`` (current API); falls
+    back to the legacy global-mesh context (``with mesh:``) on 0.4.x.
+    """
+    for name in ("use_mesh", "set_mesh"):
+        fn = getattr(jax.sharding, name, None)
+        if fn is not None:
+            return fn(mesh)
+    return mesh                                  # Mesh.__enter__ (legacy)
+
+
+def get_ambient_mesh() -> Any | None:
+    """The ambient mesh set by :func:`use_mesh`, or ``None``.
+
+    On current JAX this is the abstract mesh; on 0.4.x it is the concrete
+    thread-resident physical mesh.  Either carries ``axis_names`` /
+    ``shape`` and is accepted by :func:`shard_map`.
+    """
+    get_abs = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abs is not None:
+        try:
+            mesh = get_abs()
+        except Exception:
+            return None
+        if mesh is None or not getattr(mesh, "axis_names", ()):
+            return None
+        return mesh
+    try:
+        from jax.interpreters.pxla import thread_resources
+        mesh = thread_resources.env.physical_mesh
+    except Exception:
+        return None
+    if mesh is None or getattr(mesh, "empty", False):
+        return None
+    return mesh
+
+
+__all__ = ["JAX_VERSION", "shard_map", "use_mesh", "get_ambient_mesh"]

@@ -1,29 +1,25 @@
 """jit'd public wrappers for the Pallas kernels.
 
-On this CPU container every kernel runs with interpret=True (the kernel body
-executes in Python/XLA-CPU for correctness validation); on a real TPU set
-``REPRO_PALLAS_INTERPRET=0`` to compile to Mosaic.
+Kernel-path selection lives in ``spmv_bell.default_interpret``: compiled
+Mosaic on TPU, the Pallas interpreter elsewhere (CPU containers, CI);
+``REPRO_PALLAS_INTERPRET=0/1`` overrides the detection either way.
 """
 from __future__ import annotations
-
-import os
 
 import jax.numpy as jnp
 
 from .pdist import pairwise_sqdist_pallas
-from .spmv_bell import csr_to_block_ell, spmv_block_ell
-
-_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+from .spmv_bell import csr_to_block_ell, default_interpret, spmv_block_ell
 
 
 def pairwise_sqdist(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
     """(n, d) x (k, d) -> (n, k) squared Euclidean distances (Pallas)."""
-    return pairwise_sqdist_pallas(x, c, interpret=_INTERPRET)
+    return pairwise_sqdist_pallas(x, c, interpret=default_interpret())
 
 
 def spmv(blocks: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray):
     """Block-ELL SpMV y = A @ x (Pallas)."""
-    return spmv_block_ell(blocks, cols, x, interpret=_INTERPRET)
+    return spmv_block_ell(blocks, cols, x)
 
 
 __all__ = ["pairwise_sqdist", "spmv", "csr_to_block_ell"]

@@ -20,6 +20,7 @@ when the MXU needs it.  Output accumulates across the NNZB grid dimension.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -81,10 +82,31 @@ def csr_to_block_ell(indptr: np.ndarray, indices: np.ndarray,
 # Kernel
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+def default_interpret() -> bool:
+    """Backend detection for the kernel path: the block-ELL kernel uses
+    TPU-only Pallas features (PrefetchScalarGridSpec), so it compiles for
+    real on TPU and falls back to the Pallas interpreter elsewhere (CPU
+    dry-runs, CI).  ``REPRO_PALLAS_INTERPRET=0/1`` overrides detection."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env != "0"
+    return jax.default_backend() != "tpu"
+
+
 def spmv_block_ell(blocks: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
-                   interpret: bool = True) -> jnp.ndarray:
-    """y = A @ x with A in block-ELL.  x: (n,) f32; returns (n,) f32."""
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """y = A @ x with A in block-ELL.  x: (n,) f32; returns (n,) f32.
+
+    ``interpret=None`` resolves via :func:`default_interpret` — compiled
+    Mosaic on TPU, interpreter elsewhere."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _spmv_block_ell(blocks, cols, x, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _spmv_block_ell(blocks: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
+                    interpret: bool) -> jnp.ndarray:
     S, NNZB, BM, BK = blocks.shape
     n = x.shape[0]
     P = -(-n // BK)

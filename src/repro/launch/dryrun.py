@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..compat import use_mesh
 from ..configs.registry import ARCHS, get_config
 from ..configs.shapes import SHAPES, applicable
 from ..models import encdec, transformer
@@ -161,7 +162,7 @@ def _lower_inner(cfg, mode, B, S, mesh, donate, accum_steps):
     p_shard = _shardings(mesh, pspecs)
     dp = tuple(a for a in ("pod", "data") if a in mesh_axes)
 
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         if mode == "train":
             f32sds = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
             state_sds = {"params": params_sds,

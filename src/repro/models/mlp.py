@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import get_ambient_mesh, shard_map
 from .common import ParamCollector, maybe_constrain
 
 
@@ -85,11 +86,9 @@ def moe_forward(p, x, *, n_experts: int, top_k: int,
 
 
 def _ambient_moe_mesh():
-    """The ambient AbstractMesh iff it can host expert parallelism."""
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return None
+    """The ambient mesh (via compat.get_ambient_mesh) iff it can host
+    expert parallelism."""
+    mesh = get_ambient_mesh()
     if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
         return None
     return mesh
@@ -316,10 +315,10 @@ def _moe_forward_shard_map(p, x, mesh, *, n_experts: int, top_k: int,
     S_glob = x.shape[1]
     seq_scatter = seq_sharded and S_glob % ep_size == 0 and S_glob > 1
     y_spec = (P(x_spec[0], "model", x_spec[2]) if seq_scatter else x_spec)
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(p_specs, x_spec),
         out_specs=(y_spec, P()),
-        check_vma=False)
+        check_rep=False)
     pp = {k: p[k] for k in p_specs}
     return fn(pp, x)

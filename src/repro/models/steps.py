@@ -53,10 +53,8 @@ def make_train_step(cfg: ModelConfig, opt: AdamWConfig,
 
     def grad_fn(params, batch):
         if grad_compression is not None:
-            try:
-                mesh = jax.sharding.get_abstract_mesh()
-            except Exception:
-                mesh = None
+            from ..compat import get_ambient_mesh
+            mesh = get_ambient_mesh()
             if (mesh is not None and "pod" in mesh.axis_names
                     and mesh.shape["pod"] > 1):
                 from ..train.compression import podwise_value_and_grad

@@ -1,1 +1,20 @@
-"""Sparse matrix / graph substrate."""
+"""Sparse matrix / graph substrate.
+
+Public surface:
+
+  * ``graph`` / ``generators`` — CSR graphs and the paper's instance
+    families (Table II);
+  * ``spmv`` / ``kernels.spmv_bell`` — single-device SpMV backends;
+  * ``distributed`` — partition-aware shard_map SpMV/CG (halo exchange);
+  * ``operator``   — the Operator protocol unifying every backend behind
+    ``make_operator`` + ``cg_solve_global`` (see its module docstring);
+  * ``cg``         — the one CG solver all backends share.
+"""
+from .cg import CGResult, cg_solve
+from .operator import (BACKENDS, BlockEllOperator, CooOperator,
+                       DistributedOperator, Operator, make_operator,
+                       cg_solve_global)
+
+__all__ = ["CGResult", "cg_solve", "BACKENDS", "Operator", "CooOperator",
+           "BlockEllOperator", "DistributedOperator", "make_operator",
+           "cg_solve_global"]

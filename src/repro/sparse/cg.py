@@ -1,9 +1,11 @@
 """Conjugate-gradient solver (Sec. VI-a: 'CG solver from LAMA ... applied to
 systems derived from the graph's Laplacian') — JAX, lax.while_loop.
 
-The operator is passed as a closure so the same solver drives the
-single-device padded-COO SpMV, the Pallas block-ELL kernel, and the
-distributed shard_map SpMV.
+The operator is passed either as a bare matvec closure or as an
+``operator.Operator`` (anything with ``matvec`` / ``dot``), so the same
+solver drives the single-device padded-COO SpMV, the Pallas block-ELL
+kernel, and the distributed shard_map SpMV — one solver, one benchmark
+harness, every backend.
 """
 from __future__ import annotations
 
@@ -24,8 +26,13 @@ def cg_solve(matvec: Callable[[jnp.ndarray], jnp.ndarray], b: jnp.ndarray,
              x0: jnp.ndarray | None = None, tol: float = 1e-6,
              max_iters: int = 500,
              dot: Callable | None = None) -> CGResult:
-    """Unpreconditioned CG.  ``dot`` may be overridden for distributed use
-    (e.g. a psum-reduced local dot inside shard_map)."""
+    """Unpreconditioned CG.  ``matvec`` is either a callable or an
+    Operator (``matvec``/``dot`` attributes); ``dot`` may be overridden
+    for distributed use (e.g. a psum-reduced local dot inside shard_map)."""
+    if hasattr(matvec, "matvec"):
+        op = matvec
+        matvec = op.matvec
+        dot = dot or getattr(op, "dot", None)
     dot = dot or (lambda u, v: jnp.vdot(u, v))
     x = jnp.zeros_like(b) if x0 is None else x0
     r = b - matvec(x)

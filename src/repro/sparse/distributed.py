@@ -11,7 +11,8 @@ machine the fast PU also *is* faster, so wall-clock stays balanced — the
 simulated-speed benchmark in benchmarks/bench_cg.py models this.)
 
 Halo exchange: the quotient graph of the partition is edge-colored
-(core.refinement.greedy_edge_coloring) and each color class becomes one
+(core.refinement.vizing_edge_coloring, Misra-Gries: <= Delta+1 rounds on
+quotient degree Delta) and each color class becomes one
 `lax.ppermute` round — at most one partner per device per round, the exact
 communication schedule Geographer-R uses for its pairwise refinement.  The
 halo buffer layout is (rounds, S) with stable slots, so column indices are
@@ -22,20 +23,29 @@ Both exchange strategies are provided:
   * ``allgather``  — all_gather of the whole padded vector, comm volume
                      = O(n); the baseline a partitioner-oblivious system
                      would use.  The benchmark compares the two.
+
+Plan construction (:func:`build_plan`) is fully vectorized NumPy —
+``searchsorted`` / ``unique`` / fancy-index scatter; the only Python loops
+are over quotient-graph edges (O(k^2), k = #PUs), never over vertices or
+matrix entries.  The seed's per-edge implementation is preserved as
+:func:`build_plan_reference` and serves as the correctness oracle in
+tests/test_dist_plan.py and the speedup baseline in benchmarks/bench_cg.py.
+
+Both plan builders produce *identical* plans (bit-equal arrays), so the
+ppermute schedule and halo slot layout are stable across the rewrite.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from ..core.refinement import greedy_edge_coloring, quotient_graph
-from .graph import Graph
+from ..compat import shard_map
+from ..core.refinement import vizing_edge_coloring
 
 
 @dataclasses.dataclass
@@ -43,7 +53,7 @@ class DistPlan:
     """Host-built plan + device arrays for the distributed operator.
 
     All arrays carry a leading block axis of size k and are sharded
-    one-block-per-device by ``shard``.
+    one-block-per-device by the shard_map programs below.
     """
 
     k: int
@@ -51,8 +61,9 @@ class DistPlan:
     S: int                      # padded halo slots per round
     n_rounds: int
     n: int                      # true global size
-    perm: np.ndarray            # old vertex id -> new (block-contiguous) id
-    block_of: np.ndarray        # (k,) first new id of each block
+    perm: np.ndarray            # old vertex id -> padded new id (blk*B+rank)
+    block_of: np.ndarray        # (k,) first padded id of each block
+    sizes: np.ndarray           # (k,) true rows per block
     # device data
     rows: jnp.ndarray           # (k, nnz_pad) int32 local row
     cols: jnp.ndarray           # (k, nnz_pad) int32 local col in [0, B+R*S)
@@ -61,96 +72,274 @@ class DistPlan:
     send_idx: jnp.ndarray       # (k, R, S) int32 local indices to send
     send_mask: jnp.ndarray      # (k, R, S) f32
     round_perms: tuple          # per round: tuple of (src, dst) pairs
+    # lazy allgather-mode columns: built on first access from the packing
+    # order (only the allgather baseline needs them; halo mode never does)
+    _pack_blk: np.ndarray = None      # (nnz,) owning block, packed order
+    _pack_pos: np.ndarray = None      # (nnz,) slot within block
+    _pack_dst: np.ndarray = None      # (nnz,) global dst vertex, packed order
+    _cols_global: jnp.ndarray = None
+
+    @property
+    def cols_global(self) -> jnp.ndarray:
+        """(k, nnz_pad) int32 columns in padded global ids (blk*B + rank)."""
+        if self._cols_global is None:
+            out = np.zeros(self.rows.shape, dtype=np.int32)
+            out[self._pack_blk, self._pack_pos] = \
+                self.perm[self._pack_dst].astype(np.int32)
+            self._cols_global = jnp.asarray(out)
+        return self._cols_global
 
     def scatter_vec(self, x: np.ndarray) -> np.ndarray:
         """(n,) global vector -> (k, B) padded block-major layout."""
         out = np.zeros((self.k, self.B), dtype=np.float32)
-        new = self.perm
-        blk = np.searchsorted(self.block_of, new, side="right") - 1
-        out[blk, new - self.block_of[blk]] = x
+        out[self.perm // self.B, self.perm % self.B] = x
         return out
 
     def gather_vec(self, xb: np.ndarray) -> np.ndarray:
         """(k, B) -> (n,) global order."""
-        new = self.perm
-        blk = np.searchsorted(self.block_of, new, side="right") - 1
-        return np.asarray(xb)[blk, new - self.block_of[blk]]
+        return np.asarray(xb)[self.perm // self.B, self.perm % self.B]
+
+
+def _edge_endpoints(indptr: np.ndarray, indices: np.ndarray):
+    src = np.repeat(np.arange(len(indptr) - 1), np.diff(indptr))
+    return src, np.asarray(indices)
+
+
+# build_plan uses O(k*n) dense tables (counting sorts) up to this many
+# cells, and sort-based extraction beyond.  The widest live table is the
+# int32 halo-slot map (4 B/cell; the bool bitmaps are freed before it is
+# allocated), so the dense path peaks at ~64 MiB of transient tables at
+# this limit.  Module-level so tests can force the fallback path.
+DENSE_PLAN_LIMIT = 1 << 24
 
 
 def build_plan(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
                part: np.ndarray, k: int) -> DistPlan:
-    """Build the distributed plan for matrix (CSR) + partition."""
+    """Build the distributed plan for matrix (CSR) + partition — vectorized.
+
+    O(nnz log nnz) in NumPy kernels (the log from sorts); no Python
+    iteration over vertices, edges, or halo slots.
+    """
+    n = len(indptr) - 1
+    part = np.ascontiguousarray(part, dtype=np.int32)
+    sizes = np.bincount(part, minlength=k)
+    B = int(sizes.max())
+    # dense-table mode: O(k*n) bitmaps replace O(x log x) sorts wherever a
+    # small-range counting sort suffices; fall back to sorts for huge k*n
+    dense = k * n <= DENSE_PLAN_LIMIT
+    # block-contiguous reordering: rank of each vertex within its block.
+    # order = vertices sorted by (block, id) — a (k, n) one-hot flatnonzero
+    # is that counting sort directly; argsort is the general fallback.
+    if dense:
+        onehot = np.zeros(k * n, dtype=bool)
+        onehot[part.astype(np.int64) * n + np.arange(n)] = True
+        order = np.flatnonzero(onehot) % n
+        del onehot
+    else:
+        order = np.argsort(part, kind="stable")       # new (unpadded) -> old
+    starts = np.zeros(k + 1, dtype=np.int64)
+    np.cumsum(sizes, out=starts[1:])
+    rank_in_block = np.empty(n, dtype=np.int32)
+    rank_in_block[order] = np.arange(n, dtype=np.int64) - starts[part[order]]
+    perm = part.astype(np.int64) * B + rank_in_block   # padded new id
+    block_of = np.arange(k, dtype=np.int64) * B
+
+    # ---- halo triples: (receiver, owner, vertex), deduped & sorted -------
+    # Two equivalent extraction paths (identical triple order — sorted by
+    # (receiver, owner, vertex)):
+    #   dense  — O(nnz + k*n): dedupe through a (k, n) needed-bitmap, then
+    #            one radix argsort over the small-range pair keys.  Used
+    #            when the bitmap fits comfortably (k*n <= 2^26 cells).
+    #   sorted — O(E_ext log E_ext): np.unique over per-edge triple keys.
+    #            Fallback for huge k*n where O(k*n) memory is not ok.
+    src, dst = _edge_endpoints(indptr, indices)
+    psrc, pdst = part[src], part[dst]
+    ext = psrc != pdst
+    # receiver = part[src] needs vertex dst owned by part[dst]
+    if dense:
+        needed = np.zeros(k * n, dtype=bool)
+        # k*n <= 2^26 here, so (recv, v) keys always fit int32
+        ext_keys = psrc[ext] * np.int32(n) + dst[ext]
+        needed[ext_keys] = True
+        flat = np.flatnonzero(needed)                  # sorted (recv, v)
+        del needed
+        t_v = flat % n
+        # int16 pair keys: 1-2 radix passes in the stable argsort below
+        pair_t = np.int16 if k * k <= np.iinfo(np.int16).max else np.int32
+        t_pair = ((flat // n).astype(pair_t) * pair_t(k)
+                  + part[t_v].astype(pair_t))          # recv*k + own
+        o2 = np.argsort(t_pair, kind="stable")         # radix; keeps v asc
+        t_pair, t_v, flat = t_pair[o2], t_v[o2], flat[o2]
+        uniq_trip = trip_of_edge = None                # unused on this path
+    else:
+        key_t = np.int32 if k * k * n < np.iinfo(np.int32).max else np.int64
+        pair_key_all = psrc * np.int32(k) + pdst
+        trip_key_e = (pair_key_all[ext].astype(key_t) * key_t(n)
+                      + dst[ext].astype(key_t))
+        uniq_trip, trip_of_edge = np.unique(trip_key_e, return_inverse=True)
+        t_pair = (uniq_trip // n).astype(np.int32)     # recv*k + own
+        t_v = uniq_trip % n
+    # triples sharing a (recv, own) pair are contiguous and sorted by v;
+    # halo slot position = rank within the pair group.  t_pair is sorted,
+    # so pair groups fall out of the boundary flags — no second unique/sort.
+    m = len(t_pair)
+    newp = np.empty(m, dtype=bool)
+    if m:
+        newp[0] = True
+        np.not_equal(t_pair[1:], t_pair[:-1], out=newp[1:])
+    grp_first = np.flatnonzero(newp)                   # triple idx per pair
+    uniq_pairs = t_pair[grp_first]
+    pair_counts = np.diff(np.append(grp_first, m))
+    pair_of_trip = np.cumsum(newp) - 1
+    t_pos = np.arange(m) - grp_first[pair_of_trip]
+    S = int(pair_counts.max()) if len(pair_counts) else 1
+    S = max(1, S)
+
+    # ---- edge-color the undirected quotient graph ------------------------
+    p_recv, p_own = uniq_pairs // k, uniq_pairs % k
+    und_key = (np.minimum(p_recv, p_own) * k + np.maximum(p_recv, p_own))
+    uniq_und = np.unique(und_key)
+    und_a, und_b = uniq_und // k, uniq_und % k
+    und_w = np.zeros(len(uniq_und), dtype=np.float64)
+    np.add.at(und_w, np.searchsorted(uniq_und, und_key), pair_counts)
+    qp = np.stack([und_a, und_b], axis=1).astype(np.int64)
+    colors = (vizing_edge_coloring(qp, und_w) if len(qp)
+              else np.zeros(0, np.int32))
+    n_rounds = int(colors.max() + 1) if len(colors) else 1
+    # (k, k) directed-pair -> round lookup (tiny), so per-triple color is a
+    # single gather instead of min/max arithmetic over all triples
+    color_dir = np.zeros(k * k, dtype=np.int32)
+    color_dir[und_a * k + und_b] = colors
+    color_dir[und_b * k + und_a] = colors
+    t_color = color_dir[t_pair]
+
+    # ---- send schedule (owner side) --------------------------------------
+    # each color class is a matching, so an owner serves one receiver per
+    # round: the (own, color, pos) scatter below has no collisions.
+    send_idx = np.zeros((k, n_rounds, S), dtype=np.int32)
+    send_mask = np.zeros((k, n_rounds, S), dtype=np.float32)
+    t_own = (uniq_pairs % k)[pair_of_trip]        # owner of each triple
+    send_idx[t_own, t_color, t_pos] = rank_in_block[t_v]
+    send_mask[t_own, t_color, t_pos] = 1.0
+    pair_color = color_dir[und_a * k + und_b]
+    round_perms: list[list[tuple[int, int]]] = [[] for _ in range(n_rounds)]
+    for a, b, c in zip(und_a.tolist(), und_b.tolist(), pair_color.tolist()):
+        # o->r and r->o swap in the same round (bidirectional ppermute)
+        round_perms[c].append((a, b))
+        round_perms[c].append((b, a))
+
+    # ---- local matrix in padded-COO with remapped columns ----------------
+    rows_l = rank_in_block[src]
+    # local rank everywhere, then overwrite external edges with halo slots
+    cols_l = rank_in_block[dst]
+    # halo slot of remote vertex u on receiver r: B + round*S + pos,
+    # precomputed per triple so the per-edge remap is one gather
+    slot_of_trip = (B + t_color * S + t_pos).astype(np.int32)
+    if dense:
+        slot_arr = np.empty(k * n, dtype=np.int32)     # (recv, v) -> slot
+        slot_arr[flat] = slot_of_trip
+        cols_l[ext] = slot_arr[ext_keys]
+    else:
+        cols_l[ext] = slot_of_trip[trip_of_edge]
+    # pack edges per owning block (scatter, no per-block loop).  The slot of
+    # edge e is derived from CSR structure in O(nnz) — no argsort: within a
+    # block, edges are laid out by (owner rank, CSR order), exactly the
+    # order a stable argsort over part[src] would give.
+    own = psrc
+    per_blk = np.bincount(own, minlength=k)
+    nnz_pad = max(int(per_blk.max()) if len(per_blk) else 1, 1)
+    deg = np.diff(indptr)
+    deg_o = deg[order]
+    # edge start of each vertex inside its block's packed segment
+    vstart = np.empty(n, dtype=np.int64)
+    blk_edge_start = np.cumsum(per_blk) - per_blk
+    vstart[order] = (np.cumsum(deg_o) - deg_o) - blk_edge_start[part[order]]
+    pos_edge = (vstart[src]
+                + (np.arange(len(src)) - np.repeat(indptr[:-1], deg)))
+    rows_a = np.zeros((k, nnz_pad), dtype=np.int32)
+    cols_a = np.zeros((k, nnz_pad), dtype=np.int32)
+    vals_a = np.zeros((k, nnz_pad), dtype=np.float32)
+    rows_a[own, pos_edge] = rows_l
+    cols_a[own, pos_edge] = cols_l
+    vals_a[own, pos_edge] = data
+
+    row_mask = (np.arange(B)[None, :] < sizes[:, None]).astype(np.float32)
+
+    return DistPlan(
+        k=k, B=B, S=S, n_rounds=n_rounds, n=n, perm=perm, block_of=block_of,
+        sizes=sizes,
+        rows=jnp.asarray(rows_a), cols=jnp.asarray(cols_a),
+        vals=jnp.asarray(vals_a), row_mask=jnp.asarray(row_mask),
+        send_idx=jnp.asarray(send_idx), send_mask=jnp.asarray(send_mask),
+        round_perms=tuple(tuple(r) for r in round_perms),
+        _pack_blk=own, _pack_pos=pos_edge, _pack_dst=dst,
+    )
+
+
+def build_plan_reference(indptr: np.ndarray, indices: np.ndarray,
+                         data: np.ndarray, part: np.ndarray,
+                         k: int) -> DistPlan:
+    """The seed's per-edge plan builder, kept verbatim (modulo the removed
+    dead ``loc`` placeholder) as the oracle for tests and the baseline for
+    the vectorization speedup benchmark.  O(|halo|) Python iteration —
+    do not use beyond toy meshes."""
     n = len(indptr) - 1
     part = np.asarray(part)
     sizes = np.bincount(part, minlength=k)
     B = int(sizes.max())
-    # block-contiguous reordering
-    order = np.argsort(part, kind="stable")       # new -> old
-    perm = np.empty(n, dtype=np.int64)            # old -> new (within-global)
+    order = np.argsort(part, kind="stable")
     starts = np.zeros(k + 1, dtype=np.int64)
     np.cumsum(sizes, out=starts[1:])
-    # pad blocks: new id of old vertex v = pad_start[part[v]] + rank within block
     rank_in_block = np.empty(n, dtype=np.int64)
     rank_in_block[order] = np.arange(n) - starts[part[order]]
-    perm = part.astype(np.int64) * B + rank_in_block   # padded new id
+    perm = part.astype(np.int64) * B + rank_in_block
     block_of = np.arange(k, dtype=np.int64) * B
 
-    # halo plan: for each ordered pair (owner -> receiver), vertices needed
-    src = np.repeat(np.arange(n), np.diff(indptr))
-    dst = indices
+    src, dst = _edge_endpoints(indptr, indices)
     ext = part[src] != part[dst]
-    # receiver = part[src] needs vertex dst owned by part[dst]
     recv_blk = part[src][ext].astype(np.int64)
     own_blk = part[dst][ext].astype(np.int64)
     needed = dst[ext].astype(np.int64)
     pair_key = recv_blk * k + own_blk
     uniq_keys, inv = np.unique(pair_key, return_inverse=True)
-    # per (receiver, owner): sorted unique needed vertices
     need_map: dict[tuple[int, int], np.ndarray] = {}
     for i, key in enumerate(uniq_keys):
         r, o = int(key // k), int(key % k)
         need_map[(r, o)] = np.unique(needed[inv == i])
 
-    # color the undirected quotient graph
     und_pairs = sorted({(min(r, o), max(r, o)) for (r, o) in need_map})
     qp = np.array(und_pairs, dtype=np.int64).reshape(-1, 2)
     qw = np.array([len(need_map.get((a, b), ())) +
                    len(need_map.get((b, a), ())) for a, b in und_pairs],
                   dtype=np.float64)
-    colors = (greedy_edge_coloring(qp, qw) if len(qp)
+    colors = (vizing_edge_coloring(qp, qw) if len(qp)
               else np.zeros(0, np.int32))
     n_rounds = int(colors.max() + 1) if len(colors) else 1
     S = max(1, max((len(v) for v in need_map.values()), default=1))
 
     send_idx = np.zeros((k, n_rounds, S), dtype=np.int32)
     send_mask = np.zeros((k, n_rounds, S), dtype=np.float32)
-    # halo slot of remote vertex u on receiver r: B + c*S + pos
     halo_slot: dict[tuple[int, int], int] = {}
     round_perms: list[list[tuple[int, int]]] = [[] for _ in range(n_rounds)]
     for e, (a, b) in enumerate(und_pairs):
         c = int(colors[e])
-        for (o, r) in ((a, b), (b, a)):              # both directions
+        for (o, r) in ((a, b), (b, a)):
             need = need_map.get((r, o))
             if need is None or len(need) == 0:
                 continue
-            loc = (need - block_of[part[need]] * 0   # local index on owner
-                   ) % B  # placeholder, fixed below
             loc = rank_in_block[need].astype(np.int32)
             send_idx[o, c, :len(need)] = loc
             send_mask[o, c, :len(need)] = 1.0
             for p, u in enumerate(need):
                 halo_slot[(r, int(u))] = B + c * S + p
-        # schedule: o->r and r->o in the same round (bidirectional swap)
         round_perms[c].append((a, b))
         round_perms[c].append((b, a))
 
-    # local matrix in padded-COO with remapped columns
     rows_l = rank_in_block[src].astype(np.int32)
     cols_l = np.empty(len(dst), dtype=np.int32)
     same = ~ext
     cols_l[same] = rank_in_block[dst[same]].astype(np.int32)
-    ext_ids = np.nonzero(ext)[0]
-    for i in ext_ids:
+    for i in np.nonzero(ext)[0]:
         cols_l[i] = halo_slot[(int(part[src[i]]), int(dst[i]))]
     own = part[src]
     per_blk = np.bincount(own, minlength=k)
@@ -158,7 +347,6 @@ def build_plan(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
     rows_a = np.zeros((k, nnz_pad), dtype=np.int32)
     cols_a = np.zeros((k, nnz_pad), dtype=np.int32)
     vals_a = np.zeros((k, nnz_pad), dtype=np.float32)
-    fill = np.zeros(k, dtype=np.int64)
     ord2 = np.argsort(own, kind="stable")
     off = np.zeros(k + 1, dtype=np.int64)
     np.cumsum(per_blk, out=off[1:])
@@ -172,12 +360,17 @@ def build_plan(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
     for b in range(k):
         row_mask[b, :sizes[b]] = 1.0
 
+    blk_e = own[ord2]
     return DistPlan(
         k=k, B=B, S=S, n_rounds=n_rounds, n=n, perm=perm, block_of=block_of,
+        sizes=sizes,
         rows=jnp.asarray(rows_a), cols=jnp.asarray(cols_a),
         vals=jnp.asarray(vals_a), row_mask=jnp.asarray(row_mask),
         send_idx=jnp.asarray(send_idx), send_mask=jnp.asarray(send_mask),
         round_perms=tuple(tuple(r) for r in round_perms),
+        _pack_blk=blk_e,
+        _pack_pos=np.arange(len(src)) - off[blk_e],
+        _pack_dst=dst[ord2],
     )
 
 
@@ -201,26 +394,26 @@ def _halo_exchange(plan: DistPlan, x_loc, send_idx, send_mask, axis: str):
 
 def make_dist_spmv(plan: DistPlan, mesh: Mesh, axis: str = "pu",
                    comm: str = "halo") -> Callable:
-    """Returns jit'd y = A @ x on (k, B) block-major vectors."""
+    """Returns jit'd y = A @ x on (k, B) block-major vectors.
+
+    ``comm='halo'`` exchanges only the boundary via edge-colored ppermute
+    rounds; ``comm='allgather'`` gathers the whole padded vector (the
+    partitioner-oblivious baseline) using ``plan.cols_global``.
+    """
+    if comm == "allgather":
+        return make_dist_spmv_allgather(plan, plan.cols_global, mesh, axis)
+    if comm != "halo":
+        raise ValueError(f"unknown comm mode {comm!r}")
 
     def local_matvec(rows, cols, vals, row_mask, send_idx, send_mask, x):
         x = x[0]                                            # (B,)
-        if comm == "halo":
-            x_ext = _halo_exchange(plan, x, send_idx[0], send_mask[0], axis)
-        elif comm == "allgather":
-            x_all = jax.lax.all_gather(x, axis)             # (k, B)
-            # columns for remote entries index halo slots; rebuild them from
-            # the halo layout is halo-specific, so allgather mode instead
-            # uses global padded ids: col_global = blk*B + loc.  We pass the
-            # same cols but they are remapped by the caller (see
-            # make_dist_spmv_allgather).
-            raise RuntimeError("use make_dist_spmv_allgather")
+        x_ext = _halo_exchange(plan, x, send_idx[0], send_mask[0], axis)
         y = jnp.zeros(plan.B, jnp.float32).at[rows[0]].add(
             vals[0] * x_ext[cols[0]])
         return (y * row_mask[0])[None]
 
     spec = P(axis)
-    fn = jax.shard_map(
+    fn = shard_map(
         local_matvec, mesh=mesh,
         in_specs=(spec,) * 6 + (spec,), out_specs=spec)
 
@@ -232,25 +425,6 @@ def make_dist_spmv(plan: DistPlan, mesh: Mesh, axis: str = "pu",
     return spmv
 
 
-def build_allgather_cols(plan: DistPlan, indptr, indices, part) -> jnp.ndarray:
-    """Column ids in global padded space (blk*B + rank) for allgather mode."""
-    n = len(indptr) - 1
-    src = np.repeat(np.arange(n), np.diff(indptr))
-    own = part[src]
-    k, B = plan.k, plan.B
-    new_id = plan.perm[indices]                     # padded global id
-    per_blk = np.bincount(own, minlength=k)
-    nnz_pad = plan.rows.shape[1]
-    cols_a = np.zeros((k, nnz_pad), dtype=np.int32)
-    ord2 = np.argsort(own, kind="stable")
-    off = np.zeros(k + 1, dtype=np.int64)
-    np.cumsum(per_blk, out=off[1:])
-    for b in range(k):
-        sl = ord2[off[b]:off[b + 1]]
-        cols_a[b, :len(sl)] = new_id[sl]
-    return jnp.asarray(cols_a)
-
-
 def make_dist_spmv_allgather(plan: DistPlan, cols_global: jnp.ndarray,
                              mesh: Mesh, axis: str = "pu") -> Callable:
     def local_matvec(rows, cols, vals, row_mask, x):
@@ -260,8 +434,8 @@ def make_dist_spmv_allgather(plan: DistPlan, cols_global: jnp.ndarray,
         return (y * row_mask[0])[None]
 
     spec = P(axis)
-    fn = jax.shard_map(local_matvec, mesh=mesh,
-                       in_specs=(spec,) * 5, out_specs=spec)
+    fn = shard_map(local_matvec, mesh=mesh,
+                   in_specs=(spec,) * 5, out_specs=spec)
 
     @jax.jit
     def spmv(x):
@@ -271,16 +445,28 @@ def make_dist_spmv_allgather(plan: DistPlan, cols_global: jnp.ndarray,
 
 
 def make_dist_cg(plan: DistPlan, mesh: Mesh, axis: str = "pu",
-                 tol: float = 1e-6, max_iters: int = 500) -> Callable:
+                 tol: float = 1e-6, max_iters: int = 500,
+                 comm: str = "halo") -> Callable:
     """Whole-CG SPMD program: the while_loop runs inside shard_map; dot
-    products are psum-reduced local dots; the matvec uses the halo rounds."""
+    products are psum-reduced local dots; the matvec uses the edge-colored
+    halo rounds (``comm='halo'``) or the full-vector all_gather baseline
+    (``comm='allgather'``).
+
+    This is the fused fast path; the composable path is
+    ``operator.DistributedOperator`` + the generic ``cg.cg_solve``."""
+    if comm not in ("halo", "allgather"):
+        raise ValueError(f"unknown comm mode {comm!r}")
+    cols_dev = plan.cols if comm == "halo" else plan.cols_global
 
     def cg_local(rows, cols, vals, row_mask, send_idx, send_mask, b):
         rows, cols, vals, row_mask = rows[0], cols[0], vals[0], row_mask[0]
         send_idx, send_mask, b = send_idx[0], send_mask[0], b[0]
 
         def matvec(x):
-            x_ext = _halo_exchange(plan, x, send_idx, send_mask, axis)
+            if comm == "halo":
+                x_ext = _halo_exchange(plan, x, send_idx, send_mask, axis)
+            else:
+                x_ext = jax.lax.all_gather(x, axis).reshape(-1)  # (k*B,)
             y = jnp.zeros(plan.B, jnp.float32).at[rows].add(
                 vals * x_ext[cols])
             return y * row_mask
@@ -312,12 +498,12 @@ def make_dist_cg(plan: DistPlan, mesh: Mesh, axis: str = "pu",
         return x[None], rs[None], it[None]
 
     spec = P(axis)
-    fn = jax.shard_map(cg_local, mesh=mesh, in_specs=(spec,) * 7,
-                       out_specs=(spec, spec, spec))
+    fn = shard_map(cg_local, mesh=mesh, in_specs=(spec,) * 7,
+                   out_specs=(spec, spec, spec))
 
     @jax.jit
     def solve(b):
-        x, rs, it = fn(plan.rows, plan.cols, plan.vals, plan.row_mask,
+        x, rs, it = fn(plan.rows, cols_dev, plan.vals, plan.row_mask,
                        plan.send_idx, plan.send_mask, b)
         return x, jnp.sqrt(rs[0]), it[0]
 

@@ -1,0 +1,215 @@
+"""The Operator protocol — one interface over every SpMV backend.
+
+The paper's phase-2 evaluation (Sec. VI-a) runs the *same* SpMV/CG
+application against matrices distributed by different partitioners; this
+module is the code shape of that idea: a backend-agnostic linear-operator
+interface so that one ``cg_solve`` and one benchmark harness drive
+
+  * ``coo``            — single-device padded-COO segment-sum (spmv.py);
+  * ``bell``           — the Pallas block-ELL TPU kernel
+                         (kernels/spmv_bell.py), compiled on TPU and
+                         interpreted elsewhere (backend auto-detection);
+  * ``dist_halo``      — shard_map, edge-colored ppermute halo exchange;
+  * ``dist_allgather`` — shard_map, all_gather baseline.
+
+Protocol
+--------
+An Operator is any object with
+
+  ``n``             — true global dimension;
+  ``matvec(x)``     — y = A @ x in *operator space* (the backend's native
+                      layout: (n,) for single-device, (k, B) padded
+                      block-major for distributed);
+  ``dot(u, v)``     — inner product in operator space (plain vdot is exact
+                      for the distributed layout because padding rows stay
+                      zero under matvec and scatter);
+  ``scatter(x)``    — (n,) global numpy vector -> operator space;
+  ``gather(y)``     — operator space -> (n,) global numpy vector.
+
+``cg.cg_solve`` accepts an Operator directly; :func:`cg_solve_global` adds the
+scatter/solve/gather round trip so callers never touch layouts.
+``make_operator`` is the single factory the benchmark harness uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+import jax.numpy as jnp
+import numpy as np
+
+from .cg import CGResult, cg_solve
+from .distributed import DistPlan, build_plan, make_dist_cg, make_dist_spmv
+from .spmv import csr_to_padded_coo, spmv_coo
+
+
+@runtime_checkable
+class Operator(Protocol):
+    """Structural protocol — see module docstring for the contract."""
+
+    n: int
+
+    def matvec(self, x): ...
+
+    def dot(self, u, v): ...
+
+    def scatter(self, x): ...
+
+    def gather(self, y): ...
+
+
+# --------------------------------------------------------------------------
+# Single-device backends
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CooOperator:
+    """Padded-COO segment-sum SpMV (any backend, any sparsity)."""
+
+    n: int
+    rows: jnp.ndarray
+    cols: jnp.ndarray
+    vals: jnp.ndarray
+
+    @classmethod
+    def from_csr(cls, indptr, indices, data, nnz_pad: int | None = None):
+        rows, cols, vals = csr_to_padded_coo(indptr, indices, data,
+                                             nnz_pad=nnz_pad)
+        return cls(n=len(indptr) - 1, rows=jnp.asarray(rows),
+                   cols=jnp.asarray(cols), vals=jnp.asarray(vals))
+
+    def matvec(self, x):
+        return spmv_coo(self.rows, self.cols, self.vals, x, n=self.n)
+
+    def dot(self, u, v):
+        return jnp.vdot(u, v)
+
+    def scatter(self, x):
+        return jnp.asarray(np.asarray(x, dtype=np.float32))
+
+    def gather(self, y):
+        return np.asarray(y)
+
+
+@dataclasses.dataclass
+class BlockEllOperator:
+    """Pallas block-ELL SpMV (TPU-compiled; interpreted off-TPU)."""
+
+    n: int
+    blocks: jnp.ndarray
+    cols: jnp.ndarray
+    interpret: bool | None = None
+
+    @classmethod
+    def from_csr(cls, indptr, indices, data, bm: int = 8, bk: int = 128,
+                 nnzb: int | None = None, interpret: bool | None = None):
+        from ..kernels.spmv_bell import csr_to_block_ell
+        n = len(indptr) - 1
+        blocks, cols, _meta = csr_to_block_ell(indptr, indices, data, n,
+                                               bm=bm, bk=bk, nnzb=nnzb)
+        return cls(n=n, blocks=jnp.asarray(blocks), cols=jnp.asarray(cols),
+                   interpret=interpret)
+
+    def matvec(self, x):
+        from ..kernels.spmv_bell import spmv_block_ell
+        return spmv_block_ell(self.blocks, self.cols, x,
+                              interpret=self.interpret)
+
+    def dot(self, u, v):
+        return jnp.vdot(u, v)
+
+    def scatter(self, x):
+        return jnp.asarray(np.asarray(x, dtype=np.float32))
+
+    def gather(self, y):
+        return np.asarray(y)
+
+
+# --------------------------------------------------------------------------
+# Distributed backend
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DistributedOperator:
+    """shard_map SpMV over a partition plan (halo or allgather exchange).
+
+    Operator space is the (k, B) padded block-major layout; ``dot`` is a
+    plain vdot because ghost rows are zero in both vectors.  ``solve``
+    exposes the fused whole-CG-in-shard_map program (one dispatch total)
+    next to the composable ``cg_solve(op, ...)`` path (one dispatch per
+    matvec) — both converge identically; the fused one is faster when
+    dispatch overhead dominates.
+    """
+
+    plan: DistPlan
+    mesh: object
+    axis: str = "pu"
+    comm: str = "halo"
+
+    def __post_init__(self):
+        self.n = self.plan.n
+        self._spmv = make_dist_spmv(self.plan, self.mesh, axis=self.axis,
+                                    comm=self.comm)
+        self._fused = {}          # (tol, max_iters) -> compiled CG program
+
+    @classmethod
+    def from_csr(cls, indptr, indices, data, part, k, mesh,
+                 axis: str = "pu", comm: str = "halo"):
+        plan = build_plan(indptr, indices, data, part, k)
+        return cls(plan=plan, mesh=mesh, axis=axis, comm=comm)
+
+    def matvec(self, x):
+        return self._spmv(x)
+
+    def dot(self, u, v):
+        return jnp.vdot(u, v)
+
+    def scatter(self, x):
+        return jnp.asarray(self.plan.scatter_vec(np.asarray(x)))
+
+    def gather(self, y):
+        return self.plan.gather_vec(np.asarray(y))
+
+    def solve(self, b, tol: float = 1e-6, max_iters: int = 500) -> CGResult:
+        """Fused distributed CG on a (n,) global right-hand side.  The
+        traced program is cached per (tol, max_iters) — repeated solves
+        with new right-hand sides pay no re-trace."""
+        key = (tol, max_iters)
+        fused = self._fused.get(key)
+        if fused is None:
+            fused = self._fused[key] = make_dist_cg(
+                self.plan, self.mesh, axis=self.axis,
+                tol=tol, max_iters=max_iters, comm=self.comm)
+        x, res, it = fused(self.scatter(b))
+        return CGResult(x=x, iters=it, residual=res)
+
+
+# --------------------------------------------------------------------------
+# Factory + harness entry point
+# --------------------------------------------------------------------------
+
+BACKENDS = ("coo", "bell", "dist_halo", "dist_allgather")
+
+
+def make_operator(indptr, indices, data, backend: str = "coo", *,
+                  part=None, k: int | None = None, mesh=None,
+                  axis: str = "pu", **kw) -> Operator:
+    """One factory for every SpMV backend (see BACKENDS)."""
+    if backend == "coo":
+        return CooOperator.from_csr(indptr, indices, data, **kw)
+    if backend == "bell":
+        return BlockEllOperator.from_csr(indptr, indices, data, **kw)
+    if backend in ("dist_halo", "dist_allgather"):
+        if part is None or k is None or mesh is None:
+            raise ValueError(f"{backend} needs part=, k=, mesh=")
+        comm = "halo" if backend == "dist_halo" else "allgather"
+        return DistributedOperator.from_csr(indptr, indices, data, part, k,
+                                            mesh, axis=axis, comm=comm)
+    raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
+
+
+def cg_solve_global(op: Operator, b: np.ndarray, tol: float = 1e-6,
+             max_iters: int = 500) -> tuple[np.ndarray, int, float]:
+    """Scatter -> generic CG -> gather.  Returns (x_global, iters, res)."""
+    res = cg_solve(op, op.scatter(b), tol=tol, max_iters=max_iters)
+    return op.gather(res.x), int(res.iters), float(res.residual)

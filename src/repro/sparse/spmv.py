@@ -28,10 +28,12 @@ def csr_to_padded_coo(indptr: np.ndarray, indices: np.ndarray,
     return out_r, out_c, out_v
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("n",))
 def spmv_coo(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
              x: jnp.ndarray, n: int | None = None) -> jnp.ndarray:
-    """y = A @ x for padded COO."""
+    """y = A @ x for padded COO.  ``n`` (the output size) must be static:
+    it shapes the segment-sum target, so it is a ``static_argnames`` entry
+    rather than a traced operand."""
     n = n if n is not None else x.shape[0]
     return jnp.zeros(n, vals.dtype).at[rows].add(vals * x[cols])
 

@@ -19,6 +19,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..compat import SUPPORTS_PARTIAL_MANUAL, shard_map
+
 
 def compressed_psum(tree, axis: str, bits: int = 8):
     """Quantized sum over a (manual) mesh axis.  bits=8 only for now."""
@@ -73,9 +75,14 @@ def podwise_value_and_grad(loss_fn, mesh, batch_specs, *,
     # — so the int8 pod reduction is numerically validated (tests) but
     # kept OFF by default until the boundary preserves auto shardings
     # (jax.sharding.Infer rejects Auto-typed meshes in this version).
-    return jax.shard_map(
+    #
+    # Compat: where partial-manual is unsupported (see compat), the program
+    # is fully manual over every mesh axis — the pod-axis wire traffic
+    # (int8 all-gather) is identical, the data/model axes just recompute
+    # redundantly inside each pod.
+    kw = {"axis_names": {"pod"}} if SUPPORTS_PARTIAL_MANUAL else {}
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(), b_specs),
         out_specs=(P(), P()),
-        axis_names={"pod"},
-        check_vma=False)
+        check_rep=False, **kw)

@@ -1,0 +1,27 @@
+"""Shared pytest configuration.
+
+Graceful degradation when optional dev dependencies are missing: test
+modules that import ``hypothesis`` are excluded from collection (instead
+of erroring the whole run) when the package is not installed.  Install
+dev deps with ``pip install -r requirements-dev.txt`` (or ``make deps``)
+to run the property-based suites too.
+"""
+import importlib.util
+import pathlib
+import re
+import warnings
+
+collect_ignore = []
+
+_IMPORTS_HYPOTHESIS = re.compile(r"^\s*(from|import)\s+hypothesis\b", re.M)
+
+if importlib.util.find_spec("hypothesis") is None:
+    _here = pathlib.Path(__file__).parent
+    collect_ignore = sorted(
+        p.name for p in _here.glob("test_*.py")
+        if _IMPORTS_HYPOTHESIS.search(p.read_text(encoding="utf-8")))
+    if collect_ignore:
+        warnings.warn(
+            "hypothesis is not installed; skipping property-based test "
+            f"modules: {', '.join(collect_ignore)} "
+            "(pip install -r requirements-dev.txt)")

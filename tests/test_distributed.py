@@ -1,5 +1,10 @@
 """Distributed SpMV/CG over shard_map — run in a subprocess with 8 forced
-host devices (the main pytest process must keep the default 1 device)."""
+host devices (the main pytest process must keep the default 1 device).
+
+Exercises the Operator protocol end-to-end: dist_halo and dist_allgather
+backends against the scipy oracle, the fused whole-CG shard_map program,
+the generic cg_solve driving the distributed operator, and cross-backend
+agreement with the single-device padded-COO operator."""
 import json
 import subprocess
 import sys
@@ -16,8 +21,7 @@ SCRIPT = textwrap.dedent("""
     from repro.core import Topology, scale_to_load, partition
     from repro.sparse.generators import rdg
     from repro.sparse.graph import laplacian_csr
-    from repro.sparse.distributed import (build_plan, make_dist_spmv,
-        make_dist_cg, build_allgather_cols, make_dist_spmv_allgather)
+    from repro.sparse import make_operator, cg_solve_global
     import scipy.sparse as sp
 
     g = rdg(2000, seed=11)
@@ -25,35 +29,49 @@ SCRIPT = textwrap.dedent("""
     part, tw = partition(g, topo, "geoRef")
     indptr, indices, data = laplacian_csr(g, shift=1e-2)
     A = sp.csr_matrix((data, indices, indptr), shape=(g.n, g.n))
-    plan = build_plan(indptr, indices, data, part, 8)
     mesh = jax.sharding.Mesh(np.array(jax.devices()), ("pu",))
 
     rng = np.random.default_rng(3)
     x = rng.normal(size=g.n).astype(np.float32)
-    xb = jnp.asarray(plan.scatter_vec(x))
+    b = rng.normal(size=g.n).astype(np.float32)
 
-    spmv = make_dist_spmv(plan, mesh)
-    err_halo = float(np.abs(plan.gather_vec(np.asarray(spmv(xb)))
+    op_h = make_operator(indptr, indices, data, "dist_halo",
+                         part=part, k=8, mesh=mesh)
+    op_a = make_operator(indptr, indices, data, "dist_allgather",
+                         part=part, k=8, mesh=mesh)
+    err_halo = float(np.abs(op_h.gather(op_h.matvec(op_h.scatter(x)))
                             - A @ x).max())
-
-    cols_g = build_allgather_cols(plan, indptr, indices, part)
-    spmv2 = make_dist_spmv_allgather(plan, cols_g, mesh)
-    err_ag = float(np.abs(plan.gather_vec(np.asarray(spmv2(xb)))
+    err_ag = float(np.abs(op_a.gather(op_a.matvec(op_a.scatter(x)))
                           - A @ x).max())
 
-    b = rng.normal(size=g.n).astype(np.float32)
-    cg = make_dist_cg(plan, mesh, tol=1e-6, max_iters=1500)
-    xs, res, iters = cg(jnp.asarray(plan.scatter_vec(b)))
-    xg = plan.gather_vec(np.asarray(xs))
+    # fused whole-CG shard_map program (halo and allgather comm modes)
+    res = op_h.solve(b, tol=1e-6, max_iters=1500)
+    xg = op_h.gather(res.x)
     rel = float(np.linalg.norm(A @ xg - b) / np.linalg.norm(b))
+    res_a = op_a.solve(b, tol=1e-6, max_iters=1500)
+    rel_ag = float(np.linalg.norm(A @ op_a.gather(res_a.x) - b)
+                   / np.linalg.norm(b))
 
-    # round-trip of scatter/gather
+    # generic cg_solve driving the same operator (composable path)
+    xg2, iters2, _ = cg_solve_global(op_h, b, tol=1e-6, max_iters=1500)
+    rel2 = float(np.linalg.norm(A @ xg2 - b) / np.linalg.norm(b))
+
+    # cross-backend agreement: single-device COO on the same system
+    xc, _, _ = cg_solve_global(make_operator(indptr, indices, data, "coo"), b,
+                        tol=1e-6, max_iters=1500)
+    cross = float(np.abs(np.asarray(xc) - xg2).max()
+                  / max(np.abs(xc).max(), 1e-30))
+
+    plan = op_h.plan
     rt = float(np.abs(plan.gather_vec(plan.scatter_vec(x)) - x).max())
 
     print(json.dumps({
         "err_halo": err_halo, "err_ag": err_ag, "cg_rel": rel,
-        "iters": int(iters), "roundtrip": rt,
-        "rounds": plan.n_rounds, "halo_slots": plan.S,
+        "iters": int(res.iters), "cg_rel_generic": rel2,
+        "iters_generic": int(iters2), "cross_backend_rel": cross,
+        "cg_rel_allgather_fused": rel_ag,
+        "iters_allgather_fused": int(res_a.iters),
+        "roundtrip": rt, "rounds": plan.n_rounds, "halo_slots": plan.S,
     }))
 """)
 
@@ -79,10 +97,26 @@ def test_distributed_cg_converges(dist_results):
     assert dist_results["iters"] < 1500
 
 
+def test_generic_cg_drives_distributed_operator(dist_results):
+    assert dist_results["cg_rel_generic"] < 1e-3
+    assert dist_results["iters_generic"] < 1500
+
+
+def test_fused_cg_allgather_comm_mode(dist_results):
+    # regression: solve() must honor comm="allgather", not silently halo
+    assert dist_results["cg_rel_allgather_fused"] < 1e-3
+    assert dist_results["iters_allgather_fused"] < 1500
+
+
+def test_cross_backend_agreement(dist_results):
+    # COO (single device) and halo shard_map CG agree on the solution
+    assert dist_results["cross_backend_rel"] < 1e-3
+
+
 def test_scatter_gather_roundtrip(dist_results):
     assert dist_results["roundtrip"] == 0.0
 
 
 def test_edge_coloring_rounds_bounded(dist_results):
-    # 8 blocks => quotient graph degree <= 7; greedy coloring <= 2*7-1
-    assert 1 <= dist_results["rounds"] <= 13
+    # 8 blocks => quotient degree <= 7; Misra-Gries (Vizing) <= Delta+1 = 8
+    assert 1 <= dist_results["rounds"] <= 8

@@ -13,6 +13,7 @@ SCRIPT = textwrap.dedent("""
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.models.config import ModelConfig
     from repro.models import transformer
+    from repro.compat import use_mesh
     from repro.models.steps import make_train_step, input_specs
     from repro.train.optimizer import AdamWConfig, init_opt_state
 
@@ -21,7 +22,7 @@ SCRIPT = textwrap.dedent("""
                       dtype="float32")
     mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
     B, S = 8, 16
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         params, _ = transformer.init_model(jax.random.PRNGKey(0), cfg,
                                            mesh.axis_names)
         state = {"params": params, "opt": init_opt_state(params)}

@@ -11,6 +11,7 @@ SCRIPT = textwrap.dedent("""
     import json
     import jax, jax.numpy as jnp
     import numpy as np
+    from repro.compat import use_mesh
     from repro.models.common import ParamCollector
     from repro.models.mlp import init_moe, moe_forward
 
@@ -26,7 +27,7 @@ SCRIPT = textwrap.dedent("""
         return jnp.sum(y ** 2) + 0.01 * a
 
     out = {}
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         y_d, a_d = jax.jit(lambda p, x: moe_forward(
             p, x, n_experts=E, top_k=K, capacity_factor=1.25,
             impl="dense"))(p, x)

@@ -1,0 +1,86 @@
+"""Operator protocol: single-device backends through the one cg_solve.
+
+(The distributed backends go through the same interface in the
+8-device subprocess of tests/test_distributed.py.)
+"""
+import numpy as np
+import pytest
+
+from repro.sparse import (BlockEllOperator, CooOperator, Operator,
+                          cg_solve, make_operator, cg_solve_global)
+from repro.sparse.generators import rdg
+from repro.sparse.graph import laplacian_csr
+
+
+@pytest.fixture(scope="module")
+def system():
+    # small instance: the interpreted Pallas kernel's grid is O(S * NNZB)
+    # and a whole-CG trace multiplies it; shift=0.1 keeps the condition
+    # number low enough for tight cross-backend agreement in f32
+    g = rdg(300, seed=5)
+    indptr, indices, data = laplacian_csr(g, shift=0.1)
+    import scipy.sparse as sp
+    A = sp.csr_matrix((data, indices, indptr), shape=(g.n, g.n))
+    b = np.random.default_rng(1).normal(size=g.n).astype(np.float32)
+    return (indptr, indices, data), A, b
+
+
+def test_factory_and_protocol(system):
+    (indptr, indices, data), A, b = system
+    for backend in ("coo", "bell"):
+        op = make_operator(indptr, indices, data, backend)
+        assert isinstance(op, Operator)
+        assert op.n == A.shape[0]
+    assert isinstance(make_operator(indptr, indices, data, "coo"),
+                      CooOperator)
+    assert isinstance(make_operator(indptr, indices, data, "bell"),
+                      BlockEllOperator)
+    with pytest.raises(ValueError):
+        make_operator(indptr, indices, data, "nope")
+    with pytest.raises(ValueError):
+        make_operator(indptr, indices, data, "dist_halo")   # missing part/k
+
+
+@pytest.mark.parametrize("backend", ["coo", "bell"])
+def test_matvec_matches_scipy(system, backend):
+    (indptr, indices, data), A, b = system
+    op = make_operator(indptr, indices, data, backend)
+    x = np.random.default_rng(0).normal(size=op.n).astype(np.float32)
+    y = op.gather(op.matvec(op.scatter(x)))
+    np.testing.assert_allclose(y, A @ x, atol=1e-4, rtol=1e-4)
+
+
+def test_cg_backends_agree(system):
+    (indptr, indices, data), A, b = system
+    sols = {}
+    for backend in ("coo", "bell"):
+        op = make_operator(indptr, indices, data, backend)
+        x, iters, res = cg_solve_global(op, b, tol=1e-7, max_iters=2000)
+        rel = np.linalg.norm(A @ x - b) / np.linalg.norm(b)
+        assert rel < 1e-4, (backend, rel)
+        sols[backend] = x
+    scale = np.abs(sols["coo"]).max()
+    assert np.abs(sols["coo"] - sols["bell"]).max() / scale < 1e-5
+
+
+def test_cg_solve_accepts_operator_or_callable(system):
+    (indptr, indices, data), A, b = system
+    import jax.numpy as jnp
+    op = make_operator(indptr, indices, data, "coo")
+    r1 = cg_solve(op, jnp.asarray(b), tol=1e-6, max_iters=2000)
+    r2 = cg_solve(op.matvec, jnp.asarray(b), tol=1e-6, max_iters=2000)
+    np.testing.assert_allclose(np.asarray(r1.x), np.asarray(r2.x),
+                               atol=1e-6)
+    assert int(r1.iters) == int(r2.iters)
+
+
+def test_spmv_coo_accepts_explicit_static_n():
+    # regression: n was a traced arg under jit and crashed jnp.zeros(n)
+    import jax.numpy as jnp
+    from repro.sparse.spmv import spmv_coo
+    rows = jnp.asarray([0, 1, 2])
+    cols = jnp.asarray([0, 1, 0])
+    vals = jnp.asarray([1.0, 2.0, 3.0])
+    x = jnp.asarray([1.0, 1.0])
+    y = spmv_coo(rows, cols, vals, x, n=3)
+    np.testing.assert_allclose(np.asarray(y), [1.0, 2.0, 3.0])
