@@ -11,9 +11,16 @@ Two measurements per partitioner:
 Plus the Operator-era rows:
   * ``build_plan`` vectorization speedup vs the seed per-edge builder
     (256x256 grid Laplacian, k=8, random partition = maximal boundary);
-  * cross-backend CG agreement (coo / bell / dist_halo / dist_allgather
-    through the one ``make_operator`` + ``cg_solve_global`` harness, the
-    distributed ones on 8 forced host devices in a subprocess).
+  * cross-backend CG agreement (coo / bell / dist_halo (overlapped) /
+    dist_halo_seq / dist_bell / dist_allgather, plus Jacobi-preconditioned
+    variants, through the one ``make_operator`` + ``cg_solve_global``
+    harness, the distributed ones on 8 forced host devices in a
+    subprocess);
+  * overlapped vs sequential halo SpMV microseconds.  Caveat: on forced
+    host devices a ppermute is a same-process memcpy with no latency to
+    hide, so the overlapped schedule's split (two scatter-adds instead of
+    one) shows pure overhead here; the win appears on real interconnects
+    where the interior matvec runs while the rounds are in flight.
 """
 from __future__ import annotations
 
@@ -55,26 +62,34 @@ DIST_SCRIPT = textwrap.dedent("""
 
     out = {}
     sols = {}
-    for backend in ("coo", "bell", "dist_halo", "dist_allgather"):
+    for name in ("coo", "coo+jacobi", "bell", "dist_halo",
+                 "dist_halo+jacobi", "dist_halo_seq", "dist_bell",
+                 "dist_allgather"):
+        backend, _, variant = name.partition("+")
         kw = (dict(part=part, k=8, mesh=mesh)
               if backend.startswith("dist") else {})
         op = make_operator(indptr, indices, data, backend, **kw)
         t0 = time.perf_counter()
-        x, iters, res = cg_solve_global(op, b, tol=1e-7, max_iters=2000)
-        out[backend] = {"iters": iters, "res": res,
-                        "wall_us": (time.perf_counter() - t0) * 1e6}
-        sols[backend] = x
+        x, iters, res = cg_solve_global(op, b, tol=1e-7, max_iters=2000,
+                                        precondition=variant or None)
+        out[name] = {"iters": iters, "res": res,
+                     "wall_us": (time.perf_counter() - t0) * 1e6}
+        sols[name] = x
     scale = float(np.abs(sols["coo"]).max())
     out["max_pairwise_rel"] = max(
         float(np.abs(sols[a] - sols[b2]).max()) / scale
         for a in sols for b2 in sols if a < b2)
 
-    # halo vs allgather SpMV microseconds on a bigger mesh (n=2000)
-    g = rdg(2000, seed=11)
+    # overlapped vs sequential halo vs allgather SpMV microseconds.
+    # Locality-preserving stripes on a 64x32 grid: interior rows dominate
+    # (the regime the overlap targets), unlike the worst-case random
+    # partition above where nearly every row is boundary.
+    from repro.sparse.generators import grid
+    g = grid((64, 32))
     indptr, indices, data = laplacian_csr(g, shift=1e-2)
-    part = np.random.default_rng(2).integers(0, 8, g.n)
+    part = (np.arange(g.n) * 8) // g.n
     xb = None
-    for backend in ("dist_halo", "dist_allgather"):
+    for backend in ("dist_halo", "dist_halo_seq", "dist_allgather"):
         op = make_operator(indptr, indices, data, backend,
                            part=part, k=8, mesh=mesh)
         xb = op.scatter(np.random.default_rng(3).normal(
@@ -118,17 +133,24 @@ def _bench_operator_backends(rows: list[str]) -> None:
                         proc.stderr[-200:].replace(",", ";")))
         return
     out = json.loads(proc.stdout.strip().splitlines()[-1])
-    for backend in ("coo", "bell", "dist_halo", "dist_allgather"):
-        r = out[backend]
-        rows.append(row(f"cg_operator__{backend}", r["wall_us"],
+    for name in ("coo", "coo+jacobi", "bell", "dist_halo",
+                 "dist_halo+jacobi", "dist_halo_seq", "dist_bell",
+                 "dist_allgather"):
+        r = out[name]
+        rows.append(row(f"cg_operator__{name.replace('+', '_')}",
+                        r["wall_us"],
                         f"iters={r['iters']};res={r['res']:.2e}"))
     rows.append(row("cg_operator__max_pairwise_rel",
                     out["max_pairwise_rel"] * 1e6,   # in 1e-6 units
                     f"agree_1e-5={int(out['max_pairwise_rel'] < 1e-5)}"))
-    rows.append(row("dist_spmv_halo", out["dist_halo_spmv_us"],
-                    "n=2000;k=8"))
+    rows.append(row("dist_spmv_halo_overlapped", out["dist_halo_spmv_us"],
+                    "grid64x32;k=8;stripes"))
+    rows.append(row("dist_spmv_halo_sequential",
+                    out["dist_halo_seq_spmv_us"],
+                    f"overlap_speedup="
+                    f"{out['dist_halo_seq_spmv_us'] / out['dist_halo_spmv_us']:.2f}x"))
     rows.append(row("dist_spmv_allgather", out["dist_allgather_spmv_us"],
-                    "n=2000;k=8"))
+                    "grid64x32;k=8;stripes"))
 
 
 def run() -> list[str]:

@@ -78,6 +78,59 @@ def csr_to_block_ell(indptr: np.ndarray, indices: np.ndarray,
     return blocks, cols, meta
 
 
+def padded_coo_to_block_ell(rows: np.ndarray, cols: np.ndarray,
+                            vals: np.ndarray, n: int, bm: int = 8,
+                            bk: int = 128, nnzb: int | None = None):
+    """Convert padded COO (one device's local block) to block-ELL.
+
+    Unlike :func:`csr_to_block_ell` this is fully vectorized NumPy — no
+    per-row Python — so the distributed operator can convert every local
+    block at plan-build time.  Zero-valued entries (the padding convention
+    of the packed layouts in ``sparse.distributed``) are dropped before
+    blocking, so padded slots never allocate a panel.
+
+    Returns (blocks, cols, meta) with the same shapes/semantics as
+    :func:`csr_to_block_ell`: blocks (S, NNZB, BM, BK) f32, cols (S, NNZB)
+    int32, NNZB defaulting to the max #panels touched by any stripe
+    (lossless).  Panels within a stripe are ordered by column-panel index
+    (not by density): block-ELL SpMV is order-invariant, and the sorted
+    order falls out of the radix sort for free.
+    """
+    rows = np.asarray(rows).ravel()
+    cols = np.asarray(cols).ravel()
+    vals = np.asarray(vals, dtype=np.float32).ravel()
+    live = vals != 0
+    rows, cols, vals = rows[live], cols[live], vals[live]
+    S = max(-(-n // bm), 1)
+    stripe = rows // bm
+    panel = cols // bk
+    Pn = max(-(-int(cols.max() + 1) // bk), 1) if len(cols) else 1
+    key = stripe.astype(np.int64) * Pn + panel
+    uniq, inv = np.unique(key, return_inverse=True)
+    u_stripe = (uniq // Pn).astype(np.int64)
+    u_panel = (uniq % Pn).astype(np.int32)
+    per_stripe = np.bincount(u_stripe, minlength=S)
+    max_panels = max(int(per_stripe.max()) if len(per_stripe) else 0, 1)
+    if nnzb is None:
+        nnzb = max_panels
+    # slot of each unique (stripe, panel) within its stripe: uniq is sorted
+    # by (stripe, panel), so the slot is the rank inside the stripe group
+    grp_start = np.repeat(np.cumsum(per_stripe) - per_stripe, per_stripe)
+    slot = (np.arange(len(uniq)) - grp_start).astype(np.int64)
+    blocks = np.zeros((S, nnzb, bm, bk), dtype=np.float32)
+    colsb = np.zeros((S, nnzb), dtype=np.int32)
+    u_keep = slot < nnzb
+    colsb[u_stripe[u_keep], slot[u_keep]] = u_panel[u_keep]
+    e_slot = slot[inv]
+    keep = e_slot < nnzb
+    np.add.at(blocks, (stripe[keep], e_slot[keep],
+                       rows[keep] % bm, cols[keep] % bk), vals[keep])
+    kept = int(keep.sum())
+    meta = dict(n=n, bm=bm, bk=bk, nnzb=nnzb,
+                fill=kept / max(len(vals), 1))
+    return blocks, colsb, meta
+
+
 # --------------------------------------------------------------------------
 # Kernel
 # --------------------------------------------------------------------------

@@ -10,11 +10,11 @@ Public surface:
     ``make_operator`` + ``cg_solve_global`` (see its module docstring);
   * ``cg``         — the one CG solver all backends share.
 """
-from .cg import CGResult, cg_solve
+from .cg import CGResult, cg_solve, jacobi_preconditioner
 from .operator import (BACKENDS, BlockEllOperator, CooOperator,
                        DistributedOperator, Operator, make_operator,
                        cg_solve_global)
 
-__all__ = ["CGResult", "cg_solve", "BACKENDS", "Operator", "CooOperator",
-           "BlockEllOperator", "DistributedOperator", "make_operator",
-           "cg_solve_global"]
+__all__ = ["CGResult", "cg_solve", "jacobi_preconditioner", "BACKENDS",
+           "Operator", "CooOperator", "BlockEllOperator",
+           "DistributedOperator", "make_operator", "cg_solve_global"]

@@ -22,24 +22,76 @@ class CGResult(NamedTuple):
     residual: jnp.ndarray
 
 
+def jacobi_preconditioner(diag: jnp.ndarray) -> Callable:
+    """M^-1 r = r / diag(A), with zero diagonal entries (padded ghost rows
+    in the distributed layout) passed through as zero — ghost residuals are
+    exactly zero, so this keeps them out of the Krylov space."""
+    safe = jnp.where(diag != 0, diag, 1.0)
+    inv = jnp.where(diag != 0, 1.0 / safe, 0.0)
+
+    def apply(r):
+        return r * inv
+
+    return apply
+
+
 def cg_solve(matvec: Callable[[jnp.ndarray], jnp.ndarray], b: jnp.ndarray,
              x0: jnp.ndarray | None = None, tol: float = 1e-6,
              max_iters: int = 500,
-             dot: Callable | None = None) -> CGResult:
-    """Unpreconditioned CG.  ``matvec`` is either a callable or an
+             dot: Callable | None = None,
+             precondition: str | Callable | None = None) -> CGResult:
+    """CG / preconditioned CG.  ``matvec`` is either a callable or an
     Operator (``matvec``/``dot`` attributes); ``dot`` may be overridden
-    for distributed use (e.g. a psum-reduced local dot inside shard_map)."""
+    for distributed use (e.g. a psum-reduced local dot inside shard_map).
+
+    ``precondition`` is ``None`` (plain CG), a callable ``z = M^-1(r)``,
+    or the string ``'jacobi'`` — resolved through the Operator's ``diag()``
+    (every backend carries its diagonal on-device).  Convergence is always
+    tested on the *unpreconditioned* residual ||r||^2 <= tol^2 ||b||^2, so
+    preconditioning changes the iteration count, never the stop quality.
+    """
     if hasattr(matvec, "matvec"):
         op = matvec
         matvec = op.matvec
         dot = dot or getattr(op, "dot", None)
+        if precondition == "jacobi":
+            precondition = jacobi_preconditioner(op.diag())
+    if precondition == "jacobi":
+        raise ValueError("precondition='jacobi' needs an Operator with "
+                         "diag(); pass a callable M^-1 instead")
     dot = dot or (lambda u, v: jnp.vdot(u, v))
     x = jnp.zeros_like(b) if x0 is None else x0
     r = b - matvec(x)
-    p = r
-    rs = dot(r, r)
     b2 = dot(b, b)
     tol2 = tol * tol * jnp.maximum(b2, 1e-30)
+
+    if precondition is not None:
+        M = precondition
+        z = M(r)
+        p = z
+        rz = dot(r, z)
+        rr = dot(r, r)
+
+        def cond(state):
+            return (state[4] > tol2) & (state[5] < max_iters)
+
+        def body(state):
+            x, r, p, rz, rr, it = state
+            ap = matvec(p)
+            alpha = rz / (dot(p, ap) + 1e-30)
+            x = x + alpha * p
+            r = r - alpha * ap
+            z = M(r)
+            rz_new = dot(r, z)
+            p = z + (rz_new / (rz + 1e-30)) * p
+            return x, r, p, rz_new, dot(r, r), it + 1
+
+        x, r, p, rz, rr, it = jax.lax.while_loop(
+            cond, body, (x, r, p, rz, rr, jnp.zeros((), jnp.int32)))
+        return CGResult(x=x, iters=it, residual=jnp.sqrt(rr))
+
+    p = r
+    rs = dot(r, r)
 
     def cond(state):
         _, _, _, rs, it = state

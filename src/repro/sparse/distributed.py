@@ -18,11 +18,23 @@ communication schedule Geographer-R uses for its pairwise refinement.  The
 halo buffer layout is (rounds, S) with stable slots, so column indices are
 remapped once on the host.
 
-Both exchange strategies are provided:
-  * ``halo``       — ppermute rounds, comm volume = O(boundary)  [default]
+Three exchange strategies are provided:
+  * ``halo``       — ppermute rounds *overlapped* with compute: each
+                     block's padded COO is split into interior rows (no
+                     halo-slot columns) and boundary rows; the interior
+                     matvec is issued before the ppermute rounds, so XLA
+                     runs it concurrently with the exchange, and only the
+                     boundary accumulation waits on halo data.  [default]
+  * ``halo_seq``   — the sequential schedule (all rounds, then one full
+                     matvec); same plan, kept as the non-overlapped
+                     reference the benchmark compares against.
   * ``allgather``  — all_gather of the whole padded vector, comm volume
                      = O(n); the baseline a partitioner-oblivious system
-                     would use.  The benchmark compares the two.
+                     would use.
+
+Orthogonally, ``local_format`` selects the interior matvec kernel:
+padded-COO scatter-add (``'coo'``) or the Pallas block-ELL kernel of
+kernels/spmv_bell.py (``'bell'``, TPU-compiled, interpreted elsewhere).
 
 Plan construction (:func:`build_plan`) is fully vectorized NumPy —
 ``searchsorted`` / ``unique`` / fancy-index scatter; the only Python loops
@@ -46,6 +58,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from ..compat import shard_map
 from ..core.refinement import vizing_edge_coloring
+from .cg import cg_solve, jacobi_preconditioner
 
 
 @dataclasses.dataclass
@@ -72,12 +85,28 @@ class DistPlan:
     send_idx: jnp.ndarray       # (k, R, S) int32 local indices to send
     send_mask: jnp.ndarray      # (k, R, S) f32
     round_perms: tuple          # per round: tuple of (src, dst) pairs
+    # interior/boundary split of the same nnz set (comm/compute overlap):
+    # a row is *boundary* iff any of its edges reads a halo slot; interior
+    # rows depend only on x_loc, so their matvec is issued before the
+    # ppermute rounds and overlaps with the exchange.  Within each block
+    # the packed edge order of rows/cols/vals is preserved, and
+    # interior + boundary edges exactly tile the block's true nnz.
+    rows_int: jnp.ndarray = None   # (k, nnz_int_pad) int32
+    cols_int: jnp.ndarray = None   # (k, nnz_int_pad) int32, all < B
+    vals_int: jnp.ndarray = None   # (k, nnz_int_pad) f32
+    rows_bnd: jnp.ndarray = None   # (k, nnz_bnd_pad) int32
+    cols_bnd: jnp.ndarray = None   # (k, nnz_bnd_pad) int32, in [0, B+R*S)
+    vals_bnd: jnp.ndarray = None   # (k, nnz_bnd_pad) f32
+    interior_mask: jnp.ndarray = None  # (k, B) f32: real AND interior rows
+    diag: jnp.ndarray = None       # (k, B) f32 diagonal of A (Jacobi)
+    nnz_blk: np.ndarray = None     # (k,) true nnz per block (host)
     # lazy allgather-mode columns: built on first access from the packing
     # order (only the allgather baseline needs them; halo mode never does)
     _pack_blk: np.ndarray = None      # (nnz,) owning block, packed order
     _pack_pos: np.ndarray = None      # (nnz,) slot within block
     _pack_dst: np.ndarray = None      # (nnz,) global dst vertex, packed order
     _cols_global: jnp.ndarray = None
+    _bell: dict = dataclasses.field(default_factory=dict)
 
     @property
     def cols_global(self) -> jnp.ndarray:
@@ -99,10 +128,100 @@ class DistPlan:
         """(k, B) -> (n,) global order."""
         return np.asarray(xb)[self.perm // self.B, self.perm % self.B]
 
+    def bell_local(self, bm: int = 8, bk: int = 128):
+        """Block-ELL form of the *interior* edges, stacked over blocks.
+
+        Returns (blocks, cols): (k, S_b, NNZB, bm, bk) f32 and
+        (k, S_b, NNZB) int32 with uniform NNZB = max over blocks, so the
+        stack shards cleanly one-block-per-device.  Interior columns are
+        all < B, so the local Pallas block-ELL matvec needs no halo data —
+        it is the interior half of the overlapped SpMV on TPU.  Cached per
+        (bm, bk).
+        """
+        key = (bm, bk)
+        cached = self._bell.get(key)
+        if cached is not None:
+            return cached
+        from ..kernels.spmv_bell import padded_coo_to_block_ell
+        ri = np.asarray(self.rows_int)
+        ci = np.asarray(self.cols_int)
+        vi = np.asarray(self.vals_int)
+        per = [padded_coo_to_block_ell(ri[b], ci[b], vi[b], self.B,
+                                       bm=bm, bk=bk)
+               for b in range(self.k)]
+        nnzb = max(blk.shape[1] for blk, _, _ in per)
+        Sb = per[0][0].shape[0]
+        blocks = np.zeros((self.k, Sb, nnzb, bm, bk), dtype=np.float32)
+        cols = np.zeros((self.k, Sb, nnzb), dtype=np.int32)
+        for b, (blk, col, _meta) in enumerate(per):
+            blocks[b, :, :blk.shape[1]] = blk
+            cols[b, :, :col.shape[1]] = col
+        cached = (jnp.asarray(blocks), jnp.asarray(cols))
+        self._bell[key] = cached
+        return cached
+
 
 def _edge_endpoints(indptr: np.ndarray, indices: np.ndarray):
     src = np.repeat(np.arange(len(indptr) - 1), np.diff(indptr))
     return src, np.asarray(indices)
+
+
+def _derive_overlap_fields(rows_a: np.ndarray, cols_a: np.ndarray,
+                           vals_a: np.ndarray, per_blk: np.ndarray,
+                           B: int) -> dict:
+    """Split each block's packed COO into interior/boundary row segments.
+
+    A local row is *boundary* iff any of its edges has a halo-slot column
+    (col >= B); every edge of a boundary row — including its local ones —
+    goes to the boundary segment, so the interior matvec depends only on
+    x_loc and can be issued before (and overlap with) the ppermute rounds.
+    Within a block the original packed edge order is preserved in both
+    segments, and interior + boundary exactly tile the true nnz set.
+
+    Also extracts the (k, B) diagonal of A (rows == cols can only hold for
+    local edges, and local ranks are unique, so rows == cols <=> src == dst)
+    for Jacobi preconditioning.  Pure vectorized NumPy; derived only from
+    the packed arrays, so both plan builders get bit-identical fields.
+    """
+    k, nnz_pad = rows_a.shape
+    per_blk = np.asarray(per_blk, dtype=np.int64)
+    valid = np.arange(nnz_pad)[None, :] < per_blk[:, None]     # (k, nnz_pad)
+    halo_edge = valid & (cols_a >= B)
+    bnd_row = np.zeros((k, B), dtype=bool)
+    bi, ei = np.nonzero(halo_edge)
+    bnd_row[bi, rows_a[bi, ei]] = True
+    blk_col = np.arange(k)[:, None]
+    edge_bnd = valid & bnd_row[blk_col, rows_a]
+    edge_int = valid & ~edge_bnd
+
+    def pack(sel):
+        counts = sel.sum(axis=1)
+        pad = max(int(counts.max()) if k else 0, 1)
+        pos = np.cumsum(sel, axis=1) - 1
+        b, e = np.nonzero(sel)
+        r = np.zeros((k, pad), dtype=np.int32)
+        c = np.zeros((k, pad), dtype=np.int32)
+        v = np.zeros((k, pad), dtype=np.float32)
+        p = pos[b, e]
+        r[b, p] = rows_a[b, e]
+        c[b, p] = cols_a[b, e]
+        v[b, p] = vals_a[b, e]
+        return r, c, v
+
+    rows_int, cols_int, vals_int = pack(edge_int)
+    rows_bnd, cols_bnd, vals_bnd = pack(edge_bnd)
+
+    diag = np.zeros((k, B), dtype=np.float32)
+    on_diag = valid & (rows_a == cols_a)
+    db, de = np.nonzero(on_diag)
+    np.add.at(diag, (db, rows_a[db, de]), vals_a[db, de])
+    return dict(
+        rows_int=jnp.asarray(rows_int), cols_int=jnp.asarray(cols_int),
+        vals_int=jnp.asarray(vals_int), rows_bnd=jnp.asarray(rows_bnd),
+        cols_bnd=jnp.asarray(cols_bnd), vals_bnd=jnp.asarray(vals_bnd),
+        diag=jnp.asarray(diag), nnz_blk=per_blk.copy(),
+        _bnd_row=bnd_row,
+    )
 
 
 # build_plan uses O(k*n) dense tables (counting sorts) up to this many
@@ -265,6 +384,10 @@ def build_plan(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
 
     row_mask = (np.arange(B)[None, :] < sizes[:, None]).astype(np.float32)
 
+    split = _derive_overlap_fields(rows_a, cols_a, vals_a, per_blk, B)
+    bnd_row = split.pop("_bnd_row")
+    interior_mask = row_mask * ~bnd_row
+
     return DistPlan(
         k=k, B=B, S=S, n_rounds=n_rounds, n=n, perm=perm, block_of=block_of,
         sizes=sizes,
@@ -272,6 +395,7 @@ def build_plan(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
         vals=jnp.asarray(vals_a), row_mask=jnp.asarray(row_mask),
         send_idx=jnp.asarray(send_idx), send_mask=jnp.asarray(send_mask),
         round_perms=tuple(tuple(r) for r in round_perms),
+        interior_mask=jnp.asarray(interior_mask), **split,
         _pack_blk=own, _pack_pos=pos_edge, _pack_dst=dst,
     )
 
@@ -343,7 +467,7 @@ def build_plan_reference(indptr: np.ndarray, indices: np.ndarray,
         cols_l[i] = halo_slot[(int(part[src[i]]), int(dst[i]))]
     own = part[src]
     per_blk = np.bincount(own, minlength=k)
-    nnz_pad = int(per_blk.max()) if len(per_blk) else 1
+    nnz_pad = max(int(per_blk.max()) if len(per_blk) else 1, 1)
     rows_a = np.zeros((k, nnz_pad), dtype=np.int32)
     cols_a = np.zeros((k, nnz_pad), dtype=np.int32)
     vals_a = np.zeros((k, nnz_pad), dtype=np.float32)
@@ -360,6 +484,10 @@ def build_plan_reference(indptr: np.ndarray, indices: np.ndarray,
     for b in range(k):
         row_mask[b, :sizes[b]] = 1.0
 
+    split = _derive_overlap_fields(rows_a, cols_a, vals_a, per_blk, B)
+    bnd_row = split.pop("_bnd_row")
+    interior_mask = row_mask * ~bnd_row
+
     blk_e = own[ord2]
     return DistPlan(
         k=k, B=B, S=S, n_rounds=n_rounds, n=n, perm=perm, block_of=block_of,
@@ -368,6 +496,7 @@ def build_plan_reference(indptr: np.ndarray, indices: np.ndarray,
         vals=jnp.asarray(vals_a), row_mask=jnp.asarray(row_mask),
         send_idx=jnp.asarray(send_idx), send_mask=jnp.asarray(send_mask),
         round_perms=tuple(tuple(r) for r in round_perms),
+        interior_mask=jnp.asarray(interior_mask), **split,
         _pack_blk=blk_e,
         _pack_pos=np.arange(len(src)) - off[blk_e],
         _pack_dst=dst[ord2],
@@ -392,119 +521,174 @@ def _halo_exchange(plan: DistPlan, x_loc, send_idx, send_mask, axis: str):
     return jnp.concatenate([x_loc] + bufs)
 
 
+COMM_MODES = ("halo", "halo_seq", "allgather")
+LOCAL_FORMATS = ("coo", "bell")
+
+
+def _local_matvec_builder(plan: DistPlan, comm: str, axis: str,
+                          local_format: str = "coo"):
+    """Shared per-device matvec for every comm/format combination.
+
+    Returns ``(consts, fn)``: ``consts`` is a tuple of (k, ...) arrays to be
+    sharded one-block-per-device, and ``fn(local_consts, x_loc)`` computes
+    y_loc = (A @ x)_loc on already-squeezed per-device slices.  Both
+    :func:`make_dist_spmv` and the fused :func:`make_dist_cg` build on it.
+    ``consts`` always ends with ``plan.row_mask`` so the fused CG can read
+    the mask for its psum dots without shipping a duplicate operand.
+
+    ``comm='halo'`` is the *overlapped* schedule: the interior matvec
+    (``plan.rows_int`` — rows touching no halo slot) is issued before the
+    colored ppermute rounds, so XLA can run it concurrently with the
+    exchange; boundary rows accumulate afterward from the extended vector.
+    ``comm='halo_seq'`` keeps the PR-1 sequential schedule (exchange all
+    rounds, then one full matvec) as the non-overlapped reference.
+    ``local_format='bell'`` runs the interior matvec through the Pallas
+    block-ELL kernel (kernels/spmv_bell.py) instead of the COO scatter-add
+    — ROADMAP's third comm/format combination.
+    """
+    if comm not in COMM_MODES:
+        raise ValueError(f"unknown comm mode {comm!r}; choose {COMM_MODES}")
+    if local_format not in LOCAL_FORMATS:
+        raise ValueError(f"unknown local format {local_format!r}; "
+                         f"choose {LOCAL_FORMATS}")
+    if local_format == "bell" and comm != "halo":
+        raise ValueError("local_format='bell' requires comm='halo' (the "
+                         "interior/boundary split the kernel is built from)")
+    B = plan.B
+
+    if comm == "allgather":
+        consts = (plan.rows, plan.cols_global, plan.vals, plan.row_mask)
+
+        def fn(c, x):
+            rows, cols, vals, row_mask = c
+            x_all = jax.lax.all_gather(x, axis).reshape(-1)   # (k*B,)
+            y = jnp.zeros(B, jnp.float32).at[rows].add(vals * x_all[cols])
+            return y * row_mask
+
+        return consts, fn
+
+    if comm == "halo_seq":
+        consts = (plan.rows, plan.cols, plan.vals, plan.send_idx,
+                  plan.send_mask, plan.row_mask)
+
+        def fn(c, x):
+            rows, cols, vals, send_idx, send_mask, row_mask = c
+            x_ext = _halo_exchange(plan, x, send_idx, send_mask, axis)
+            y = jnp.zeros(B, jnp.float32).at[rows].add(vals * x_ext[cols])
+            return y * row_mask
+
+        return consts, fn
+
+    # comm == "halo": overlapped interior/boundary schedule
+    bnd = (plan.rows_bnd, plan.cols_bnd, plan.vals_bnd)
+    tail = (plan.send_idx, plan.send_mask, plan.row_mask)
+    if local_format == "coo":
+        consts = (plan.rows_int, plan.cols_int, plan.vals_int) + bnd + tail
+
+        def fn(c, x):
+            ri, ci, vi, rb, cb, vb, send_idx, send_mask, row_mask = c
+            # interior first: no halo dependence, overlaps the ppermutes
+            y = jnp.zeros(B, jnp.float32).at[ri].add(vi * x[ci])
+            x_ext = _halo_exchange(plan, x, send_idx, send_mask, axis)
+            y = y.at[rb].add(vb * x_ext[cb])
+            return y * row_mask
+
+        return consts, fn
+
+    blocks, bcols = plan.bell_local()
+
+    def fn(c, x):
+        from ..kernels.spmv_bell import spmv_block_ell
+        blk, bc, rb, cb, vb, send_idx, send_mask, row_mask = c
+        y = spmv_block_ell(blk, bc, x)                     # interior rows
+        x_ext = _halo_exchange(plan, x, send_idx, send_mask, axis)
+        y = y.at[rb].add(vb * x_ext[cb])
+        return y * row_mask
+
+    return (blocks, bcols) + bnd + tail, fn
+
+
 def make_dist_spmv(plan: DistPlan, mesh: Mesh, axis: str = "pu",
-                   comm: str = "halo") -> Callable:
+                   comm: str = "halo",
+                   local_format: str = "coo") -> Callable:
     """Returns jit'd y = A @ x on (k, B) block-major vectors.
 
-    ``comm='halo'`` exchanges only the boundary via edge-colored ppermute
-    rounds; ``comm='allgather'`` gathers the whole padded vector (the
-    partitioner-oblivious baseline) using ``plan.cols_global``.
+    ``comm='halo'`` (default) overlaps the interior matvec with the
+    edge-colored ppermute rounds; ``comm='halo_seq'`` is the sequential
+    reference schedule; ``comm='allgather'`` gathers the whole padded
+    vector (the partitioner-oblivious baseline).  ``local_format='bell'``
+    runs the interior matvec through the Pallas block-ELL kernel.
     """
-    if comm == "allgather":
-        return make_dist_spmv_allgather(plan, plan.cols_global, mesh, axis)
-    if comm != "halo":
-        raise ValueError(f"unknown comm mode {comm!r}")
+    consts, local_fn = _local_matvec_builder(plan, comm, axis, local_format)
 
-    def local_matvec(rows, cols, vals, row_mask, send_idx, send_mask, x):
-        x = x[0]                                            # (B,)
-        x_ext = _halo_exchange(plan, x, send_idx[0], send_mask[0], axis)
-        y = jnp.zeros(plan.B, jnp.float32).at[rows[0]].add(
-            vals[0] * x_ext[cols[0]])
-        return (y * row_mask[0])[None]
+    def prog(*args):
+        *cs, x = args
+        return local_fn(tuple(c[0] for c in cs), x[0])[None]
 
     spec = P(axis)
-    fn = shard_map(
-        local_matvec, mesh=mesh,
-        in_specs=(spec,) * 6 + (spec,), out_specs=spec)
+    fn = shard_map(prog, mesh=mesh,
+                   in_specs=(spec,) * (len(consts) + 1), out_specs=spec)
 
     @jax.jit
     def spmv(x):
-        return fn(plan.rows, plan.cols, plan.vals, plan.row_mask,
-                  plan.send_idx, plan.send_mask, x)
-
-    return spmv
-
-
-def make_dist_spmv_allgather(plan: DistPlan, cols_global: jnp.ndarray,
-                             mesh: Mesh, axis: str = "pu") -> Callable:
-    def local_matvec(rows, cols, vals, row_mask, x):
-        x_all = jax.lax.all_gather(x[0], axis).reshape(-1)   # (k*B,)
-        y = jnp.zeros(plan.B, jnp.float32).at[rows[0]].add(
-            vals[0] * x_all[cols[0]])
-        return (y * row_mask[0])[None]
-
-    spec = P(axis)
-    fn = shard_map(local_matvec, mesh=mesh,
-                   in_specs=(spec,) * 5, out_specs=spec)
-
-    @jax.jit
-    def spmv(x):
-        return fn(plan.rows, cols_global, plan.vals, plan.row_mask, x)
+        return fn(*consts, x)
 
     return spmv
 
 
 def make_dist_cg(plan: DistPlan, mesh: Mesh, axis: str = "pu",
                  tol: float = 1e-6, max_iters: int = 500,
-                 comm: str = "halo") -> Callable:
+                 comm: str = "halo", local_format: str = "coo",
+                 precondition: str | None = None) -> Callable:
     """Whole-CG SPMD program: the while_loop runs inside shard_map; dot
-    products are psum-reduced local dots; the matvec uses the edge-colored
-    halo rounds (``comm='halo'``) or the full-vector all_gather baseline
-    (``comm='allgather'``).
+    products are psum-reduced local dots; the matvec comes from
+    :func:`_local_matvec_builder` — overlapped halo rounds (``'halo'``),
+    the sequential schedule (``'halo_seq'``), or the full-vector
+    all_gather baseline (``'allgather'``), with the interior matvec in
+    padded-COO or Pallas block-ELL (``local_format``).
+
+    ``precondition='jacobi'`` switches the body to preconditioned CG with
+    M = diag(A); the diagonal is already on-device in ``plan.diag``,
+    extracted when the plan was built.  Convergence is still tested on the
+    unpreconditioned residual ||r||^2 <= tol^2 ||b||^2, so preconditioned
+    and unpreconditioned solves stop at the same solution quality.
 
     This is the fused fast path; the composable path is
     ``operator.DistributedOperator`` + the generic ``cg.cg_solve``."""
-    if comm not in ("halo", "allgather"):
-        raise ValueError(f"unknown comm mode {comm!r}")
-    cols_dev = plan.cols if comm == "halo" else plan.cols_global
+    if precondition not in (None, "jacobi"):
+        raise ValueError(f"unknown precondition {precondition!r}")
+    consts, local_fn = _local_matvec_builder(plan, comm, axis, local_format)
+    jacobi = precondition == "jacobi"
+    all_consts = consts + ((plan.diag,) if jacobi else ())
 
-    def cg_local(rows, cols, vals, row_mask, send_idx, send_mask, b):
-        rows, cols, vals, row_mask = rows[0], cols[0], vals[0], row_mask[0]
-        send_idx, send_mask, b = send_idx[0], send_mask[0], b[0]
-
-        def matvec(x):
-            if comm == "halo":
-                x_ext = _halo_exchange(plan, x, send_idx, send_mask, axis)
-            else:
-                x_ext = jax.lax.all_gather(x, axis).reshape(-1)  # (k*B,)
-            y = jnp.zeros(plan.B, jnp.float32).at[rows].add(
-                vals * x_ext[cols])
-            return y * row_mask
+    def cg_local(*args):
+        # one CG implementation for every program shape: the generic
+        # cg.cg_solve is pure lax, so tracing it here (with a psum dot and
+        # the local matvec) yields the fused whole-CG SPMD program
+        *cs, b = args
+        cs = tuple(c[0] for c in cs)
+        b = b[0]
+        prec = None
+        if jacobi:
+            prec = jacobi_preconditioner(cs[-1])
+            cs = cs[:-1]
+        row_mask = cs[-1]                 # builder contract: always last
 
         def dot(u, v):
             return jax.lax.psum(jnp.vdot(u * row_mask, v), axis)
 
-        x = jnp.zeros_like(b)
-        r = b - matvec(x)
-        p = r
-        rs = dot(r, r)
-        tol2 = tol * tol * jnp.maximum(dot(b, b), 1e-30)
-
-        def cond(s):
-            return (s[3] > tol2) & (s[4] < max_iters)
-
-        def body(s):
-            x, r, p, rs, it = s
-            ap = matvec(p)
-            alpha = rs / (dot(p, ap) + 1e-30)
-            x = x + alpha * p
-            r = r - alpha * ap
-            rs2 = dot(r, r)
-            p = r + (rs2 / (rs + 1e-30)) * p
-            return x, r, p, rs2, it + 1
-
-        x, r, p, rs, it = jax.lax.while_loop(
-            cond, body, (x, r, p, rs, jnp.zeros((), jnp.int32)))
-        return x[None], rs[None], it[None]
+        res = cg_solve(lambda x: local_fn(cs, x), b, tol=tol,
+                       max_iters=max_iters, dot=dot, precondition=prec)
+        return res.x[None], res.residual[None], res.iters[None]
 
     spec = P(axis)
-    fn = shard_map(cg_local, mesh=mesh, in_specs=(spec,) * 7,
+    fn = shard_map(cg_local, mesh=mesh,
+                   in_specs=(spec,) * (len(all_consts) + 1),
                    out_specs=(spec, spec, spec))
 
     @jax.jit
     def solve(b):
-        x, rs, it = fn(plan.rows, cols_dev, plan.vals, plan.row_mask,
-                       plan.send_idx, plan.send_mask, b)
-        return x, jnp.sqrt(rs[0]), it[0]
+        x, res, it = fn(*all_consts, b)
+        return x, res[0], it[0]
 
     return solve

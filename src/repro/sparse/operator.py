@@ -9,7 +9,16 @@ interface so that one ``cg_solve`` and one benchmark harness drive
   * ``bell``           — the Pallas block-ELL TPU kernel
                          (kernels/spmv_bell.py), compiled on TPU and
                          interpreted elsewhere (backend auto-detection);
-  * ``dist_halo``      — shard_map, edge-colored ppermute halo exchange;
+  * ``dist_halo``      — shard_map, edge-colored ppermute halo exchange,
+                         *overlapped*: the interior matvec (rows touching
+                         no halo slot) is issued before the ppermute
+                         rounds so compute hides communication;
+  * ``dist_halo_seq``  — the sequential halo schedule (exchange all
+                         rounds, then one full matvec) — the
+                         non-overlapped reference;
+  * ``dist_bell``      — overlapped halo exchange with the interior
+                         matvec in the Pallas block-ELL kernel (ROADMAP's
+                         third comm/format combination);
   * ``dist_allgather`` — shard_map, all_gather baseline.
 
 Protocol
@@ -23,12 +32,16 @@ An Operator is any object with
   ``dot(u, v)``     — inner product in operator space (plain vdot is exact
                       for the distributed layout because padding rows stay
                       zero under matvec and scatter);
+  ``diag()``        — diagonal of A in operator space (on-device; feeds
+                      the Jacobi preconditioner in ``cg_solve``);
   ``scatter(x)``    — (n,) global numpy vector -> operator space;
   ``gather(y)``     — operator space -> (n,) global numpy vector.
 
 ``cg.cg_solve`` accepts an Operator directly; :func:`cg_solve_global` adds the
-scatter/solve/gather round trip so callers never touch layouts.
-``make_operator`` is the single factory the benchmark harness uses.
+scatter/solve/gather round trip so callers never touch layouts.  Both take
+``precondition='jacobi'`` to run preconditioned CG off the operator's
+diagonal.  ``make_operator`` is the single factory the benchmark harness
+uses.
 """
 from __future__ import annotations
 
@@ -40,7 +53,7 @@ import numpy as np
 
 from .cg import CGResult, cg_solve
 from .distributed import DistPlan, build_plan, make_dist_cg, make_dist_spmv
-from .spmv import csr_to_padded_coo, spmv_coo
+from .spmv import csr_diagonal, csr_to_padded_coo, spmv_coo
 
 
 @runtime_checkable
@@ -52,6 +65,8 @@ class Operator(Protocol):
     def matvec(self, x): ...
 
     def dot(self, u, v): ...
+
+    def diag(self): ...
 
     def scatter(self, x): ...
 
@@ -84,6 +99,11 @@ class CooOperator:
     def dot(self, u, v):
         return jnp.vdot(u, v)
 
+    def diag(self):
+        """On-device diagonal extraction from the padded-COO triples."""
+        on_diag = jnp.where(self.rows == self.cols, self.vals, 0.0)
+        return jnp.zeros(self.n, jnp.float32).at[self.rows].add(on_diag)
+
     def scatter(self, x):
         return jnp.asarray(np.asarray(x, dtype=np.float32))
 
@@ -99,6 +119,7 @@ class BlockEllOperator:
     blocks: jnp.ndarray
     cols: jnp.ndarray
     interpret: bool | None = None
+    diag_: jnp.ndarray | None = None
 
     @classmethod
     def from_csr(cls, indptr, indices, data, bm: int = 8, bk: int = 128,
@@ -108,7 +129,8 @@ class BlockEllOperator:
         blocks, cols, _meta = csr_to_block_ell(indptr, indices, data, n,
                                                bm=bm, bk=bk, nnzb=nnzb)
         return cls(n=n, blocks=jnp.asarray(blocks), cols=jnp.asarray(cols),
-                   interpret=interpret)
+                   interpret=interpret,
+                   diag_=jnp.asarray(csr_diagonal(indptr, indices, data)))
 
     def matvec(self, x):
         from ..kernels.spmv_bell import spmv_block_ell
@@ -117,6 +139,12 @@ class BlockEllOperator:
 
     def dot(self, u, v):
         return jnp.vdot(u, v)
+
+    def diag(self):
+        if self.diag_ is None:
+            raise ValueError("BlockEllOperator built without a diagonal; "
+                             "construct via from_csr for Jacobi support")
+        return self.diag_
 
     def scatter(self, x):
         return jnp.asarray(np.asarray(x, dtype=np.float32))
@@ -131,7 +159,13 @@ class BlockEllOperator:
 
 @dataclasses.dataclass
 class DistributedOperator:
-    """shard_map SpMV over a partition plan (halo or allgather exchange).
+    """shard_map SpMV over a partition plan.
+
+    ``comm`` picks the exchange schedule — ``'halo'`` (overlapped
+    interior/boundary, the default), ``'halo_seq'`` (sequential reference)
+    or ``'allgather'`` (partitioner-oblivious baseline); ``local_format``
+    picks the interior matvec kernel — ``'coo'`` scatter-add or ``'bell'``
+    (Pallas block-ELL, comm='halo' only).
 
     Operator space is the (k, B) padded block-major layout; ``dot`` is a
     plain vdot because ghost rows are zero in both vectors.  ``solve``
@@ -145,18 +179,22 @@ class DistributedOperator:
     mesh: object
     axis: str = "pu"
     comm: str = "halo"
+    local_format: str = "coo"
 
     def __post_init__(self):
         self.n = self.plan.n
         self._spmv = make_dist_spmv(self.plan, self.mesh, axis=self.axis,
-                                    comm=self.comm)
-        self._fused = {}          # (tol, max_iters) -> compiled CG program
+                                    comm=self.comm,
+                                    local_format=self.local_format)
+        self._fused = {}   # (tol, max_iters, precondition) -> compiled CG
 
     @classmethod
     def from_csr(cls, indptr, indices, data, part, k, mesh,
-                 axis: str = "pu", comm: str = "halo"):
+                 axis: str = "pu", comm: str = "halo",
+                 local_format: str = "coo"):
         plan = build_plan(indptr, indices, data, part, k)
-        return cls(plan=plan, mesh=mesh, axis=axis, comm=comm)
+        return cls(plan=plan, mesh=mesh, axis=axis, comm=comm,
+                   local_format=local_format)
 
     def matvec(self, x):
         return self._spmv(x)
@@ -164,22 +202,29 @@ class DistributedOperator:
     def dot(self, u, v):
         return jnp.vdot(u, v)
 
+    def diag(self):
+        """(k, B) diagonal of A — extracted at plan build, already on
+        device; ghost rows carry zero (handled by the preconditioner)."""
+        return self.plan.diag
+
     def scatter(self, x):
         return jnp.asarray(self.plan.scatter_vec(np.asarray(x)))
 
     def gather(self, y):
         return self.plan.gather_vec(np.asarray(y))
 
-    def solve(self, b, tol: float = 1e-6, max_iters: int = 500) -> CGResult:
+    def solve(self, b, tol: float = 1e-6, max_iters: int = 500,
+              precondition: str | None = None) -> CGResult:
         """Fused distributed CG on a (n,) global right-hand side.  The
-        traced program is cached per (tol, max_iters) — repeated solves
-        with new right-hand sides pay no re-trace."""
-        key = (tol, max_iters)
+        traced program is cached per (tol, max_iters, precondition) —
+        repeated solves with new right-hand sides pay no re-trace."""
+        key = (tol, max_iters, precondition)
         fused = self._fused.get(key)
         if fused is None:
             fused = self._fused[key] = make_dist_cg(
                 self.plan, self.mesh, axis=self.axis,
-                tol=tol, max_iters=max_iters, comm=self.comm)
+                tol=tol, max_iters=max_iters, comm=self.comm,
+                local_format=self.local_format, precondition=precondition)
         x, res, it = fused(self.scatter(b))
         return CGResult(x=x, iters=it, residual=res)
 
@@ -188,7 +233,15 @@ class DistributedOperator:
 # Factory + harness entry point
 # --------------------------------------------------------------------------
 
-BACKENDS = ("coo", "bell", "dist_halo", "dist_allgather")
+BACKENDS = ("coo", "bell", "dist_halo", "dist_halo_seq", "dist_bell",
+            "dist_allgather")
+
+_DIST_MODES = {
+    "dist_halo": ("halo", "coo"),
+    "dist_halo_seq": ("halo_seq", "coo"),
+    "dist_bell": ("halo", "bell"),
+    "dist_allgather": ("allgather", "coo"),
+}
 
 
 def make_operator(indptr, indices, data, backend: str = "coo", *,
@@ -199,17 +252,21 @@ def make_operator(indptr, indices, data, backend: str = "coo", *,
         return CooOperator.from_csr(indptr, indices, data, **kw)
     if backend == "bell":
         return BlockEllOperator.from_csr(indptr, indices, data, **kw)
-    if backend in ("dist_halo", "dist_allgather"):
+    if backend in _DIST_MODES:
         if part is None or k is None or mesh is None:
             raise ValueError(f"{backend} needs part=, k=, mesh=")
-        comm = "halo" if backend == "dist_halo" else "allgather"
+        comm, local_format = _DIST_MODES[backend]
         return DistributedOperator.from_csr(indptr, indices, data, part, k,
-                                            mesh, axis=axis, comm=comm)
+                                            mesh, axis=axis, comm=comm,
+                                            local_format=local_format, **kw)
     raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
 
 
 def cg_solve_global(op: Operator, b: np.ndarray, tol: float = 1e-6,
-             max_iters: int = 500) -> tuple[np.ndarray, int, float]:
+             max_iters: int = 500,
+             precondition: str | None = None) -> tuple[np.ndarray, int,
+                                                       float]:
     """Scatter -> generic CG -> gather.  Returns (x_global, iters, res)."""
-    res = cg_solve(op, op.scatter(b), tol=tol, max_iters=max_iters)
+    res = cg_solve(op, op.scatter(b), tol=tol, max_iters=max_iters,
+                   precondition=precondition)
     return op.gather(res.x), int(res.iters), float(res.residual)

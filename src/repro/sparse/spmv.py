@@ -38,6 +38,18 @@ def spmv_coo(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
     return jnp.zeros(n, vals.dtype).at[rows].add(vals * x[cols])
 
 
+def csr_diagonal(indptr: np.ndarray, indices: np.ndarray,
+                 data: np.ndarray) -> np.ndarray:
+    """(n,) f32 diagonal of a CSR matrix (duplicates summed) — feeds the
+    Jacobi preconditioner of ``cg.cg_solve``.  Vectorized NumPy."""
+    n = len(indptr) - 1
+    src = np.repeat(np.arange(n), np.diff(indptr))
+    on_diag = src == np.asarray(indices)
+    d = np.zeros(n, dtype=np.float32)
+    np.add.at(d, src[on_diag], np.asarray(data)[on_diag])
+    return d
+
+
 def dense_from_coo(rows, cols, vals, n):
     a = np.zeros((n, n), dtype=np.float64)
     np.add.at(a, (rows, cols), vals)

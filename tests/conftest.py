@@ -5,8 +5,13 @@ modules that import ``hypothesis`` are excluded from collection (instead
 of erroring the whole run) when the package is not installed.  Install
 dev deps with ``pip install -r requirements-dev.txt`` (or ``make deps``)
 to run the property-based suites too.
+
+On CI (``CI`` set, as GitHub Actions does) the escape hatch is a hard
+error instead: the property-based modules must actually execute there,
+never silently skip.
 """
 import importlib.util
+import os
 import pathlib
 import re
 import warnings
@@ -21,6 +26,11 @@ if importlib.util.find_spec("hypothesis") is None:
         p.name for p in _here.glob("test_*.py")
         if _IMPORTS_HYPOTHESIS.search(p.read_text(encoding="utf-8")))
     if collect_ignore:
+        if os.environ.get("CI"):
+            raise RuntimeError(
+                "hypothesis is not installed but CI must run the "
+                f"property-based modules ({', '.join(collect_ignore)}); "
+                "pip install -r requirements-dev.txt")
         warnings.warn(
             "hypothesis is not installed; skipping property-based test "
             f"modules: {', '.join(collect_ignore)} "

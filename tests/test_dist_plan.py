@@ -86,7 +86,8 @@ def test_matches_reference_builder(lap, k):
     np.testing.assert_array_equal(p1.perm, p0.perm)
     assert p1.round_perms == p0.round_perms
     for f in ("rows", "cols", "vals", "row_mask", "send_idx", "send_mask",
-              "cols_global"):
+              "rows_int", "cols_int", "vals_int", "rows_bnd", "cols_bnd",
+              "vals_bnd", "interior_mask", "diag", "cols_global"):
         np.testing.assert_array_equal(np.asarray(getattr(p1, f)),
                                       np.asarray(getattr(p0, f)), err_msg=f)
 
@@ -141,7 +142,9 @@ def test_sorted_fallback_path_matches_dense_and_reference(lap, k, monkeypatch):
                (other.k, other.B, other.S, other.n_rounds), tag
         assert p_sorted.round_perms == other.round_perms, tag
         for f in ("perm", "rows", "cols", "vals", "row_mask", "send_idx",
-                  "send_mask", "cols_global"):
+                  "send_mask", "rows_int", "cols_int", "vals_int",
+                  "rows_bnd", "cols_bnd", "vals_bnd", "interior_mask",
+                  "diag", "cols_global"):
             np.testing.assert_array_equal(
                 np.asarray(getattr(p_sorted, f)),
                 np.asarray(getattr(other, f)), err_msg=f"{tag}:{f}")

@@ -37,12 +37,21 @@ SCRIPT = textwrap.dedent("""
 
     op_h = make_operator(indptr, indices, data, "dist_halo",
                          part=part, k=8, mesh=mesh)
+    op_s = make_operator(indptr, indices, data, "dist_halo_seq",
+                         part=part, k=8, mesh=mesh)
     op_a = make_operator(indptr, indices, data, "dist_allgather",
                          part=part, k=8, mesh=mesh)
     err_halo = float(np.abs(op_h.gather(op_h.matvec(op_h.scatter(x)))
                             - A @ x).max())
+    err_seq = float(np.abs(op_s.gather(op_s.matvec(op_s.scatter(x)))
+                           - A @ x).max())
     err_ag = float(np.abs(op_a.gather(op_a.matvec(op_a.scatter(x)))
                           - A @ x).max())
+    # overlapped vs sequential halo schedule: same plan, same numbers
+    ovl_vs_seq = float(np.abs(
+        np.asarray(op_h.matvec(op_h.scatter(x)))
+        - np.asarray(op_s.matvec(op_s.scatter(x)))).max()
+        / max(np.abs(x).max(), 1e-30))
 
     # fused whole-CG shard_map program (halo and allgather comm modes)
     res = op_h.solve(b, tol=1e-6, max_iters=1500)
@@ -56,6 +65,11 @@ SCRIPT = textwrap.dedent("""
     xg2, iters2, _ = cg_solve_global(op_h, b, tol=1e-6, max_iters=1500)
     rel2 = float(np.linalg.norm(A @ xg2 - b) / np.linalg.norm(b))
 
+    # fused Jacobi-preconditioned CG off the on-device plan diagonal
+    res_j = op_h.solve(b, tol=1e-6, max_iters=1500, precondition="jacobi")
+    rel_j = float(np.linalg.norm(A @ op_h.gather(res_j.x) - b)
+                  / np.linalg.norm(b))
+
     # cross-backend agreement: single-device COO on the same system
     xc, _, _ = cg_solve_global(make_operator(indptr, indices, data, "coo"), b,
                         tol=1e-6, max_iters=1500)
@@ -66,11 +80,13 @@ SCRIPT = textwrap.dedent("""
     rt = float(np.abs(plan.gather_vec(plan.scatter_vec(x)) - x).max())
 
     print(json.dumps({
-        "err_halo": err_halo, "err_ag": err_ag, "cg_rel": rel,
+        "err_halo": err_halo, "err_seq": err_seq, "err_ag": err_ag,
+        "ovl_vs_seq": ovl_vs_seq, "cg_rel": rel,
         "iters": int(res.iters), "cg_rel_generic": rel2,
         "iters_generic": int(iters2), "cross_backend_rel": cross,
         "cg_rel_allgather_fused": rel_ag,
         "iters_allgather_fused": int(res_a.iters),
+        "cg_rel_jacobi_fused": rel_j, "iters_jacobi_fused": int(res_j.iters),
         "roundtrip": rt, "rounds": plan.n_rounds, "halo_slots": plan.S,
     }))
 """)
@@ -86,6 +102,15 @@ def dist_results():
 
 def test_halo_spmv_exact(dist_results):
     assert dist_results["err_halo"] < 1e-3
+
+
+def test_sequential_halo_spmv_exact(dist_results):
+    assert dist_results["err_seq"] < 1e-3
+
+
+def test_overlapped_matches_sequential_schedule(dist_results):
+    # same plan, reordered accumulation only — f32 rounding at most
+    assert dist_results["ovl_vs_seq"] < 1e-5
 
 
 def test_allgather_spmv_exact(dist_results):
@@ -106,6 +131,12 @@ def test_fused_cg_allgather_comm_mode(dist_results):
     # regression: solve() must honor comm="allgather", not silently halo
     assert dist_results["cg_rel_allgather_fused"] < 1e-3
     assert dist_results["iters_allgather_fused"] < 1500
+
+
+def test_fused_cg_jacobi_preconditioned(dist_results):
+    # PCG off plan.diag converges to the same unpreconditioned tolerance
+    assert dist_results["cg_rel_jacobi_fused"] < 1e-3
+    assert dist_results["iters_jacobi_fused"] < 1500
 
 
 def test_cross_backend_agreement(dist_results):

@@ -1,8 +1,13 @@
-"""Operator protocol: single-device backends through the one cg_solve.
-
-(The distributed backends go through the same interface in the
-8-device subprocess of tests/test_distributed.py.)
+"""Operator protocol: single-device backends through the one cg_solve,
+plus the cross-backend agreement matrix (promoted from benchmarks/
+bench_cg.py): every backend/preconditioner combination solves the same
+2-D grid Laplacian in an 8-device subprocess and must agree to < 1e-5.
 """
+import json
+import subprocess
+import sys
+import textwrap
+
 import numpy as np
 import pytest
 
@@ -72,6 +77,86 @@ def test_cg_solve_accepts_operator_or_callable(system):
     np.testing.assert_allclose(np.asarray(r1.x), np.asarray(r2.x),
                                atol=1e-6)
     assert int(r1.iters) == int(r2.iters)
+
+
+def test_jacobi_preconditioned_cg_single_device(system):
+    (indptr, indices, data), A, b = system
+    op = make_operator(indptr, indices, data, "coo")
+    # diag() matches scipy
+    np.testing.assert_allclose(np.asarray(op.diag()), A.diagonal(),
+                               atol=1e-5, rtol=1e-5)
+    x_pl, it_pl, _ = cg_solve_global(op, b, tol=1e-7, max_iters=2000)
+    x_pc, it_pc, _ = cg_solve_global(op, b, tol=1e-7, max_iters=2000,
+                                     precondition="jacobi")
+    # both stop on the same unpreconditioned tolerance => same quality
+    for x in (x_pl, x_pc):
+        rel = np.linalg.norm(A @ x - b) / np.linalg.norm(b)
+        assert rel < 1e-4
+    scale = np.abs(x_pl).max()
+    assert np.abs(x_pl - x_pc).max() / scale < 1e-5
+
+
+def test_jacobi_requires_operator():
+    import jax.numpy as jnp
+    with pytest.raises(ValueError):
+        cg_solve(lambda x: x, jnp.ones(4), precondition="jacobi")
+
+
+# -- cross-backend agreement matrix (one subprocess, 8 host devices) -------
+
+CROSS_BACKENDS = ("coo", "coo+jacobi", "bell", "bell+jacobi",
+                  "dist_halo", "dist_halo+jacobi",
+                  "dist_halo+jacobi_fused", "dist_halo_seq", "dist_bell",
+                  "dist_allgather")
+
+CROSS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax
+    from repro.sparse.generators import grid
+    from repro.sparse.graph import laplacian_csr
+    from repro.sparse import make_operator, cg_solve_global
+
+    g = grid((24, 24))                       # the 2-D grid Laplacian
+    indptr, indices, data = laplacian_csr(g, shift=0.1)
+    part = np.random.default_rng(0).integers(0, 8, g.n)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()), ("pu",))
+    b = np.random.default_rng(1).normal(size=g.n).astype(np.float32)
+
+    sols = {}
+    for name in %r:
+        backend, _, variant = name.partition("+")
+        kw = (dict(part=part, k=8, mesh=mesh)
+              if backend.startswith("dist") else {})
+        op = make_operator(indptr, indices, data, backend, **kw)
+        if variant == "jacobi_fused":
+            res = op.solve(b, tol=1e-7, max_iters=2000,
+                           precondition="jacobi")
+            sols[name] = op.gather(res.x)
+        else:
+            x, _, _ = cg_solve_global(op, b, tol=1e-7, max_iters=2000,
+                                      precondition=variant or None)
+            sols[name] = x
+    ref = sols["coo"]
+    scale = float(np.abs(ref).max())
+    print(json.dumps({name: float(np.abs(x - ref).max()) / scale
+                      for name, x in sols.items()}))
+""") % (CROSS_BACKENDS,)
+
+
+@pytest.fixture(scope="module")
+def cross_backend_rel():
+    proc = subprocess.run([sys.executable, "-c", CROSS_SCRIPT],
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.parametrize("name", CROSS_BACKENDS)
+def test_cross_backend_agreement_2d_grid(cross_backend_rel, name):
+    assert cross_backend_rel[name] < 1e-5, (name, cross_backend_rel)
 
 
 def test_spmv_coo_accepts_explicit_static_n():
