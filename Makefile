@@ -4,7 +4,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test tier1 deps bench-cg bench
+.PHONY: test tier1 deps bench-cg bench bench-hier
 
 deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -19,6 +19,11 @@ tier1:
 
 bench-cg:
 	$(PYTHON) -m benchmarks.run --only cg
+
+# Multi-pod (pods=2, k=8) hierarchical schedule vs the flat plan, on
+# forced host devices (the subprocess sets the XLA flag itself)
+bench-hier:
+	$(PYTHON) -m benchmarks.bench_cg --hier
 
 bench:
 	$(PYTHON) -m benchmarks.run

@@ -104,6 +104,97 @@ DIST_SCRIPT = textwrap.dedent("""
 """)
 
 
+HIER_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, time
+    import numpy as np
+    import jax
+    from repro.sparse.generators import grid
+    from repro.sparse.graph import laplacian_csr
+    from repro.sparse import make_operator, cg_solve_global
+    from repro.sparse.distributed import build_plan, build_plan_hier
+    from repro.launch.mesh import make_test_mesh
+
+    # locality-preserving stripes on the 2-D grid Laplacian: the partition
+    # spans 2 pods, so only the pod-crossing cut pays the slow links
+    g = grid((64, 32))
+    indptr, indices, data = laplacian_csr(g, shift=1e-2)
+    part = (np.arange(g.n) * 8) // g.n
+    mesh = jax.sharding.Mesh(np.array(jax.devices()), ("pu",))
+    mesh_hier = make_test_mesh(8, pods=2)            # ("pod", "pu")
+    b = np.random.default_rng(1).normal(size=g.n).astype(np.float32)
+
+    out = {}
+    fp = build_plan(indptr, indices, data, part, 8)
+    hp = build_plan_hier(indptr, indices, data, part, 2, 8)
+    out["rounds_flat"] = fp.n_rounds
+    out["rounds_intra"] = hp.n_rounds_intra
+    out["rounds_inter"] = hp.n_rounds_inter
+    out["halo_slots_intra"] = hp.S_intra
+    out["halo_slots_inter"] = hp.S_inter
+
+    sols = {}
+    for name, kw in (("dist_halo", dict(mesh=mesh)),
+                     ("dist_hier", dict(mesh=mesh_hier, pods=2)),
+                     ("dist_hier+block_jacobi", dict(mesh=mesh_hier,
+                                                     pods=2))):
+        backend, _, variant = name.partition("+")
+        op = make_operator(indptr, indices, data, backend,
+                           part=part, k=8, **kw)
+        t0 = time.perf_counter()
+        x, iters, res = cg_solve_global(op, b, tol=1e-7, max_iters=2000,
+                                        precondition=variant or None)
+        out[name] = {"iters": iters, "res": res,
+                     "wall_us": (time.perf_counter() - t0) * 1e6}
+        sols[name] = x
+        xb = op.scatter(np.random.default_rng(3).normal(
+            size=g.n).astype(np.float32))
+        op.matvec(xb).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(20):
+            y = op.matvec(xb)
+        y.block_until_ready()
+        out[name]["spmv_us"] = (time.perf_counter() - t0) / 20 * 1e6
+    scale = float(np.abs(sols["dist_halo"]).max())
+    out["max_rel_vs_halo"] = max(
+        float(np.abs(x - sols["dist_halo"]).max()) / scale
+        for x in sols.values())
+    print(json.dumps(out))
+""")
+
+
+def _bench_hier(rows: list[str]) -> None:
+    """Multi-pod (pods=2, k=8) schedule vs the flat plan.
+
+    The headline number is the *round split*: the flat plan pays every one
+    of its colored rounds at inter-pod latency on a multi-pod machine,
+    while the hier plan pays only ``rounds_inter`` there (the intra rounds
+    ride the fast links and overlap the inter exchange).  Same
+    forced-host-device caveat as the overlap rows: local memcpy collectives
+    show the schedule's overhead, not its win.
+    """
+    proc = subprocess.run([sys.executable, "-c", HIER_SCRIPT],
+                          capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        rows.append(row("cg_hier__ERROR", 0,
+                        proc.stderr[-200:].replace(",", ";")))
+        return
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    rows.append(row(
+        "dist_hier_rounds", out["rounds_inter"],
+        f"inter={out['rounds_inter']};intra={out['rounds_intra']};"
+        f"flat_total={out['rounds_flat']};"
+        f"inter_lt_flat={int(out['rounds_inter'] < out['rounds_flat'])}"))
+    for name in ("dist_halo", "dist_hier", "dist_hier+block_jacobi"):
+        r = out[name]
+        rows.append(row(f"cg_hier__{name.replace('+', '_')}", r["wall_us"],
+                        f"iters={r['iters']};spmv_us={r['spmv_us']:.0f}"))
+    rows.append(row("cg_hier__max_rel_vs_halo",
+                    out["max_rel_vs_halo"] * 1e6,   # in 1e-6 units
+                    f"agree_1e-5={int(out['max_rel_vs_halo'] < 1e-5)}"))
+
+
 def _bench_build_plan(rows: list[str]) -> None:
     g = grid((256, 256))
     indptr, indices, data = laplacian_csr(g, shift=1e-2)
@@ -157,6 +248,7 @@ def run() -> list[str]:
     rows = []
     _bench_build_plan(rows)
     _bench_operator_backends(rows)
+    _bench_hier(rows)
     g = rdg(30000, seed=4)
     indptr, indices, data = laplacian_csr(g, shift=1e-2)
     rows_a, cols_a, vals_a = (jnp.asarray(a) for a in
@@ -206,3 +298,25 @@ def run() -> list[str]:
     rows.append(row("cg_model_topo3__uniform_oblivious", t_comp + t_comm,
                     f"comp={t_comp:.0f};comm={t_comm:.0f}"))
     return rows
+
+
+def main() -> None:
+    """``python -m benchmarks.bench_cg --hier`` (the ``make bench-hier``
+    target): only the multi-pod section, on forced host devices."""
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hier", action="store_true",
+                    help="run only the multi-pod (dist_hier) benchmark")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    rows: list[str] = []
+    if args.hier:
+        _bench_hier(rows)
+    else:
+        rows = run()
+    for r in rows:
+        print(r, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -94,6 +94,86 @@ def shard_map(f: Callable, *, mesh, in_specs, out_specs,
 
 
 # --------------------------------------------------------------------------
+# manual-region detection + sharding constraints
+# --------------------------------------------------------------------------
+
+def _manual_axes_from_abstract_mesh() -> set:
+    """Axis names the ambient *abstract* mesh marks Manual (current JAX).
+
+    Inside a ``shard_map`` body on current JAX the ambient abstract mesh
+    carries per-axis types; Manual axes are exactly the ones the body is
+    manual over.  ``axis_types`` has been both a tuple (one entry per axis)
+    and a dict (type -> names) across releases — handle either shape.
+    """
+    get_abs = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abs is None:
+        return set()
+    try:
+        mesh = get_abs()
+    except Exception:
+        return set()
+    axis_types = getattr(mesh, "axis_types", None)
+    if mesh is None or axis_types is None:
+        return set()
+    names = tuple(getattr(mesh, "axis_names", ()))
+    out: set = set()
+    if isinstance(axis_types, dict):                        # type -> name(s)
+        for t, ax in axis_types.items():
+            if "anual" in str(t):
+                out.update(ax if isinstance(ax, (tuple, list, set, frozenset))
+                           else (ax,))
+    else:                                                   # tuple per axis
+        for name, t in zip(names, tuple(axis_types)):
+            if "anual" in str(t):
+                out.add(name)
+    return out
+
+
+def _bound_axis_names() -> set:
+    """Axis names bound in the current trace's axis env (0.4.x/0.5.x).
+
+    Inside a fully-manual ``shard_map`` body the mesh axes are bound as
+    named axes (same mechanism as ``psum`` resolution), so this detects
+    manual regions on versions without abstract-mesh axis types.  (vmap
+    ``axis_name=`` also binds names — callers intersect with the mesh's
+    axis names, and constraining over a vmapped axis name would be just as
+    illegal, so the over-approximation is safe.)
+    """
+    fn = getattr(jax.core, "unsafe_get_axis_names_DO_NOT_USE", None)
+    if fn is None:
+        return set()
+    try:
+        return set(fn())
+    except Exception:
+        return set()
+
+
+def manual_axis_names() -> frozenset:
+    """Mesh axis names the *current trace* is manual over.
+
+    Empty outside ``shard_map``; inside a (fully or partially) manual
+    region it contains the manual axes, on every supported JAX version.
+    Used by ``models.common.maybe_constrain`` to drop manual axes from
+    sharding constraints (constraining over a manual axis is an error).
+    """
+    return frozenset(_manual_axes_from_abstract_mesh() | _bound_axis_names())
+
+
+def constrain_to_mesh(x, mesh, spec):
+    """``with_sharding_constraint`` against an ambient mesh of either kind.
+
+    A concrete ``Mesh`` (the 0.4.x ``with mesh:`` ambient) needs the spec
+    wrapped in a ``NamedSharding``; the current-JAX abstract ambient mesh
+    accepts the bare ``PartitionSpec``.  Deliberately *not* wrapped in a
+    try/except: spec errors (rank mismatch, unknown axis) must surface.
+    """
+    if isinstance(mesh, jax.sharding.Mesh):
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(mesh, spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# --------------------------------------------------------------------------
 # ambient mesh
 # --------------------------------------------------------------------------
 
@@ -136,4 +216,5 @@ def get_ambient_mesh() -> Any | None:
     return mesh
 
 
-__all__ = ["JAX_VERSION", "shard_map", "use_mesh", "get_ambient_mesh"]
+__all__ = ["JAX_VERSION", "shard_map", "use_mesh", "get_ambient_mesh",
+           "manual_axis_names", "constrain_to_mesh"]

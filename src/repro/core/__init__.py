@@ -2,10 +2,12 @@
 from .api import METHODS, evaluate, partition
 from .block_sizes import (hetero_batch_split, max_load_ratio,
                           target_block_sizes, target_block_sizes_jax)
-from .topology import PU, TABLE_III_FAST_SPECS, Topology, scale_to_load
+from .topology import (PU, TABLE_III_FAST_SPECS, Topology,
+                       contiguous_pods, scale_to_load)
 
 __all__ = [
     "METHODS", "evaluate", "partition", "target_block_sizes",
     "target_block_sizes_jax", "hetero_batch_split", "max_load_ratio",
-    "PU", "Topology", "scale_to_load", "TABLE_III_FAST_SPECS",
+    "PU", "Topology", "scale_to_load", "contiguous_pods",
+    "TABLE_III_FAST_SPECS",
 ]

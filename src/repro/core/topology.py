@@ -79,6 +79,20 @@ class Topology:
         """A valid solution exists iff the load fits in total memory."""
         return n <= self.total_memory + 1e-12
 
+    def pod_assignment(self, pods: int) -> np.ndarray:
+        """(k,) pod id per PU: contiguous equal-size grouping of the PU
+        list (``sparse.distributed.build_plan_hier``'s default).
+
+        Algorithm-1 block sizes follow the PU order, and every paper
+        topology lists the fast PUs first — so contiguous grouping puts
+        the fast PUs (which own the largest blocks and therefore share
+        the heaviest cut) inside one pod, where their exchange rides the
+        fast intra-pod links.  When ``fanouts`` describes a two-level
+        tree whose top fan-out equals ``pods`` (e.g. ``topo3``), the
+        grouping coincides with the tree's node boundaries.
+        """
+        return contiguous_pods(self.k, pods)
+
     # -- constructors for the paper's simulated systems ---------------------
     @staticmethod
     def homogeneous(k: int, speed: float = 1.0, memory: float = 2.0,
@@ -133,6 +147,15 @@ class Topology:
                               2.0 if fast else slow_memory,
                               f"n{node}c{c}"))
         return Topology(tuple(pus), fanouts=(nodes, cores_per_node))
+
+
+def contiguous_pods(k: int, pods: int) -> np.ndarray:
+    """(k,) pod id per block: contiguous equal-size grouping — block b
+    goes to pod ``b // (k // pods)``.  Requires ``pods | k`` (the
+    two-level meshes are rectangular)."""
+    if pods <= 0 or k % pods:
+        raise ValueError(f"pods={pods} must divide k={k}")
+    return np.arange(k, dtype=np.int64) // (k // pods)
 
 
 def scale_to_load(topo: Topology, n: float,

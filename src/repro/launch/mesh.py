@@ -17,9 +17,25 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_test_mesh(k: int = 8, axes: tuple[str, ...] = ("data",)):
-    """Small mesh for subprocess tests (host platform devices)."""
+def make_test_mesh(k: int = 8, axes: tuple[str, ...] = ("data",),
+                   pods: int | None = None):
+    """Small mesh for subprocess tests (host platform devices).
+
+    ``pods=p`` builds the two-level ``(p, k // p)`` mesh with axes
+    ``("pod", "pu")`` — the test-scale analogue of
+    ``make_production_mesh(multi_pod=True)``'s ``("pod", "data", "model")``
+    — for the hierarchical SpMV/CG plans (``sparse.distributed.
+    build_plan_hier`` / backend ``dist_hier``).
+    """
     devs = jax.devices()[:k]
+    if pods is not None:
+        if axes != ("data",):
+            raise ValueError("pods= fixes the axes to ('pod', 'pu'); "
+                             f"drop axes={axes!r}")
+        if pods <= 0 or k % pods:
+            raise ValueError(f"pods={pods} must divide k={k}")
+        return jax.sharding.Mesh(np.array(devs).reshape(pods, k // pods),
+                                 ("pod", "pu"))
     shape = (k,) if len(axes) == 1 else None
     return jax.sharding.Mesh(np.array(devs).reshape(
         shape or (k // 2, 2)), axes)

@@ -114,17 +114,35 @@ class ParamCollector:
 
 
 def maybe_constrain(x: jnp.ndarray, axes: tuple[str | None, ...]):
-    """with_sharding_constraint via logical axis names, using the mesh from
-    the surrounding `with mesh:` context.  No-op outside a mesh context
-    (single-device tests)."""
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is None or not mesh.axis_names:
-            return x
-        spec = logical_to_spec(axes, mesh_axes=tuple(mesh.axis_names))
-        return jax.lax.with_sharding_constraint(x, spec)
-    except Exception:
+    """with_sharding_constraint via logical axis names against the ambient
+    mesh (``compat.get_ambient_mesh`` — works on 0.4.x, where the previous
+    ``jax.sharding.get_abstract_mesh`` spelling silently no-op'd and dryrun
+    cells lowered without internal constraints).
+
+    No-op when no mesh is ambient (single-device tests).  Inside
+    ``shard_map`` *manual* regions, constraining over a manual axis is an
+    error, so manual axes are dropped from the candidate mesh axes — a
+    fully-manual region (every mesh axis manual, e.g. the MoE dispatch
+    body) skips the constraint entirely, while a partial-manual region
+    (e.g. the pod-manual gradient-compression wrapper) still constrains
+    over the remaining auto axes.  Genuine spec errors (rank mismatch,
+    unknown mesh axis) are deliberately *not* swallowed.
+    """
+    from ..compat import constrain_to_mesh, get_ambient_mesh, \
+        manual_axis_names
+
+    mesh = get_ambient_mesh()
+    if mesh is None:
         return x
+    axis_names = tuple(getattr(mesh, "axis_names", ()))
+    if not axis_names:
+        return x
+    manual = manual_axis_names()
+    avail = tuple(a for a in axis_names if a not in manual)
+    if not avail:
+        return x                       # fully-manual shard_map region
+    spec = logical_to_spec(axes, mesh_axes=avail)
+    return constrain_to_mesh(x, mesh, spec)
 
 
 # -- norms --------------------------------------------------------------------

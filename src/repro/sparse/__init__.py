@@ -11,10 +11,12 @@ Public surface:
   * ``cg``         — the one CG solver all backends share.
 """
 from .cg import CGResult, cg_solve, jacobi_preconditioner
+from .distributed import (DistPlan, HierPlan, build_plan, build_plan_hier)
 from .operator import (BACKENDS, BlockEllOperator, CooOperator,
                        DistributedOperator, Operator, make_operator,
                        cg_solve_global)
 
 __all__ = ["CGResult", "cg_solve", "jacobi_preconditioner", "BACKENDS",
            "Operator", "CooOperator", "BlockEllOperator",
-           "DistributedOperator", "make_operator", "cg_solve_global"]
+           "DistributedOperator", "make_operator", "cg_solve_global",
+           "DistPlan", "HierPlan", "build_plan", "build_plan_hier"]

@@ -45,8 +45,10 @@ def cg_solve(matvec: Callable[[jnp.ndarray], jnp.ndarray], b: jnp.ndarray,
     for distributed use (e.g. a psum-reduced local dot inside shard_map).
 
     ``precondition`` is ``None`` (plain CG), a callable ``z = M^-1(r)``,
-    or the string ``'jacobi'`` — resolved through the Operator's ``diag()``
-    (every backend carries its diagonal on-device).  Convergence is always
+    or a string — ``'jacobi'`` resolves through the Operator's ``diag()``
+    (every backend carries its diagonal on-device) and ``'block_jacobi'``
+    through the Operator's ``block_jacobi_preconditioner()`` (per-PU
+    diagonal blocks; distributed backends only).  Convergence is always
     tested on the *unpreconditioned* residual ||r||^2 <= tol^2 ||b||^2, so
     preconditioning changes the iteration count, never the stop quality.
     """
@@ -56,9 +58,19 @@ def cg_solve(matvec: Callable[[jnp.ndarray], jnp.ndarray], b: jnp.ndarray,
         dot = dot or getattr(op, "dot", None)
         if precondition == "jacobi":
             precondition = jacobi_preconditioner(op.diag())
-    if precondition == "jacobi":
-        raise ValueError("precondition='jacobi' needs an Operator with "
-                         "diag(); pass a callable M^-1 instead")
+        elif precondition == "block_jacobi":
+            bj = getattr(op, "block_jacobi_preconditioner", None)
+            if bj is None:
+                raise ValueError(
+                    "precondition='block_jacobi' needs an Operator with "
+                    "per-PU blocks (DistributedOperator); "
+                    f"{type(op).__name__} has none")
+            precondition = bj()
+    if isinstance(precondition, str):
+        raise ValueError(f"precondition={precondition!r} needs an Operator "
+                         "(jacobi: any backend with diag(); block_jacobi: "
+                         "distributed backends); pass a callable M^-1 "
+                         "instead")
     dot = dot or (lambda u, v: jnp.vdot(u, v))
     x = jnp.zeros_like(b) if x0 is None else x0
     r = b - matvec(x)

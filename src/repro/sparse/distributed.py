@@ -18,7 +18,7 @@ communication schedule Geographer-R uses for its pairwise refinement.  The
 halo buffer layout is (rounds, S) with stable slots, so column indices are
 remapped once on the host.
 
-Three exchange strategies are provided:
+Four exchange strategies are provided:
   * ``halo``       — ppermute rounds *overlapped* with compute: each
                      block's padded COO is split into interior rows (no
                      halo-slot columns) and boundary rows; the interior
@@ -31,6 +31,17 @@ Three exchange strategies are provided:
   * ``allgather``  — all_gather of the whole padded vector, comm volume
                      = O(n); the baseline a partitioner-oblivious system
                      would use.
+  * ``hier``       — the two-level schedule for multi-pod meshes
+                     (:func:`build_plan_hier`): halo edges are split into
+                     *intra-pod* and *inter-pod* segments, each with its
+                     own Misra-Gries coloring over the corresponding
+                     quotient graph.  Three stages: the interior matvec is
+                     issued first; intra-pod rounds ppermute over the fast
+                     per-pod axis while inter-pod rounds ppermute over the
+                     combined (pod x pu) axes; the intra-pod boundary
+                     accumulation only needs the fast rounds, so it
+                     overlaps with the slow inter-pod exchange, and only
+                     the inter-pod boundary rows wait on the slow links.
 
 Orthogonally, ``local_format`` selects the interior matvec kernel:
 padded-COO scatter-add (``'coo'``) or the Pallas block-ELL kernel of
@@ -49,6 +60,7 @@ ppermute schedule and halo slot layout are stable across the rewrite.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import jax
@@ -107,6 +119,7 @@ class DistPlan:
     _pack_dst: np.ndarray = None      # (nnz,) global dst vertex, packed order
     _cols_global: jnp.ndarray = None
     _bell: dict = dataclasses.field(default_factory=dict)
+    _bj_inv: jnp.ndarray = None       # lazy (k, B, B) block-Jacobi inverses
 
     @property
     def cols_global(self) -> jnp.ndarray:
@@ -160,10 +173,94 @@ class DistPlan:
         self._bell[key] = cached
         return cached
 
+    def block_jacobi_inv(self) -> jnp.ndarray:
+        """(k, B, B) f32 inverses of the per-PU diagonal blocks of A.
+
+        The diagonal block of PU b is assembled from the *local* edges the
+        plan already extracted (cols < B — exactly the entries the interior
+        + intra-block part of the matvec reads), so no second pass over the
+        CSR input is needed.  Rows with no local entries (ghost padding
+        rows, fully-halo rows) get an identity diagonal, which keeps their
+        zero residuals out of the Krylov space — the same convention as
+        :func:`cg.jacobi_preconditioner`.  Lazily computed and cached;
+        dense O(k B^3) host inversion, intended for the benchmark/test
+        scales this repo runs at (a production variant would sparse-
+        Cholesky the local blocks instead).
+        """
+        if self._bj_inv is None:
+            rows = np.asarray(self.rows)
+            cols = np.asarray(self.cols)
+            vals = np.asarray(self.vals, dtype=np.float64)
+            k, nnz_pad = rows.shape
+            per = np.asarray(self.nnz_blk, dtype=np.int64)
+            valid = np.arange(nnz_pad)[None, :] < per[:, None]
+            loc = valid & (cols < self.B)
+            M = np.zeros((k, self.B, self.B), dtype=np.float64)
+            bi, ei = np.nonzero(loc)
+            np.add.at(M, (bi, rows[bi, ei], cols[bi, ei]), vals[bi, ei])
+            zero_row = ~M.any(axis=2)                       # ghost + no-local
+            zb, zr = np.nonzero(zero_row)
+            M[zb, zr, zr] = 1.0
+            self._bj_inv = jnp.asarray(np.linalg.inv(M).astype(np.float32))
+        return self._bj_inv
+
 
 def _edge_endpoints(indptr: np.ndarray, indices: np.ndarray):
     src = np.repeat(np.arange(len(indptr) - 1), np.diff(indptr))
     return src, np.asarray(indices)
+
+
+def _pack_local_coo(indptr: np.ndarray, src: np.ndarray, data: np.ndarray,
+                    part: np.ndarray, order: np.ndarray, k: int,
+                    rows_l: np.ndarray, cols_l: np.ndarray,
+                    per_blk: np.ndarray):
+    """Pack edges per owning block into (k, nnz_pad) padded-COO arrays —
+    scatter, no per-block loop.  The slot of edge e is derived from CSR
+    structure in O(nnz) — no argsort: within a block, edges are laid out
+    by (owner rank, CSR order), exactly the order a stable argsort over
+    part[src] would give.  Shared by :func:`build_plan` and
+    :func:`build_plan_hier` so the packed edge order (the invariant the
+    bit-identity property tests guard) has one definition.
+
+    Returns ``(rows_a, cols_a, vals_a, pos_edge)``.
+    """
+    n = len(indptr) - 1
+    nnz_pad = max(int(per_blk.max()) if len(per_blk) else 1, 1)
+    deg = np.diff(indptr)
+    deg_o = deg[order]
+    # edge start of each vertex inside its block's packed segment
+    vstart = np.empty(n, dtype=np.int64)
+    blk_edge_start = np.cumsum(per_blk) - per_blk
+    vstart[order] = (np.cumsum(deg_o) - deg_o) - blk_edge_start[part[order]]
+    pos_edge = (vstart[src]
+                + (np.arange(len(src)) - np.repeat(indptr[:-1], deg)))
+    own = part[src]
+    rows_a = np.zeros((k, nnz_pad), dtype=np.int32)
+    cols_a = np.zeros((k, nnz_pad), dtype=np.int32)
+    vals_a = np.zeros((k, nnz_pad), dtype=np.float32)
+    rows_a[own, pos_edge] = rows_l
+    cols_a[own, pos_edge] = cols_l
+    vals_a[own, pos_edge] = data
+    return rows_a, cols_a, vals_a, pos_edge
+
+
+def _pack_segment(rows_a: np.ndarray, cols_a: np.ndarray, vals_a: np.ndarray,
+                  sel: np.ndarray):
+    """Pack the edges selected by boolean mask ``sel`` (k, nnz_pad) into
+    fresh (k, pad) arrays, preserving per-block packed edge order."""
+    k = rows_a.shape[0]
+    counts = sel.sum(axis=1)
+    pad = max(int(counts.max()) if k else 0, 1)
+    pos = np.cumsum(sel, axis=1) - 1
+    b, e = np.nonzero(sel)
+    r = np.zeros((k, pad), dtype=np.int32)
+    c = np.zeros((k, pad), dtype=np.int32)
+    v = np.zeros((k, pad), dtype=np.float32)
+    p = pos[b, e]
+    r[b, p] = rows_a[b, e]
+    c[b, p] = cols_a[b, e]
+    v[b, p] = vals_a[b, e]
+    return r, c, v
 
 
 def _derive_overlap_fields(rows_a: np.ndarray, cols_a: np.ndarray,
@@ -194,20 +291,7 @@ def _derive_overlap_fields(rows_a: np.ndarray, cols_a: np.ndarray,
     edge_bnd = valid & bnd_row[blk_col, rows_a]
     edge_int = valid & ~edge_bnd
 
-    def pack(sel):
-        counts = sel.sum(axis=1)
-        pad = max(int(counts.max()) if k else 0, 1)
-        pos = np.cumsum(sel, axis=1) - 1
-        b, e = np.nonzero(sel)
-        r = np.zeros((k, pad), dtype=np.int32)
-        c = np.zeros((k, pad), dtype=np.int32)
-        v = np.zeros((k, pad), dtype=np.float32)
-        p = pos[b, e]
-        r[b, p] = rows_a[b, e]
-        c[b, p] = cols_a[b, e]
-        v[b, p] = vals_a[b, e]
-        return r, c, v
-
+    pack = functools.partial(_pack_segment, rows_a, cols_a, vals_a)
     rows_int, cols_int, vals_int = pack(edge_int)
     rows_bnd, cols_bnd, vals_bnd = pack(edge_bnd)
 
@@ -225,11 +309,108 @@ def _derive_overlap_fields(rows_a: np.ndarray, cols_a: np.ndarray,
 
 
 # build_plan uses O(k*n) dense tables (counting sorts) up to this many
-# cells, and sort-based extraction beyond.  The widest live table is the
-# int32 halo-slot map (4 B/cell; the bool bitmaps are freed before it is
-# allocated), so the dense path peaks at ~64 MiB of transient tables at
-# this limit.  Module-level so tests can force the fallback path.
+# cells.  The widest live table is the int32 halo-slot map (4 B/cell; the
+# bool bitmaps are freed before it is allocated), so the single-shot dense
+# path peaks at ~64 MiB of transient tables at this limit.  Beyond it the
+# bitmap is *sharded by vertex range*: the same dedupe runs one
+# O(k * chunk) chunk at a time (chunk sized so k * chunk stays at the
+# limit), so production-scale k*n keeps the counting-sort extraction
+# instead of falling back to O(E log E) comparison sorts.  Module-level so
+# tests can force the sharded path.
 DENSE_PLAN_LIMIT = 1 << 24
+
+
+def _block_layout(part: np.ndarray, k: int, dense: bool = False):
+    """Block-contiguous vertex layout shared by all plan builders.
+
+    Returns ``(sizes, B, order, rank_in_block, perm, block_of)``.  With
+    ``dense`` a (k, n) one-hot flatnonzero replaces the argsort — that is
+    the counting sort for the (block, id) key directly, so both paths
+    yield the identical ``order``.
+    """
+    n = len(part)
+    sizes = np.bincount(part, minlength=k)
+    B = int(sizes.max())
+    if dense:
+        onehot = np.zeros(k * n, dtype=bool)
+        onehot[part.astype(np.int64) * n + np.arange(n)] = True
+        order = np.flatnonzero(onehot) % n             # new (unpadded) -> old
+        del onehot
+    else:
+        order = np.argsort(part, kind="stable")
+    starts = np.zeros(k + 1, dtype=np.int64)
+    np.cumsum(sizes, out=starts[1:])
+    rank_in_block = np.empty(n, dtype=np.int32)
+    rank_in_block[order] = np.arange(n, dtype=np.int64) - starts[part[order]]
+    perm = part.astype(np.int64) * B + rank_in_block   # padded new id
+    block_of = np.arange(k, dtype=np.int64) * B
+    return sizes, B, order, rank_in_block, perm, block_of
+
+
+def _ext_col_slots(flat_post: np.ndarray, flat_sorted, o2: np.ndarray,
+                   slot_of_trip: np.ndarray, ext_keys: np.ndarray,
+                   k: int, n: int, dense: bool) -> np.ndarray:
+    """Halo slot per external edge, from the per-triple slots.
+
+    Dense path: scatter the slots into a (k, n) table and gather by edge
+    key.  Sharded path: no O(k*n) table — binary-search the sorted
+    (recv, v) keys instead (``slot_at[p]`` = slot of the p-th sorted key).
+    Shared by :func:`build_plan` and :func:`build_plan_hier`.
+    """
+    if dense:
+        slot_arr = np.empty(k * n, dtype=np.int32)     # (recv, v) -> slot
+        slot_arr[flat_post] = slot_of_trip
+        return slot_arr[ext_keys]
+    slot_at = np.empty(len(flat_sorted), dtype=np.int32)
+    slot_at[o2] = slot_of_trip
+    return slot_at[np.searchsorted(flat_sorted, ext_keys)]
+
+
+def _halo_recv_v_pairs(part: np.ndarray, psrc: np.ndarray, dst: np.ndarray,
+                       ext: np.ndarray, k: int, n: int, dense: bool):
+    """Deduped (receiver, vertex) halo pairs, ascending by ``recv*n + v``.
+
+    Two equivalent bitmap paths (identical output), shared by
+    :func:`build_plan` and :func:`build_plan_hier`:
+
+      dense   — O(nnz + k*n): one (k, n) needed-bitmap + flatnonzero.
+                Used when the bitmap fits (k*n <= DENSE_PLAN_LIMIT cells).
+      sharded — the same dedupe one vertex-range chunk at a time
+                (k * chunk <= DENSE_PLAN_LIMIT cells live at once) for
+                production-scale k*n; per chunk the flatnonzero gives
+                (recv, v) ascending, and chunks partition the v range, so
+                one stable radix pass on recv restores global order.
+
+    Returns ``(flat, ext_keys)``: the sorted unique keys and the per-ext-
+    edge key (int32 on the dense path — k*n fits — int64 on the sharded).
+    """
+    if dense:
+        needed = np.zeros(k * n, dtype=bool)
+        ext_keys = psrc[ext] * np.int32(n) + dst[ext]
+        needed[ext_keys] = True
+        flat = np.flatnonzero(needed)                  # sorted (recv, v)
+        return flat, ext_keys
+    e_recv, e_dst = psrc[ext].astype(np.int64), dst[ext].astype(np.int64)
+    ext_keys = e_recv * n + e_dst
+    cn = max(1, DENSE_PLAN_LIMIT // max(k, 1))
+    chunk_of = e_dst // cn
+    n_chunks = -(-n // cn)
+    ord_c = np.argsort(chunk_of, kind="stable")
+    bounds = np.searchsorted(chunk_of[ord_c], np.arange(n_chunks + 1))
+    parts_flat = []
+    for ci in range(n_chunks):
+        sl = ord_c[bounds[ci]:bounds[ci + 1]]
+        if not len(sl):
+            continue
+        v0 = ci * cn
+        width = min(cn, n - v0)
+        bm = np.zeros(k * width, dtype=bool)
+        bm[e_recv[sl] * width + (e_dst[sl] - v0)] = True
+        fz = np.flatnonzero(bm)                        # sorted (recv, v_loc)
+        parts_flat.append((fz // width) * np.int64(n) + v0 + fz % width)
+    flat = (np.concatenate(parts_flat) if parts_flat
+            else np.zeros(0, dtype=np.int64))
+    return flat[np.argsort(flat // n, kind="stable")], ext_keys
 
 
 def build_plan(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
@@ -241,63 +422,25 @@ def build_plan(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
     """
     n = len(indptr) - 1
     part = np.ascontiguousarray(part, dtype=np.int32)
-    sizes = np.bincount(part, minlength=k)
-    B = int(sizes.max())
     # dense-table mode: O(k*n) bitmaps replace O(x log x) sorts wherever a
-    # small-range counting sort suffices; fall back to sorts for huge k*n
+    # small-range counting sort suffices; vertex-sharded bitmaps beyond
     dense = k * n <= DENSE_PLAN_LIMIT
-    # block-contiguous reordering: rank of each vertex within its block.
-    # order = vertices sorted by (block, id) — a (k, n) one-hot flatnonzero
-    # is that counting sort directly; argsort is the general fallback.
-    if dense:
-        onehot = np.zeros(k * n, dtype=bool)
-        onehot[part.astype(np.int64) * n + np.arange(n)] = True
-        order = np.flatnonzero(onehot) % n
-        del onehot
-    else:
-        order = np.argsort(part, kind="stable")       # new (unpadded) -> old
-    starts = np.zeros(k + 1, dtype=np.int64)
-    np.cumsum(sizes, out=starts[1:])
-    rank_in_block = np.empty(n, dtype=np.int32)
-    rank_in_block[order] = np.arange(n, dtype=np.int64) - starts[part[order]]
-    perm = part.astype(np.int64) * B + rank_in_block   # padded new id
-    block_of = np.arange(k, dtype=np.int64) * B
+    sizes, B, order, rank_in_block, perm, block_of = _block_layout(
+        part, k, dense=dense)
 
     # ---- halo triples: (receiver, owner, vertex), deduped & sorted -------
-    # Two equivalent extraction paths (identical triple order — sorted by
-    # (receiver, owner, vertex)):
-    #   dense  — O(nnz + k*n): dedupe through a (k, n) needed-bitmap, then
-    #            one radix argsort over the small-range pair keys.  Used
-    #            when the bitmap fits comfortably (k*n <= 2^26 cells).
-    #   sorted — O(E_ext log E_ext): np.unique over per-edge triple keys.
-    #            Fallback for huge k*n where O(k*n) memory is not ok.
     src, dst = _edge_endpoints(indptr, indices)
     psrc, pdst = part[src], part[dst]
     ext = psrc != pdst
-    # receiver = part[src] needs vertex dst owned by part[dst]
-    if dense:
-        needed = np.zeros(k * n, dtype=bool)
-        # k*n <= 2^26 here, so (recv, v) keys always fit int32
-        ext_keys = psrc[ext] * np.int32(n) + dst[ext]
-        needed[ext_keys] = True
-        flat = np.flatnonzero(needed)                  # sorted (recv, v)
-        del needed
-        t_v = flat % n
-        # int16 pair keys: 1-2 radix passes in the stable argsort below
-        pair_t = np.int16 if k * k <= np.iinfo(np.int16).max else np.int32
-        t_pair = ((flat // n).astype(pair_t) * pair_t(k)
-                  + part[t_v].astype(pair_t))          # recv*k + own
-        o2 = np.argsort(t_pair, kind="stable")         # radix; keeps v asc
-        t_pair, t_v, flat = t_pair[o2], t_v[o2], flat[o2]
-        uniq_trip = trip_of_edge = None                # unused on this path
-    else:
-        key_t = np.int32 if k * k * n < np.iinfo(np.int32).max else np.int64
-        pair_key_all = psrc * np.int32(k) + pdst
-        trip_key_e = (pair_key_all[ext].astype(key_t) * key_t(n)
-                      + dst[ext].astype(key_t))
-        uniq_trip, trip_of_edge = np.unique(trip_key_e, return_inverse=True)
-        t_pair = (uniq_trip // n).astype(np.int32)     # recv*k + own
-        t_v = uniq_trip % n
+    flat, ext_keys = _halo_recv_v_pairs(part, psrc, dst, ext, k, n, dense)
+    flat_sorted = None if dense else flat              # ascending (recv, v)
+    t_v = flat % n
+    # small-range pair keys: 1-2 radix passes in the stable argsort below
+    pair_t = np.int16 if k * k <= np.iinfo(np.int16).max else np.int32
+    t_pair = ((flat // n).astype(pair_t) * pair_t(k)
+              + part[t_v].astype(pair_t))              # recv*k + own
+    o2 = np.argsort(t_pair, kind="stable")             # radix; keeps v asc
+    t_pair, t_v, flat = t_pair[o2], t_v[o2], flat[o2]
     # triples sharing a (recv, own) pair are contiguous and sorted by v;
     # halo slot position = rank within the pair group.  t_pair is sorted,
     # so pair groups fall out of the boundary flags — no second unique/sort.
@@ -354,33 +497,12 @@ def build_plan(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
     # halo slot of remote vertex u on receiver r: B + round*S + pos,
     # precomputed per triple so the per-edge remap is one gather
     slot_of_trip = (B + t_color * S + t_pos).astype(np.int32)
-    if dense:
-        slot_arr = np.empty(k * n, dtype=np.int32)     # (recv, v) -> slot
-        slot_arr[flat] = slot_of_trip
-        cols_l[ext] = slot_arr[ext_keys]
-    else:
-        cols_l[ext] = slot_of_trip[trip_of_edge]
-    # pack edges per owning block (scatter, no per-block loop).  The slot of
-    # edge e is derived from CSR structure in O(nnz) — no argsort: within a
-    # block, edges are laid out by (owner rank, CSR order), exactly the
-    # order a stable argsort over part[src] would give.
+    cols_l[ext] = _ext_col_slots(flat, flat_sorted, o2, slot_of_trip,
+                                 ext_keys, k, n, dense)
     own = psrc
     per_blk = np.bincount(own, minlength=k)
-    nnz_pad = max(int(per_blk.max()) if len(per_blk) else 1, 1)
-    deg = np.diff(indptr)
-    deg_o = deg[order]
-    # edge start of each vertex inside its block's packed segment
-    vstart = np.empty(n, dtype=np.int64)
-    blk_edge_start = np.cumsum(per_blk) - per_blk
-    vstart[order] = (np.cumsum(deg_o) - deg_o) - blk_edge_start[part[order]]
-    pos_edge = (vstart[src]
-                + (np.arange(len(src)) - np.repeat(indptr[:-1], deg)))
-    rows_a = np.zeros((k, nnz_pad), dtype=np.int32)
-    cols_a = np.zeros((k, nnz_pad), dtype=np.int32)
-    vals_a = np.zeros((k, nnz_pad), dtype=np.float32)
-    rows_a[own, pos_edge] = rows_l
-    cols_a[own, pos_edge] = cols_l
-    vals_a[own, pos_edge] = data
+    rows_a, cols_a, vals_a, pos_edge = _pack_local_coo(
+        indptr, src, data, part, order, k, rows_l, cols_l, per_blk)
 
     row_mask = (np.arange(B)[None, :] < sizes[:, None]).astype(np.float32)
 
@@ -504,6 +626,288 @@ def build_plan_reference(indptr: np.ndarray, indices: np.ndarray,
 
 
 # --------------------------------------------------------------------------
+# hierarchical (two-level, multi-pod) plans
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HierPlan(DistPlan):
+    """Two-level plan for multi-pod meshes (:func:`build_plan_hier`).
+
+    Blocks are *pod-major*: device position = pod * k_local + local index,
+    matching a ``P((pod_axis, *intra_axes))`` sharding of the leading block
+    axis.  Halo edges are split into intra-pod segments (exchanged with
+    ppermute over the fast intra-pod axes — one shared schedule fires in
+    every pod at once, blocks without a given edge send masked zeros) and
+    inter-pod segments (ppermute over the combined pod x pu axes,
+    linearized device indices), each with its own Misra-Gries coloring.
+
+    The extended vector layout is ``[x_loc | intra slots | inter slots]``:
+    intra-boundary columns are < ``B + n_rounds_intra * S_intra``; only
+    inter-boundary rows read beyond that.  The base-class flat schedule
+    fields (``send_idx`` / ``send_mask`` / ``round_perms`` /
+    ``rows_bnd``...) are *not populated* — a HierPlan only runs under
+    ``comm='hier'`` (enforced by the matvec builder).
+    """
+
+    pods: int = 1
+    k_local: int = 1                    # blocks (= PUs) per pod
+    pod_of: np.ndarray = None           # (k,) pod of each pod-major block
+    block_map: np.ndarray = None        # (k,) original block id -> device pos
+    S_intra: int = 1
+    S_inter: int = 1
+    n_rounds_intra: int = 0
+    n_rounds_inter: int = 0
+    send_idx_intra: jnp.ndarray = None  # (k, R_a, S_a) int32
+    send_mask_intra: jnp.ndarray = None
+    send_idx_inter: jnp.ndarray = None  # (k, R_e, S_e) int32
+    send_mask_inter: jnp.ndarray = None
+    round_perms_intra: tuple = ()       # per round: (local_src, local_dst)
+    round_perms_inter: tuple = ()       # per round: linearized (src, dst)
+    rows_bnd_intra: jnp.ndarray = None  # rows reading intra slots only
+    cols_bnd_intra: jnp.ndarray = None  # < B + R_a*S_a
+    vals_bnd_intra: jnp.ndarray = None
+    rows_bnd_inter: jnp.ndarray = None  # rows reading >= 1 inter slot
+    cols_bnd_inter: jnp.ndarray = None  # < B + R_a*S_a + R_e*S_e
+    vals_bnd_inter: jnp.ndarray = None
+
+
+def _class_schedule(t_pair: np.ndarray, t_v: np.ndarray, k: int,
+                    q_of: np.ndarray, nq: int, rank_in_block: np.ndarray):
+    """Schedule one halo class (intra- or inter-pod) of directed-pair
+    triples.
+
+    ``t_pair`` (sorted ``recv*k + own`` keys; triples within a pair sorted
+    by vertex) is grouped into pair runs; the class's quotient graph —
+    nodes ``q_of[block]`` (local pu index for intra, global block id for
+    inter), so intra edges from *different pods* with the same local
+    endpoints merge into one colored edge and share a ppermute pair — is
+    Misra-Gries edge-colored; the owner-side send schedule and per-triple
+    halo slots fall out of (color, position-in-pair).
+
+    Returns ``(S, n_rounds, send_idx, send_mask, round_pairs, slot)`` with
+    ``slot`` the *relative* slot ``color * S + pos`` per triple and
+    ``round_pairs[c]`` the bidirectional quotient-node pairs of round c.
+    """
+    m = len(t_pair)
+    newp = np.empty(m, dtype=bool)
+    if m:
+        newp[0] = True
+        np.not_equal(t_pair[1:], t_pair[:-1], out=newp[1:])
+    grp_first = np.flatnonzero(newp)
+    uniq_pairs = t_pair[grp_first].astype(np.int64)
+    pair_counts = np.diff(np.append(grp_first, m))
+    pair_of_trip = np.cumsum(newp) - 1
+    t_pos = np.arange(m) - grp_first[pair_of_trip] if m else np.zeros(0, int)
+    S = max(1, int(pair_counts.max()) if len(pair_counts) else 1)
+
+    p_recv, p_own = uniq_pairs // k, uniq_pairs % k
+    q_r, q_o = q_of[p_recv], q_of[p_own]
+    und_key = np.minimum(q_r, q_o) * nq + np.maximum(q_r, q_o)
+    uniq_und, und_inv = np.unique(und_key, return_inverse=True)
+    und_a, und_b = uniq_und // nq, uniq_und % nq
+    und_w = np.zeros(len(uniq_und), dtype=np.float64)
+    np.add.at(und_w, und_inv, pair_counts)
+    qp = np.stack([und_a, und_b], axis=1).astype(np.int64)
+    colors = (vizing_edge_coloring(qp, und_w) if len(qp)
+              else np.zeros(0, np.int32))
+    n_rounds = int(colors.max() + 1) if len(colors) else 0
+    color_dir = np.zeros(nq * nq, dtype=np.int32)
+    color_dir[und_a * nq + und_b] = colors
+    color_dir[und_b * nq + und_a] = colors
+    t_color = (color_dir[q_of[(t_pair.astype(np.int64)) // k] * nq
+                         + q_of[t_pair.astype(np.int64) % k]]
+               if m else np.zeros(0, np.int32))
+
+    send_idx = np.zeros((k, n_rounds, S), dtype=np.int32)
+    send_mask = np.zeros((k, n_rounds, S), dtype=np.float32)
+    t_own = (uniq_pairs % k)[pair_of_trip] if m else np.zeros(0, int)
+    send_idx[t_own, t_color, t_pos] = rank_in_block[t_v]
+    send_mask[t_own, t_color, t_pos] = 1.0
+    round_pairs: list[list[tuple[int, int]]] = [[] for _ in range(n_rounds)]
+    pair_color = color_dir[und_a * nq + und_b]
+    for a, b, c in zip(und_a.tolist(), und_b.tolist(), pair_color.tolist()):
+        round_pairs[c].append((a, b))
+        round_pairs[c].append((b, a))
+    slot = (t_color * S + t_pos).astype(np.int32)
+    return (S, n_rounds, send_idx, send_mask,
+            tuple(tuple(r) for r in round_pairs), slot)
+
+
+def _derive_hier_fields(rows_a: np.ndarray, cols_a: np.ndarray,
+                        vals_a: np.ndarray, per_blk: np.ndarray,
+                        B: int, intra_hi: int) -> dict:
+    """Three-way interior / intra-boundary / inter-boundary split.
+
+    A row is *inter-boundary* iff any of its edges reads an inter-pod slot
+    (col >= ``intra_hi``), *intra-boundary* iff it reads intra slots but no
+    inter slots, *interior* otherwise.  Every edge of a row goes to the
+    row's segment, so the three segments exactly tile the true nnz set and
+    the PR 2 boundary set = intra + inter.  The interior criterion (no
+    halo reads at all) is identical to the flat plan's, so the interior
+    segment is bit-equal to :func:`build_plan`'s on the same partition.
+    """
+    k, nnz_pad = rows_a.shape
+    per_blk = np.asarray(per_blk, dtype=np.int64)
+    valid = np.arange(nnz_pad)[None, :] < per_blk[:, None]
+    inter_edge = valid & (cols_a >= intra_hi)
+    halo_edge = valid & (cols_a >= B)
+
+    def rows_hit(sel):
+        hit = np.zeros((k, B), dtype=bool)
+        bi, ei = np.nonzero(sel)
+        hit[bi, rows_a[bi, ei]] = True
+        return hit
+
+    inter_row = rows_hit(inter_edge)
+    bnd_row = rows_hit(halo_edge)
+    intra_row = bnd_row & ~inter_row
+
+    blk_col = np.arange(k)[:, None]
+    edge_inter = valid & inter_row[blk_col, rows_a]
+    edge_intra = valid & intra_row[blk_col, rows_a]
+    edge_int = valid & ~(edge_inter | edge_intra)
+
+    pack = functools.partial(_pack_segment, rows_a, cols_a, vals_a)
+    rows_int, cols_int, vals_int = pack(edge_int)
+    rows_ia, cols_ia, vals_ia = pack(edge_intra)
+    rows_ie, cols_ie, vals_ie = pack(edge_inter)
+
+    diag = np.zeros((k, B), dtype=np.float32)
+    on_diag = valid & (rows_a == cols_a)
+    db, de = np.nonzero(on_diag)
+    np.add.at(diag, (db, rows_a[db, de]), vals_a[db, de])
+    return dict(
+        rows_int=jnp.asarray(rows_int), cols_int=jnp.asarray(cols_int),
+        vals_int=jnp.asarray(vals_int),
+        rows_bnd_intra=jnp.asarray(rows_ia),
+        cols_bnd_intra=jnp.asarray(cols_ia),
+        vals_bnd_intra=jnp.asarray(vals_ia),
+        rows_bnd_inter=jnp.asarray(rows_ie),
+        cols_bnd_inter=jnp.asarray(cols_ie),
+        vals_bnd_inter=jnp.asarray(vals_ie),
+        diag=jnp.asarray(diag), nnz_blk=per_blk.copy(),
+        _bnd_row=bnd_row,
+    )
+
+
+def build_plan_hier(indptr: np.ndarray, indices: np.ndarray,
+                    data: np.ndarray, part: np.ndarray,
+                    pods, k: int) -> HierPlan:
+    """Build the two-level distributed plan for a multi-pod mesh.
+
+    ``pods`` is either the pod count (blocks are grouped contiguously —
+    block b goes to pod ``b // (k // pods)``, matching
+    ``core.topology.Topology.pod_assignment``: Algorithm-1 orders fast PUs
+    first, so the fast PUs that share the heaviest cut land in one pod) or
+    an explicit (k,) pod id per block.  Pods must be equal-sized (the mesh
+    is rectangular).  Blocks are relabeled pod-major; ``block_map`` maps
+    the caller's block ids to device positions (scatter/gather are
+    unaffected — they go through ``perm``).
+
+    Intra-pod and inter-pod halo edges get separate Misra-Gries colorings:
+    intra over the union of the pods' *local-index* quotient graphs (one
+    ppermute schedule over the fast axes fires in all pods at once), inter
+    over the global block quotient graph (ppermute over the combined
+    linearized axes).  Vectorized NumPy throughout; the only Python loops
+    are over quotient edges and chunks, as in :func:`build_plan`.
+    """
+    from ..core.topology import contiguous_pods
+
+    n = len(indptr) - 1
+    part = np.ascontiguousarray(part, dtype=np.int32)
+    if np.ndim(pods) == 0:
+        n_pods = int(pods)
+        pod_of_block = contiguous_pods(k, n_pods)
+    else:
+        pod_of_block = np.ascontiguousarray(pods, dtype=np.int64)
+        if len(pod_of_block) != k:
+            raise ValueError(f"pods array has {len(pod_of_block)} entries, "
+                             f"expected k={k}")
+        n_pods = int(pod_of_block.max()) + 1
+        counts = np.bincount(pod_of_block, minlength=n_pods)
+        if not (counts == counts[0]).all():
+            raise ValueError(f"pods must be equal-sized for a rectangular "
+                             f"mesh; got sizes {counts.tolist()}")
+    k_local = k // n_pods
+    # pod-major relabeling: device position = pod * k_local + rank in pod
+    order_blocks = np.argsort(pod_of_block, kind="stable")
+    block_map = np.empty(k, dtype=np.int64)
+    block_map[order_blocks] = np.arange(k)
+    part = block_map[part].astype(np.int32)
+    pod_of = np.arange(k, dtype=np.int64) // k_local
+    loc_of = np.arange(k, dtype=np.int64) % k_local
+
+    dense = k * n <= DENSE_PLAN_LIMIT
+    sizes, B, order, rank_in_block, perm, block_of = _block_layout(
+        part, k, dense=dense)
+
+    # ---- halo triples, split by pod locality ----------------------------
+    # same dense/vertex-sharded bitmap extraction as build_plan (one
+    # definition, DENSE_PLAN_LIMIT respected), then triples ordered by
+    # (directed pair, vertex) via the stable radix pass
+    src, dst = _edge_endpoints(indptr, indices)
+    psrc, pdst = part[src], part[dst]
+    ext = psrc != pdst
+    flat, ext_keys = _halo_recv_v_pairs(part, psrc, dst, ext, k, n, dense)
+    flat_sorted = None if dense else flat              # ascending (recv, v)
+    t_v_pre = flat % n
+    t_pair_pre = ((flat // n).astype(np.int64) * k
+                  + part[t_v_pre].astype(np.int64))    # recv*k + own
+    o2 = np.argsort(t_pair_pre, kind="stable")         # keeps v ascending
+    t_pair_all = t_pair_pre[o2]
+    t_v_all = t_v_pre[o2]
+    flat_post = flat[o2]
+    is_intra = pod_of[t_pair_all // k] == pod_of[t_pair_all % k]
+
+    S_a, R_a, send_idx_a, send_mask_a, perms_a, slot_a = _class_schedule(
+        t_pair_all[is_intra], t_v_all[is_intra], k, loc_of, k_local,
+        rank_in_block)
+    S_e, R_e, send_idx_e, send_mask_e, perms_e, slot_e = _class_schedule(
+        t_pair_all[~is_intra], t_v_all[~is_intra], k,
+        np.arange(k, dtype=np.int64), k, rank_in_block)
+    intra_hi = B + R_a * S_a
+
+    # absolute halo slot per triple: intra first, then the inter range
+    slot_of_trip = np.empty(len(t_pair_all), dtype=np.int32)
+    slot_of_trip[is_intra] = B + slot_a
+    slot_of_trip[~is_intra] = intra_hi + slot_e
+
+    # ---- local matrix in padded-COO (same packing as build_plan) --------
+    rows_l = rank_in_block[src]
+    cols_l = rank_in_block[dst]
+    cols_l[ext] = _ext_col_slots(flat_post, flat_sorted, o2, slot_of_trip,
+                                 ext_keys, k, n, dense)
+    own = psrc
+    per_blk = np.bincount(own, minlength=k)
+    rows_a, cols_a, vals_a, pos_edge = _pack_local_coo(
+        indptr, src, data, part, order, k, rows_l, cols_l, per_blk)
+
+    row_mask = (np.arange(B)[None, :] < sizes[:, None]).astype(np.float32)
+
+    split = _derive_hier_fields(rows_a, cols_a, vals_a, per_blk, B, intra_hi)
+    bnd_row = split.pop("_bnd_row")
+    interior_mask = row_mask * ~bnd_row
+
+    return HierPlan(
+        k=k, B=B, S=max(S_a, S_e), n_rounds=R_a + R_e, n=n, perm=perm,
+        block_of=block_of, sizes=sizes,
+        rows=jnp.asarray(rows_a), cols=jnp.asarray(cols_a),
+        vals=jnp.asarray(vals_a), row_mask=jnp.asarray(row_mask),
+        send_idx=None, send_mask=None, round_perms=(),
+        interior_mask=jnp.asarray(interior_mask), **split,
+        pods=n_pods, k_local=k_local, pod_of=pod_of, block_map=block_map,
+        S_intra=S_a, S_inter=S_e,
+        n_rounds_intra=R_a, n_rounds_inter=R_e,
+        send_idx_intra=jnp.asarray(send_idx_a),
+        send_mask_intra=jnp.asarray(send_mask_a),
+        send_idx_inter=jnp.asarray(send_idx_e),
+        send_mask_inter=jnp.asarray(send_mask_e),
+        round_perms_intra=perms_a, round_perms_inter=perms_e,
+        _pack_blk=own, _pack_pos=pos_edge, _pack_dst=dst,
+    )
+
+
+# --------------------------------------------------------------------------
 # shard_map programs
 # --------------------------------------------------------------------------
 
@@ -521,7 +925,28 @@ def _halo_exchange(plan: DistPlan, x_loc, send_idx, send_mask, axis: str):
     return jnp.concatenate([x_loc] + bufs)
 
 
-COMM_MODES = ("halo", "halo_seq", "allgather")
+def _hier_exchange(plan: HierPlan, x_loc, send_idx, send_mask, axes,
+                   perms, n_rounds):
+    """One class of hier rounds: returns the per-round (S,) buffers.
+
+    ``axes`` is the ppermute axis spec — the intra-pod axes (fast links;
+    the shared local-index schedule fires in every pod, masked zeros where
+    a pod lacks the edge) or the full (pod, *intra) tuple with linearized
+    device indices (inter-pod, slow links).
+    """
+    bufs = []
+    for c in range(n_rounds):
+        buf = x_loc[send_idx[c]] * send_mask[c]
+        perm = perms[c]
+        if perm:
+            buf = jax.lax.ppermute(buf, axes, perm)
+        else:
+            buf = jnp.zeros_like(buf)
+        bufs.append(buf)
+    return bufs
+
+
+COMM_MODES = ("halo", "halo_seq", "allgather", "hier")
 LOCAL_FORMATS = ("coo", "bell")
 
 
@@ -545,16 +970,77 @@ def _local_matvec_builder(plan: DistPlan, comm: str, axis: str,
     ``local_format='bell'`` runs the interior matvec through the Pallas
     block-ELL kernel (kernels/spmv_bell.py) instead of the COO scatter-add
     — ROADMAP's third comm/format combination.
+
+    ``comm='hier'`` is the three-stage multi-pod schedule and requires a
+    :class:`HierPlan` plus a *tuple* ``axis`` ``(pod_axis, *intra_axes)``:
+    interior matvec first, then intra-pod ppermute rounds over the fast
+    intra axes and inter-pod rounds over the combined axes — the
+    intra-pod boundary accumulation depends only on the fast rounds, so
+    it overlaps with the slow inter-pod exchange.
     """
     if comm not in COMM_MODES:
         raise ValueError(f"unknown comm mode {comm!r}; choose {COMM_MODES}")
     if local_format not in LOCAL_FORMATS:
         raise ValueError(f"unknown local format {local_format!r}; "
                          f"choose {LOCAL_FORMATS}")
-    if local_format == "bell" and comm != "halo":
-        raise ValueError("local_format='bell' requires comm='halo' (the "
-                         "interior/boundary split the kernel is built from)")
+    if local_format == "bell" and comm not in ("halo", "hier"):
+        raise ValueError("local_format='bell' requires comm='halo' or "
+                         "'hier' (the interior/boundary split the kernel "
+                         "is built from)")
+    if isinstance(plan, HierPlan) != (comm == "hier"):
+        raise ValueError(
+            "comm='hier' requires a HierPlan (build_plan_hier) and a "
+            "HierPlan only runs under comm='hier' — its halo layout has "
+            "separate intra-/inter-pod slot ranges that the flat "
+            f"schedules cannot address (got comm={comm!r}, "
+            f"plan={type(plan).__name__})")
     B = plan.B
+
+    if comm == "hier":
+        if isinstance(axis, str) or len(tuple(axis)) < 2:
+            raise ValueError("comm='hier' needs axis=(pod_axis, "
+                             f"*intra_axes) with >= 2 mesh axes; got "
+                             f"{axis!r}")
+        axes = tuple(axis)
+        intra_axes = axes[1] if len(axes) == 2 else axes[1:]
+        if local_format == "bell":
+            head = plan.bell_local()
+        else:
+            head = (plan.rows_int, plan.cols_int, plan.vals_int)
+        consts = head + (
+            plan.rows_bnd_intra, plan.cols_bnd_intra, plan.vals_bnd_intra,
+            plan.rows_bnd_inter, plan.cols_bnd_inter, plan.vals_bnd_inter,
+            plan.send_idx_intra, plan.send_mask_intra,
+            plan.send_idx_inter, plan.send_mask_inter, plan.row_mask)
+
+        n_head = len(head)
+
+        def fn(c, x):
+            (ra, ca, va, re, ce, ve,
+             sia, mia, sie, mie, row_mask) = c[n_head:]
+            # stage 1: interior matvec — no halo dependence at all
+            if local_format == "bell":
+                from ..kernels.spmv_bell import spmv_block_ell
+                y = spmv_block_ell(c[0], c[1], x)
+            else:
+                ri, ci, vi = c[:3]
+                y = jnp.zeros(B, jnp.float32).at[ri].add(vi * x[ci])
+            # stage 2: fast intra-pod rounds; stage 3 (inter-pod, slow
+            # links) is *issued* before the intra-boundary accumulation,
+            # so XLA overlaps that accumulation with the slow exchange
+            intra = _hier_exchange(plan, x, sia, mia, intra_axes,
+                                   plan.round_perms_intra,
+                                   plan.n_rounds_intra)
+            inter = _hier_exchange(plan, x, sie, mie, axes,
+                                   plan.round_perms_inter,
+                                   plan.n_rounds_inter)
+            x_intra = jnp.concatenate([x] + intra) if intra else x
+            y = y.at[ra].add(va * x_intra[ca])
+            x_full = jnp.concatenate([x_intra] + inter) if inter else x_intra
+            y = y.at[re].add(ve * x_full[ce])
+            return y * row_mask
+
+        return consts, fn
 
     if comm == "allgather":
         consts = (plan.rows, plan.cols_global, plan.vals, plan.row_mask)
@@ -616,8 +1102,10 @@ def make_dist_spmv(plan: DistPlan, mesh: Mesh, axis: str = "pu",
     ``comm='halo'`` (default) overlaps the interior matvec with the
     edge-colored ppermute rounds; ``comm='halo_seq'`` is the sequential
     reference schedule; ``comm='allgather'`` gathers the whole padded
-    vector (the partitioner-oblivious baseline).  ``local_format='bell'``
-    runs the interior matvec through the Pallas block-ELL kernel.
+    vector (the partitioner-oblivious baseline); ``comm='hier'`` is the
+    three-stage multi-pod schedule (needs a :class:`HierPlan` and
+    ``axis=(pod_axis, *intra_axes)``).  ``local_format='bell'`` runs the
+    interior matvec through the Pallas block-ELL kernel.
     """
     consts, local_fn = _local_matvec_builder(plan, comm, axis, local_format)
 
@@ -625,7 +1113,7 @@ def make_dist_spmv(plan: DistPlan, mesh: Mesh, axis: str = "pu",
         *cs, x = args
         return local_fn(tuple(c[0] for c in cs), x[0])[None]
 
-    spec = P(axis)
+    spec = P(axis if isinstance(axis, str) else tuple(axis))
     fn = shard_map(prog, mesh=mesh,
                    in_specs=(spec,) * (len(consts) + 1), out_specs=spec)
 
@@ -649,17 +1137,24 @@ def make_dist_cg(plan: DistPlan, mesh: Mesh, axis: str = "pu",
 
     ``precondition='jacobi'`` switches the body to preconditioned CG with
     M = diag(A); the diagonal is already on-device in ``plan.diag``,
-    extracted when the plan was built.  Convergence is still tested on the
-    unpreconditioned residual ||r||^2 <= tol^2 ||b||^2, so preconditioned
-    and unpreconditioned solves stop at the same solution quality.
+    extracted when the plan was built.  ``precondition='block_jacobi'``
+    uses the per-PU diagonal blocks instead (M = blockdiag(A_bb), applied
+    as one dense (B, B) matmul per device from the plan's cached
+    inverses).  Convergence is still tested on the unpreconditioned
+    residual ||r||^2 <= tol^2 ||b||^2, so preconditioned and
+    unpreconditioned solves stop at the same solution quality.
 
     This is the fused fast path; the composable path is
     ``operator.DistributedOperator`` + the generic ``cg.cg_solve``."""
-    if precondition not in (None, "jacobi"):
+    if precondition not in (None, "jacobi", "block_jacobi"):
         raise ValueError(f"unknown precondition {precondition!r}")
     consts, local_fn = _local_matvec_builder(plan, comm, axis, local_format)
-    jacobi = precondition == "jacobi"
-    all_consts = consts + ((plan.diag,) if jacobi else ())
+    prec_tail = ()
+    if precondition == "jacobi":
+        prec_tail = (plan.diag,)
+    elif precondition == "block_jacobi":
+        prec_tail = (plan.block_jacobi_inv(),)
+    all_consts = consts + prec_tail
 
     def cg_local(*args):
         # one CG implementation for every program shape: the generic
@@ -669,9 +1164,13 @@ def make_dist_cg(plan: DistPlan, mesh: Mesh, axis: str = "pu",
         cs = tuple(c[0] for c in cs)
         b = b[0]
         prec = None
-        if jacobi:
+        if precondition == "jacobi":
             prec = jacobi_preconditioner(cs[-1])
             cs = cs[:-1]
+        elif precondition == "block_jacobi":
+            minv = cs[-1]                 # (B, B); ghost rows identity, and
+            cs = cs[:-1]                  # ghost residuals are exactly zero
+            prec = lambda r: minv @ r
         row_mask = cs[-1]                 # builder contract: always last
 
         def dot(u, v):
@@ -681,7 +1180,7 @@ def make_dist_cg(plan: DistPlan, mesh: Mesh, axis: str = "pu",
                        max_iters=max_iters, dot=dot, precondition=prec)
         return res.x[None], res.residual[None], res.iters[None]
 
-    spec = P(axis)
+    spec = P(axis if isinstance(axis, str) else tuple(axis))
     fn = shard_map(cg_local, mesh=mesh,
                    in_specs=(spec,) * (len(all_consts) + 1),
                    out_specs=(spec, spec, spec))

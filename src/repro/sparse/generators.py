@@ -5,6 +5,8 @@
   * rdg_2d — random Delaunay triangulation graphs.
   * grid_2d / grid_3d — structured meshes (stand-in for the DIMACS hugeX
     triangle meshes, same family: planar, bounded degree).
+  * aniso_grid — grid with direction-dependent edge weights (anisotropic
+    diffusion; the block-Jacobi preconditioner's model problem).
   * refined_mesh — adaptively refined triangular mesh (refinetrace family):
     start from a coarse Delaunay mesh and refine cells near an attractor
     curve, giving strongly non-uniform density.
@@ -68,6 +70,35 @@ def grid(shape: tuple[int, ...]) -> Graph:
                       axis=1).astype(np.float32)
     coords /= np.maximum(1, np.array(shape, dtype=np.float32) - 1)
     return from_edges(n, src, dst, symmetrize=True, coords=coords)
+
+
+def aniso_grid(shape: tuple[int, ...], weights: tuple[float, ...] = None,
+               eps: float = 0.01) -> Graph:
+    """Structured grid with direction-dependent edge weights — the
+    anisotropic-diffusion model problem.  ``weights[d]`` is the coupling
+    along axis d (default ``(1, eps, eps, ...)``: strong along axis 0).
+    Its shifted Laplacian is the classic case where point-Jacobi stalls
+    but per-block preconditioners that keep whole strong lines inside a
+    block (e.g. axis-0 stripes + block-Jacobi) stay effective.
+    """
+    dims = len(shape)
+    if weights is None:
+        weights = (1.0,) + (eps,) * (dims - 1)
+    n = int(np.prod(shape))
+    idx = np.arange(n).reshape(shape)
+    src, dst, w = [], [], []
+    for axis in range(dims):
+        a = np.take(idx, np.arange(shape[axis] - 1), axis=axis).ravel()
+        b = np.take(idx, np.arange(1, shape[axis]), axis=axis).ravel()
+        src.append(a)
+        dst.append(b)
+        w.append(np.full(len(a), weights[axis], dtype=np.float32))
+    src, dst, w = (np.concatenate(src), np.concatenate(dst),
+                   np.concatenate(w))
+    coords = np.stack(np.unravel_index(np.arange(n), shape),
+                      axis=1).astype(np.float32)
+    coords /= np.maximum(1, np.array(shape, dtype=np.float32) - 1)
+    return from_edges(n, src, dst, w, symmetrize=True, coords=coords)
 
 
 def refined_mesh(n_coarse: int = 2000, refine_rounds: int = 3,

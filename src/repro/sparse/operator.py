@@ -19,7 +19,16 @@ interface so that one ``cg_solve`` and one benchmark harness drive
   * ``dist_bell``      — overlapped halo exchange with the interior
                          matvec in the Pallas block-ELL kernel (ROADMAP's
                          third comm/format combination);
-  * ``dist_allgather`` — shard_map, all_gather baseline.
+  * ``dist_allgather`` — shard_map, all_gather baseline;
+  * ``dist_hier``      — the two-level multi-pod schedule
+                         (``build_plan_hier``): interior matvec, then
+                         intra-pod ppermute rounds over the fast per-pod
+                         axes, then inter-pod rounds over the combined
+                         axes — intra-pod boundary accumulation overlaps
+                         the slow inter-pod exchange.  Needs ``pods=`` and
+                         a multi-axis mesh (``launch.mesh.make_test_mesh
+                         (k, pods=...)`` or
+                         ``make_production_mesh(multi_pod=True)``).
 
 Protocol
 --------
@@ -52,7 +61,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .cg import CGResult, cg_solve
-from .distributed import DistPlan, build_plan, make_dist_cg, make_dist_spmv
+from .distributed import (DistPlan, build_plan, build_plan_hier,
+                          make_dist_cg, make_dist_spmv)
 from .spmv import csr_diagonal, csr_to_padded_coo, spmv_coo
 
 
@@ -162,10 +172,12 @@ class DistributedOperator:
     """shard_map SpMV over a partition plan.
 
     ``comm`` picks the exchange schedule — ``'halo'`` (overlapped
-    interior/boundary, the default), ``'halo_seq'`` (sequential reference)
-    or ``'allgather'`` (partitioner-oblivious baseline); ``local_format``
-    picks the interior matvec kernel — ``'coo'`` scatter-add or ``'bell'``
-    (Pallas block-ELL, comm='halo' only).
+    interior/boundary, the default), ``'halo_seq'`` (sequential
+    reference), ``'allgather'`` (partitioner-oblivious baseline) or
+    ``'hier'`` (the three-stage multi-pod schedule; needs a ``HierPlan``
+    and a tuple ``axis``, see :meth:`from_csr`); ``local_format`` picks
+    the interior matvec kernel — ``'coo'`` scatter-add or ``'bell'``
+    (Pallas block-ELL, comm='halo' or 'hier').
 
     Operator space is the (k, B) padded block-major layout; ``dot`` is a
     plain vdot because ghost rows are zero in both vectors.  ``solve``
@@ -177,7 +189,7 @@ class DistributedOperator:
 
     plan: DistPlan
     mesh: object
-    axis: str = "pu"
+    axis: str | tuple = "pu"
     comm: str = "halo"
     local_format: str = "coo"
 
@@ -190,9 +202,25 @@ class DistributedOperator:
 
     @classmethod
     def from_csr(cls, indptr, indices, data, part, k, mesh,
-                 axis: str = "pu", comm: str = "halo",
-                 local_format: str = "coo"):
-        plan = build_plan(indptr, indices, data, part, k)
+                 axis: str | tuple = "pu", comm: str = "halo",
+                 local_format: str = "coo", pods=None):
+        """``comm='hier'`` builds the two-level plan (``pods`` = pod count
+        or explicit (k,) pod-of-block array) and defaults ``axis`` to the
+        mesh's full axis tuple ``(pod_axis, *intra_axes)`` — e.g.
+        ``('pod', 'pu')`` on ``make_test_mesh(k, pods=...)`` and
+        ``('pod', 'data', 'model')`` on
+        ``make_production_mesh(multi_pod=True)``."""
+        if comm == "hier":
+            if pods is None:
+                raise ValueError("comm='hier' needs pods= (pod count or "
+                                 "(k,) pod-of-block array)")
+            plan = build_plan_hier(indptr, indices, data, part, pods, k)
+            if axis == "pu":                    # default -> full mesh tuple
+                axis = tuple(mesh.axis_names)
+        else:
+            if pods is not None:
+                raise ValueError("pods= only applies to comm='hier'")
+            plan = build_plan(indptr, indices, data, part, k)
         return cls(plan=plan, mesh=mesh, axis=axis, comm=comm,
                    local_format=local_format)
 
@@ -206,6 +234,19 @@ class DistributedOperator:
         """(k, B) diagonal of A — extracted at plan build, already on
         device; ghost rows carry zero (handled by the preconditioner)."""
         return self.plan.diag
+
+    def block_jacobi_preconditioner(self):
+        """z = M^-1 r with M = blockdiag(A_bb), the per-PU diagonal blocks
+        the plan already extracted (``plan.block_jacobi_inv``).  Operator-
+        space application: one batched (B, B) matmul per block; ghost rows
+        are identity in M^-1 and their residuals exactly zero, so padding
+        stays out of the Krylov space."""
+        minv = self.plan.block_jacobi_inv()          # (k, B, B)
+
+        def apply(r):
+            return jnp.einsum("kij,kj->ki", minv, r)
+
+        return apply
 
     def scatter(self, x):
         return jnp.asarray(self.plan.scatter_vec(np.asarray(x)))
@@ -234,20 +275,26 @@ class DistributedOperator:
 # --------------------------------------------------------------------------
 
 BACKENDS = ("coo", "bell", "dist_halo", "dist_halo_seq", "dist_bell",
-            "dist_allgather")
+            "dist_allgather", "dist_hier")
 
 _DIST_MODES = {
     "dist_halo": ("halo", "coo"),
     "dist_halo_seq": ("halo_seq", "coo"),
     "dist_bell": ("halo", "bell"),
     "dist_allgather": ("allgather", "coo"),
+    "dist_hier": ("hier", "coo"),
 }
 
 
 def make_operator(indptr, indices, data, backend: str = "coo", *,
                   part=None, k: int | None = None, mesh=None,
-                  axis: str = "pu", **kw) -> Operator:
-    """One factory for every SpMV backend (see BACKENDS)."""
+                  axis: str | tuple = "pu", **kw) -> Operator:
+    """One factory for every SpMV backend (see BACKENDS).
+
+    ``dist_hier`` additionally needs ``pods=`` (pod count or explicit (k,)
+    pod-of-block array, e.g. ``core.topology.Topology.pod_assignment``)
+    and a multi-pod mesh; ``axis`` defaults to the mesh's full
+    ``(pod_axis, *intra_axes)`` tuple."""
     if backend == "coo":
         return CooOperator.from_csr(indptr, indices, data, **kw)
     if backend == "bell":

@@ -1,0 +1,63 @@
+"""NumPy simulation of the hierarchical (two-level) device schedule.
+
+Mirrors the ``comm='hier'`` shard_map program in
+``repro.sparse.distributed``: interior matvec from the local vector,
+intra-pod ppermute rounds (the shared local-index schedule fires in every
+pod), inter-pod rounds over linearized device indices, then the intra- and
+inter-boundary accumulations from the extended vector
+``[x_loc | intra slots | inter slots]``.  Shared by the deterministic and
+hypothesis hier-plan suites so hundreds of random plans are checked
+without devices.
+"""
+import numpy as np
+
+
+def hier_ext(plan, xb):
+    """Run both round classes: (k, B) -> (k, B + Ra*Sa + Re*Se)."""
+    k, B = plan.k, plan.B
+    kl, pods = plan.k_local, plan.pods
+    Ra, Sa = plan.n_rounds_intra, plan.S_intra
+    Re, Se = plan.n_rounds_inter, plan.S_inter
+    sia = np.asarray(plan.send_idx_intra)
+    mia = np.asarray(plan.send_mask_intra)
+    sie = np.asarray(plan.send_idx_inter)
+    mie = np.asarray(plan.send_mask_inter)
+    ext = np.zeros((k, B + Ra * Sa + Re * Se))
+    ext[:, :B] = xb
+    rows = np.arange(k)[:, None]
+    for c in range(Ra):
+        send = xb[rows, sia[:, c, :]] * mia[:, c, :]
+        recv = np.zeros_like(send)
+        for (a, b) in plan.round_perms_intra[c]:   # local pairs, every pod
+            for p in range(pods):
+                recv[p * kl + b] = send[p * kl + a]
+        ext[:, B + c * Sa:B + (c + 1) * Sa] = recv
+    off = B + Ra * Sa
+    for c in range(Re):
+        send = xb[rows, sie[:, c, :]] * mie[:, c, :]
+        recv = np.zeros_like(send)
+        for (s, d) in plan.round_perms_inter[c]:   # linearized device ids
+            recv[d] = send[s]
+        ext[:, off + c * Se:off + (c + 1) * Se] = recv
+    return ext
+
+
+def hier_spmv_numpy(plan, x):
+    """Execute the full three-stage hier schedule on a global (n,) x."""
+    xb = plan.scatter_vec(x)
+    ext = hier_ext(plan, xb)
+    y = np.zeros((plan.k, plan.B))
+    for seg in (("rows_int", "cols_int", "vals_int"),
+                ("rows_bnd_intra", "cols_bnd_intra", "vals_bnd_intra"),
+                ("rows_bnd_inter", "cols_bnd_inter", "vals_bnd_inter")):
+        r, c, v = (np.asarray(getattr(plan, f)) for f in seg)
+        for b in range(plan.k):
+            np.add.at(y[b], r[b], v[b] * ext[b, c[b]])
+    return plan.gather_vec(y * np.asarray(plan.row_mask))
+
+
+def segment_triples(rows, cols, vals, count):
+    """The first ``count`` packed (row, col, val) triples of one block."""
+    return list(zip(np.asarray(rows)[:count].tolist(),
+                    np.asarray(cols)[:count].tolist(),
+                    np.asarray(vals)[:count].tolist()))

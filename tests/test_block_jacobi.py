@@ -1,0 +1,81 @@
+"""Block-Jacobi (per-PU diagonal-block) PCG regression.
+
+The anisotropic grid Laplacian (strong coupling along axis 0, weak along
+axis 1 — ``generators.aniso_grid``) is the classic system where
+point-Jacobi barely helps: the diagonal carries no directional
+information.  Partitioning into axis-0 stripes keeps whole strong lines
+inside each PU's diagonal block, so block-Jacobi — built from the local
+blocks the distributed plan already extracted (``plan.block_jacobi_inv``)
+— must not iterate more than point-Jacobi, and in this regime iterates
+strictly less.  Runs the real shard_map operators on 4 forced host
+devices in a subprocess; both preconditioners stop on the same
+unpreconditioned residual, so solution quality is identical (checked
+against the ``coo`` reference).
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import numpy as np
+    import jax
+    from repro.sparse.generators import aniso_grid
+    from repro.sparse.graph import laplacian_csr
+    from repro.sparse import make_operator, cg_solve_global
+
+    g = aniso_grid((64, 16), eps=0.01)         # strong lines along axis 0
+    indptr, indices, data = laplacian_csr(g, shift=1e-2)
+    # axis-0 stripes: each PU owns contiguous whole strong lines
+    part = (np.arange(g.n) * 4) // g.n
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:4]), ("pu",))
+    b = np.random.default_rng(1).normal(size=g.n).astype(np.float32)
+
+    out = {}
+    sols = {}
+    op_ref = make_operator(indptr, indices, data, "coo")
+    sols["coo"], out["iters_coo"], _ = cg_solve_global(
+        op_ref, b, tol=1e-6, max_iters=4000)
+    op = make_operator(indptr, indices, data, "dist_halo",
+                       part=part, k=4, mesh=mesh)
+    for pre in (None, "jacobi", "block_jacobi"):
+        x, iters, res = cg_solve_global(op, b, tol=1e-6, max_iters=4000,
+                                        precondition=pre)
+        out[f"iters_{pre}"] = iters
+        sols[pre] = x
+    # fused whole-CG path with block-Jacobi
+    res = op.solve(b, tol=1e-6, max_iters=4000,
+                   precondition="block_jacobi")
+    out["iters_block_jacobi_fused"] = int(res.iters)
+    sols["bj_fused"] = op.gather(res.x)
+    scale = float(np.abs(sols["coo"]).max())
+    out["max_rel"] = max(float(np.abs(x - sols["coo"]).max()) / scale
+                         for x in sols.values())
+    print(json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def aniso_result():
+    proc = subprocess.run([sys.executable, "-c", SCRIPT],
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_block_jacobi_iters_at_most_jacobi(aniso_result):
+    r = aniso_result
+    assert r["iters_block_jacobi"] <= r["iters_jacobi"], r
+    # in the stripes-capture-strong-lines regime it is strictly better
+    assert r["iters_block_jacobi"] < r["iters_None"], r
+
+
+def test_block_jacobi_fused_matches_composable(aniso_result):
+    r = aniso_result
+    assert abs(r["iters_block_jacobi_fused"] - r["iters_block_jacobi"]) <= 1
+    assert r["max_rel"] < 1e-4, r

@@ -126,27 +126,31 @@ def test_empty_and_singleton_blocks():
 
 
 @pytest.mark.parametrize("k", [2, 8])
-def test_sorted_fallback_path_matches_dense_and_reference(lap, k, monkeypatch):
-    """Force the k*n > DENSE_PLAN_LIMIT sort-based extraction path (the one
-    production-scale instances take) and check it against both the dense
-    path and the seed reference builder."""
+@pytest.mark.parametrize("limit", [0, 777, 4096])
+def test_sharded_bitmap_path_matches_dense_and_reference(lap, k, limit,
+                                                         monkeypatch):
+    """Force the k*n > DENSE_PLAN_LIMIT vertex-range-sharded bitmap path
+    (the one production-scale instances take) and check it against both
+    the single-shot dense path and the seed reference builder.  The limit
+    values exercise one-vertex chunks (0), chunks that straddle the
+    vertex range unevenly (777), and a few large chunks (4096)."""
     import repro.sparse.distributed as dmod
     g, indptr, indices, data = lap
     part = np.random.default_rng(400 + k).integers(0, k, g.n)
     p_dense = build_plan(indptr, indices, data, part, k)
-    monkeypatch.setattr(dmod, "DENSE_PLAN_LIMIT", 0)
-    p_sorted = dmod.build_plan(indptr, indices, data, part, k)
+    monkeypatch.setattr(dmod, "DENSE_PLAN_LIMIT", limit)
+    p_shard = dmod.build_plan(indptr, indices, data, part, k)
     p_ref = build_plan_reference(indptr, indices, data, part, k)
     for other, tag in ((p_dense, "dense"), (p_ref, "reference")):
-        assert (p_sorted.k, p_sorted.B, p_sorted.S, p_sorted.n_rounds) == \
+        assert (p_shard.k, p_shard.B, p_shard.S, p_shard.n_rounds) == \
                (other.k, other.B, other.S, other.n_rounds), tag
-        assert p_sorted.round_perms == other.round_perms, tag
+        assert p_shard.round_perms == other.round_perms, tag
         for f in ("perm", "rows", "cols", "vals", "row_mask", "send_idx",
                   "send_mask", "rows_int", "cols_int", "vals_int",
                   "rows_bnd", "cols_bnd", "vals_bnd", "interior_mask",
                   "diag", "cols_global"):
             np.testing.assert_array_equal(
-                np.asarray(getattr(p_sorted, f)),
+                np.asarray(getattr(p_shard, f)),
                 np.asarray(getattr(other, f)), err_msg=f"{tag}:{f}")
 
 

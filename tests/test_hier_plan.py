@@ -1,0 +1,223 @@
+"""Deterministic tests for the hierarchical (two-level, multi-pod) plan.
+
+Host-only (the ppermute schedules are simulated in NumPy by
+``hier_sim.py``); the device-level shard_map execution of ``comm='hier'``
+is covered by the 8-device subprocess matrix in tests/test_operator.py.
+"""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from hier_sim import hier_spmv_numpy
+from repro.core.topology import Topology, contiguous_pods
+from repro.sparse.distributed import (HierPlan, build_plan, build_plan_hier,
+                                      _local_matvec_builder)
+from repro.sparse.generators import grid, rdg
+from repro.sparse.graph import laplacian_csr
+
+
+def dense_of(indptr, indices, data, n):
+    a = np.zeros((n, n), dtype=np.float64)
+    src = np.repeat(np.arange(n), np.diff(indptr))
+    np.add.at(a, (src, indices), data)
+    return a
+
+
+@pytest.fixture(scope="module")
+def lap():
+    g = rdg(600, seed=11)
+    indptr, indices, data = laplacian_csr(g, shift=1e-2)
+    return g, indptr, indices, data
+
+
+@pytest.mark.parametrize("k,pods", [(4, 2), (8, 2), (8, 4), (6, 3)])
+def test_hier_spmv_matches_dense_oracle(lap, k, pods):
+    g, indptr, indices, data = lap
+    part = np.random.default_rng(10 * k + pods).integers(0, k, g.n)
+    plan = build_plan_hier(indptr, indices, data, part, pods, k)
+    assert isinstance(plan, HierPlan)
+    assert plan.pods == pods and plan.k_local == k // pods
+    A = dense_of(indptr, indices, data, g.n)
+    x = np.random.default_rng(2).normal(size=g.n)
+    np.testing.assert_allclose(hier_spmv_numpy(plan, x),
+                               A @ x.astype(np.float32),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_interior_bit_equal_to_flat_plan(lap):
+    """The interior criterion (no halo reads) is partition-level, not
+    pod-level — so the hier interior segment must be bit-identical to the
+    flat plan's on the same partition."""
+    g, indptr, indices, data = lap
+    part = np.random.default_rng(0).integers(0, 8, g.n)
+    hp = build_plan_hier(indptr, indices, data, part, 2, 8)
+    fp = build_plan(indptr, indices, data, part, 8)
+    for f in ("rows_int", "cols_int", "vals_int", "interior_mask", "diag",
+              "rows", "row_mask", "perm"):
+        np.testing.assert_array_equal(np.asarray(getattr(hp, f)),
+                                      np.asarray(getattr(fp, f)), err_msg=f)
+
+
+def test_intra_inter_tile_flat_boundary(lap):
+    """Intra + inter segments exactly tile the PR 2 boundary set: per
+    block, the multiset of boundary (row, val) edges is preserved, intra
+    columns stay below the inter slot range, and every inter row reads at
+    least one inter slot."""
+    g, indptr, indices, data = lap
+    part = np.random.default_rng(1).integers(0, 8, g.n)
+    hp = build_plan_hier(indptr, indices, data, part, 2, 8)
+    fp = build_plan(indptr, indices, data, part, 8)
+    intra_hi = hp.B + hp.n_rounds_intra * hp.S_intra
+
+    def triples(rows, vals):
+        keep = np.asarray(vals) != 0
+        return sorted(zip(np.asarray(rows)[keep].tolist(),
+                          np.asarray(vals)[keep].tolist()))
+
+    for b in range(8):
+        flat_bnd = triples(fp.rows_bnd[b], fp.vals_bnd[b])
+        ia = triples(hp.rows_bnd_intra[b], hp.vals_bnd_intra[b])
+        ie = triples(hp.rows_bnd_inter[b], hp.vals_bnd_inter[b])
+        assert sorted(ia + ie) == flat_bnd
+        # intra segment never reads the inter slot range
+        ca = np.asarray(hp.cols_bnd_intra[b])[
+            np.asarray(hp.vals_bnd_intra[b]) != 0]
+        assert ca.size == 0 or ca.max() < intra_hi
+        # every inter row has at least one inter-slot read
+        ce = np.asarray(hp.cols_bnd_inter[b])
+        ve = np.asarray(hp.vals_bnd_inter[b])
+        re = np.asarray(hp.rows_bnd_inter[b])
+        for r in np.unique(re[ve != 0]):
+            assert (ce[(re == r) & (ve != 0)] >= intra_hi).any()
+
+
+def test_stripes_cut_inter_rounds_below_flat(lap):
+    """The acceptance shape: on a locality-preserving partition spanning 2
+    pods, the slow inter-pod round count is strictly below the flat plan's
+    total round count — only the pod-crossing cut pays the slow links."""
+    g = grid((32, 16))
+    indptr, indices, data = laplacian_csr(g, shift=1e-2)
+    part = (np.arange(g.n) * 8) // g.n           # contiguous stripes
+    hp = build_plan_hier(indptr, indices, data, part, 2, 8)
+    fp = build_plan(indptr, indices, data, part, 8)
+    assert hp.n_rounds_inter >= 1
+    assert hp.n_rounds_inter < fp.n_rounds
+    A = dense_of(indptr, indices, data, g.n)
+    x = np.random.default_rng(3).normal(size=g.n)
+    np.testing.assert_allclose(hier_spmv_numpy(hp, x),
+                               A @ x.astype(np.float32),
+                               atol=1e-3, rtol=1e-4)
+
+
+@pytest.mark.parametrize("limit", [0, 777])
+def test_hier_sharded_bitmap_path_bit_identical(lap, limit, monkeypatch):
+    """build_plan_hier shares build_plan's dense/vertex-sharded bitmap
+    extraction: forcing the sharded path must give a bit-identical plan."""
+    import repro.sparse.distributed as dmod
+    g, indptr, indices, data = lap
+    part = np.random.default_rng(9).integers(0, 8, g.n)
+    ref = build_plan_hier(indptr, indices, data, part, 2, 8)
+    monkeypatch.setattr(dmod, "DENSE_PLAN_LIMIT", limit)
+    p = dmod.build_plan_hier(indptr, indices, data, part, 2, 8)
+    assert p.round_perms_intra == ref.round_perms_intra
+    assert p.round_perms_inter == ref.round_perms_inter
+    for f in ("perm", "rows", "cols", "vals", "rows_int", "cols_int",
+              "vals_int", "rows_bnd_intra", "cols_bnd_intra",
+              "vals_bnd_intra", "rows_bnd_inter", "cols_bnd_inter",
+              "vals_bnd_inter", "send_idx_intra", "send_mask_intra",
+              "send_idx_inter", "send_mask_inter", "interior_mask", "diag"):
+        np.testing.assert_array_equal(np.asarray(getattr(p, f)),
+                                      np.asarray(getattr(ref, f)),
+                                      err_msg=f)
+
+
+def test_single_pod_degenerates_to_intra_only(lap):
+    g, indptr, indices, data = lap
+    part = np.random.default_rng(2).integers(0, 4, g.n)
+    hp = build_plan_hier(indptr, indices, data, part, 1, 4)
+    assert hp.n_rounds_inter == 0
+    assert not np.asarray(hp.vals_bnd_inter).any()
+    A = dense_of(indptr, indices, data, g.n)
+    x = np.random.default_rng(4).normal(size=g.n)
+    np.testing.assert_allclose(hier_spmv_numpy(hp, x),
+                               A @ x.astype(np.float32),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_explicit_pod_array_relabels_pod_major(lap):
+    """An interleaved pod assignment must be relabeled pod-major and still
+    produce a correct plan; block_map records the relabeling."""
+    g, indptr, indices, data = lap
+    part = np.random.default_rng(5).integers(0, 4, g.n)
+    pod_of = np.array([0, 1, 0, 1])              # interleaved
+    hp = build_plan_hier(indptr, indices, data, part, pod_of, 4)
+    assert hp.pods == 2 and hp.k_local == 2
+    # original blocks 0,2 -> pod 0 (devices 0,1); 1,3 -> pod 1 (2,3)
+    np.testing.assert_array_equal(hp.block_map, [0, 2, 1, 3])
+    np.testing.assert_array_equal(hp.pod_of, [0, 0, 1, 1])
+    sizes = np.bincount(part, minlength=4)
+    np.testing.assert_array_equal(hp.sizes, sizes[[0, 2, 1, 3]])
+    A = dense_of(indptr, indices, data, g.n)
+    x = np.random.default_rng(6).normal(size=g.n)
+    np.testing.assert_allclose(hier_spmv_numpy(hp, x),
+                               A @ x.astype(np.float32),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_pod_validation_errors(lap):
+    g, indptr, indices, data = lap
+    part = np.zeros(g.n, dtype=np.int64)
+    with pytest.raises(ValueError):              # pods must divide k
+        build_plan_hier(indptr, indices, data, part, 3, 4)
+    with pytest.raises(ValueError):              # unequal pod sizes
+        build_plan_hier(indptr, indices, data, part,
+                        np.array([0, 0, 0, 1]), 4)
+
+
+def test_hier_plan_rejects_flat_comm_modes(lap):
+    g, indptr, indices, data = lap
+    part = np.random.default_rng(7).integers(0, 4, g.n)
+    hp = build_plan_hier(indptr, indices, data, part, 2, 4)
+    fp = build_plan(indptr, indices, data, part, 4)
+    with pytest.raises(ValueError):
+        _local_matvec_builder(hp, "halo", "pu")
+    with pytest.raises(ValueError):
+        _local_matvec_builder(fp, "hier", ("pod", "pu"))
+    with pytest.raises(ValueError):              # needs a multi-axis tuple
+        _local_matvec_builder(hp, "hier", "pu")
+
+
+def test_topology_pod_assignment_contiguous():
+    topo = Topology.topo1(8, 2 / 8, 8.0, 8.5)
+    pods = topo.pod_assignment(2)
+    np.testing.assert_array_equal(pods, [0, 0, 0, 0, 1, 1, 1, 1])
+    np.testing.assert_array_equal(pods, contiguous_pods(8, 2))
+    # the fast PUs are listed first, so contiguous grouping puts both in
+    # pod 0 — the fast PUs (heaviest cut) share the fast links
+    assert [p.name for p in topo.pus[:2]] == ["fast0", "fast1"]
+    assert pods[0] == pods[1] == 0
+    with pytest.raises(ValueError):
+        contiguous_pods(8, 3)
+
+
+def test_block_jacobi_inv_inverts_local_blocks(lap):
+    """M^-1 from the plan matches dense inversion of the per-PU principal
+    submatrices, for flat and hier plans alike."""
+    g, indptr, indices, data = lap
+    part = np.random.default_rng(8).integers(0, 4, g.n)
+    A = sp.csr_matrix((data, indices, indptr), shape=(g.n, g.n))
+    for plan in (build_plan(indptr, indices, data, part, 4),
+                 build_plan_hier(indptr, indices, data, part, 2, 4)):
+        minv = np.asarray(plan.block_jacobi_inv())
+        order = np.argsort(np.asarray(plan.perm))   # vertices by padded id
+        starts = np.concatenate([[0], np.cumsum(plan.sizes)])
+        for b in range(4):
+            nb = int(plan.sizes[b])
+            mine = order[starts[b]:starts[b] + nb]
+            Ab = A[np.ix_(mine, mine)].toarray()
+            np.testing.assert_allclose(minv[b, :nb, :nb],
+                                       np.linalg.inv(Ab),
+                                       atol=1e-4, rtol=1e-3)
+            # ghost rows are identity
+            np.testing.assert_allclose(minv[b, nb:, nb:],
+                                       np.eye(plan.B - nb), atol=1e-6)

@@ -1,0 +1,101 @@
+"""``models.common.maybe_constrain`` compat-policy regression.
+
+The 0.4.x bug: the old implementation called
+``jax.sharding.get_abstract_mesh`` directly (absent on 0.4.x) inside a
+blanket ``except Exception: return x`` — so on old JAX every internal
+sharding constraint silently vanished (XLA involuntary-remat warnings on
+the dry-run), and on current JAX genuine ``logical_to_spec`` errors were
+swallowed too.  Now it routes through ``compat.get_ambient_mesh`` /
+``compat.manual_axis_names``:
+
+  * no ambient mesh -> identity (single-device tests);
+  * ambient mesh -> the constraint is *applied* (committed sharding
+    matches the logical rules) on every JAX version;
+  * fully-manual shard_map region -> skipped (constraining over manual
+    axes is an error);
+  * genuine spec bugs (rank mismatch) -> raise instead of no-op.
+
+Device-dependent cases run on 8 forced host devices in a subprocess.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.common import maybe_constrain
+
+
+def test_identity_without_ambient_mesh():
+    x = jnp.ones((4, 8))
+    assert maybe_constrain(x, ("batch", "act_embed")) is x
+
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.compat import shard_map, use_mesh
+    from repro.models.common import maybe_constrain
+
+    mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+    out = {}
+
+    # 1) ambient mesh: the constraint must actually be applied — the old
+    #    0.4.x code path returned x unconstrained here
+    x = jnp.ones((8, 16))
+    with use_mesh(mesh):
+        y = jax.jit(lambda a: maybe_constrain(
+            a, ("batch", "act_embed")))(x)
+    expect = NamedSharding(mesh, P("data", None))
+    out["constrained"] = y.sharding.is_equivalent_to(expect, 2)
+
+    # 2) fully-manual shard_map region: constraint skipped, no crash
+    def body(a):
+        return maybe_constrain(a, ("batch", "act_embed")) * 2.0
+
+    with use_mesh(mesh):
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(P(("data", "model")),),
+                       out_specs=P(("data", "model")))
+        z = jax.jit(fn)(jnp.ones((8, 4)))
+    out["manual_ok"] = bool(np.allclose(np.asarray(z), 2.0))
+
+    # 3) genuine spec bug (rank mismatch) surfaces instead of no-op
+    try:
+        with use_mesh(mesh):
+            jax.jit(lambda a: maybe_constrain(
+                a, ("batch", "seq", "act_embed")))(jnp.ones((8, 16)))
+        out["raises_on_rank_mismatch"] = False
+    except Exception:
+        out["raises_on_rank_mismatch"] = True
+
+    print(json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def device_result():
+    proc = subprocess.run([sys.executable, "-c", SCRIPT],
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_constraint_applied_under_ambient_mesh(device_result):
+    assert device_result["constrained"], device_result
+
+
+def test_skipped_inside_manual_shard_map_region(device_result):
+    assert device_result["manual_ok"], device_result
+
+
+def test_spec_errors_surface(device_result):
+    assert device_result["raises_on_rank_mismatch"], device_result

@@ -44,6 +44,16 @@ def test_factory_and_protocol(system):
         make_operator(indptr, indices, data, "nope")
     with pytest.raises(ValueError):
         make_operator(indptr, indices, data, "dist_halo")   # missing part/k
+    with pytest.raises(ValueError):
+        make_operator(indptr, indices, data, "dist_hier")   # missing part/k
+
+
+def test_block_jacobi_requires_distributed_backend(system):
+    (indptr, indices, data), A, b = system
+    import jax.numpy as jnp
+    op = make_operator(indptr, indices, data, "coo")
+    with pytest.raises(ValueError):
+        cg_solve(op, jnp.asarray(b), precondition="block_jacobi")
 
 
 @pytest.mark.parametrize("backend", ["coo", "bell"])
@@ -103,11 +113,15 @@ def test_jacobi_requires_operator():
 
 
 # -- cross-backend agreement matrix (one subprocess, 8 host devices) -------
+# The dist_hier rows run on the two-level (pods=2, k=8) mesh from
+# make_test_mesh(8, pods=2) — the ISSUE acceptance configuration.
 
 CROSS_BACKENDS = ("coo", "coo+jacobi", "bell", "bell+jacobi",
                   "dist_halo", "dist_halo+jacobi",
-                  "dist_halo+jacobi_fused", "dist_halo_seq", "dist_bell",
-                  "dist_allgather")
+                  "dist_halo+jacobi_fused", "dist_halo+block_jacobi",
+                  "dist_halo_seq", "dist_bell",
+                  "dist_allgather", "dist_hier", "dist_hier+jacobi",
+                  "dist_hier+block_jacobi_fused")
 
 CROSS_SCRIPT = textwrap.dedent("""
     import os
@@ -118,22 +132,27 @@ CROSS_SCRIPT = textwrap.dedent("""
     from repro.sparse.generators import grid
     from repro.sparse.graph import laplacian_csr
     from repro.sparse import make_operator, cg_solve_global
+    from repro.launch.mesh import make_test_mesh
 
     g = grid((24, 24))                       # the 2-D grid Laplacian
     indptr, indices, data = laplacian_csr(g, shift=0.1)
     part = np.random.default_rng(0).integers(0, 8, g.n)
     mesh = jax.sharding.Mesh(np.array(jax.devices()), ("pu",))
+    mesh_hier = make_test_mesh(8, pods=2)    # ("pod", "pu") = (2, 4)
     b = np.random.default_rng(1).normal(size=g.n).astype(np.float32)
 
     sols = {}
     for name in %r:
         backend, _, variant = name.partition("+")
-        kw = (dict(part=part, k=8, mesh=mesh)
-              if backend.startswith("dist") else {})
+        kw = {}
+        if backend.startswith("dist"):
+            kw = dict(part=part, k=8, mesh=mesh)
+            if backend == "dist_hier":
+                kw.update(mesh=mesh_hier, pods=2)
         op = make_operator(indptr, indices, data, backend, **kw)
-        if variant == "jacobi_fused":
+        if variant.endswith("fused"):
             res = op.solve(b, tol=1e-7, max_iters=2000,
-                           precondition="jacobi")
+                           precondition=variant[:-6] or None)
             sols[name] = op.gather(res.x)
         else:
             x, _, _ = cg_solve_global(op, b, tol=1e-7, max_iters=2000,

@@ -3,9 +3,10 @@
 Three invariant families, each on random CSR matrices (varying n, k,
 degree, duplicate edges, empty/disconnected blocks):
 
-  * ``build_plan`` — both the dense-bitmap path and the sort-based
-    fallback it takes beyond DENSE_PLAN_LIMIT — stays *bit-identical* to
-    the seed per-edge ``build_plan_reference`` on every plan field;
+  * ``build_plan`` — both the single-shot dense-bitmap path and the
+    vertex-range-sharded bitmap path it takes beyond DENSE_PLAN_LIMIT —
+    stays *bit-identical* to the seed per-edge ``build_plan_reference``
+    on every plan field;
   * the interior/boundary split exactly tiles each block's true nnz set,
     preserves packed edge order, keeps interior columns local (< B), and
     extracts the correct diagonal;
@@ -68,14 +69,14 @@ def test_build_plan_bit_identical_to_reference(system):
     ref = build_plan_reference(indptr, indices, data, part, k)
     assert_plans_identical(build_plan(indptr, indices, data, part, k),
                            ref, "dense")
-    # force the sort-based extraction path production-scale k*n takes
+    # force the sharded-bitmap extraction path production-scale k*n takes
     old = dmod.DENSE_PLAN_LIMIT
     dmod.DENSE_PLAN_LIMIT = 0
     try:
-        p_sorted = dmod.build_plan(indptr, indices, data, part, k)
+        p_sharded = dmod.build_plan(indptr, indices, data, part, k)
     finally:
         dmod.DENSE_PLAN_LIMIT = old
-    assert_plans_identical(p_sorted, ref, "sorted")
+    assert_plans_identical(p_sharded, ref, "sharded")
 
 
 def _valid_triples(rows, cols, vals, count):
