@@ -4,7 +4,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test tier1 deps bench-cg bench bench-hier
+.PHONY: test tier1 deps bench-cg bench bench-hier bench-pod
 
 deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -24,6 +24,11 @@ bench-cg:
 # forced host devices (the subprocess sets the XLA flag itself)
 bench-hier:
 	$(PYTHON) -m benchmarks.bench_cg --hier
+
+# Pod-aware vs pod-oblivious partitions of the same (pods=2, k=8) mesh:
+# inter-pod comm volume / rounds and dist_hier CG time (ISSUE 4)
+bench-pod:
+	$(PYTHON) -m benchmarks.bench_cg --pod-aware
 
 bench:
 	$(PYTHON) -m benchmarks.run

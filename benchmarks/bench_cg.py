@@ -164,6 +164,107 @@ HIER_SCRIPT = textwrap.dedent("""
 """)
 
 
+POD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, time
+    import numpy as np
+    import jax
+    from repro.core import (Topology, contiguous_pods, partition_hier,
+                            scale_to_load)
+    from repro.core.metrics import pod_comm_volumes
+    from repro.sparse import make_operator, cg_solve_global
+    from repro.sparse.generators import grid
+    from repro.sparse.graph import laplacian_csr
+    from repro.launch.mesh import make_test_mesh
+
+    # stripes across the long axis: every stripe boundary (and the
+    # contiguous-pod cut) is a full 128-wide grid line — the
+    # pod-oblivious worst case the pipeline must beat
+    g = grid((16, 128))
+    indptr, indices, data = laplacian_csr(g, shift=1e-2)
+    topo = scale_to_load(Topology.homogeneous(8), g.n)
+    mesh_hier = make_test_mesh(8, pods=2)            # ("pod", "pu")
+    b = np.random.default_rng(1).normal(size=g.n).astype(np.float32)
+
+    part_s = ((np.arange(g.n) * 8) // g.n).astype(np.int32)
+    pod_c = contiguous_pods(8, 2)
+    res = partition_hier(g, topo, "geoRef", pods=2)
+
+    out = {}
+    for name, part, pods in (("oblivious", part_s, pod_c),
+                             ("pod_aware", res.part, res.pod_of)):
+        _, inter_v = pod_comm_volumes(g, part, 8, pods)
+        if name == "pod_aware":      # partitioner output drives the runtime
+            op = make_operator(indptr, indices, data, "dist_hier",
+                               part=res, mesh=mesh_hier)
+        else:
+            op = make_operator(indptr, indices, data, "dist_hier",
+                               part=part, k=8, mesh=mesh_hier, pods=pods)
+        plan = op.plan               # the HierPlan the runtime executes
+        t0 = time.perf_counter()
+        x, iters, resid = cg_solve_global(op, b, tol=1e-7, max_iters=2000)
+        wall = (time.perf_counter() - t0) * 1e6
+        xb = op.scatter(np.random.default_rng(3).normal(
+            size=g.n).astype(np.float32))
+        op.matvec(xb).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(20):
+            y = op.matvec(xb)
+        y.block_until_ready()
+        out[name] = {
+            "inter_comm_volume": int(inter_v.sum()),
+            "max_inter_comm_volume": int(inter_v.max()),
+            "rounds_inter": plan.n_rounds_inter,
+            "rounds_intra": plan.n_rounds_intra,
+            "iters": iters, "res": resid, "cg_wall_us": wall,
+            "spmv_us": (time.perf_counter() - t0) / 20 * 1e6,
+        }
+        out[name + "_x"] = np.asarray(x).tolist()
+    xa = np.array(out.pop("oblivious_x"))
+    xb_ = np.array(out.pop("pod_aware_x"))
+    out["max_rel_between"] = float(
+        np.abs(xa - xb_).max() / np.abs(xa).max())
+    print(json.dumps(out))
+""")
+
+
+def _bench_pod(rows: list[str]) -> None:
+    """Pod-aware vs pod-oblivious partitions of the same mesh (ISSUE 4).
+
+    The headline number is ``inter_comm_volume`` — the words the hier
+    schedule moves over the slow inter-pod links.  The pod-aware
+    pipeline (pods-first geoRef + pod-level sweep + weighted FM) must
+    come in strictly below the stripes-with-contiguous-pods baseline at
+    <= inter-pod rounds.  Same forced-host-device caveat as the other
+    distributed rows: local memcpy collectives show schedule overhead,
+    not the slow-link win the volumes quantify.
+    """
+    proc = subprocess.run([sys.executable, "-c", POD_SCRIPT],
+                          capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        rows.append(row("cg_pod__ERROR", 0,
+                        proc.stderr[-200:].replace(",", ";")))
+        return
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    for name in ("oblivious", "pod_aware"):
+        r = out[name]
+        rows.append(row(
+            f"cg_pod__{name}", r["cg_wall_us"],
+            f"interCV={r['inter_comm_volume']};"
+            f"maxInterCV={r['max_inter_comm_volume']};"
+            f"rounds_inter={r['rounds_inter']};"
+            f"rounds_intra={r['rounds_intra']};"
+            f"iters={r['iters']};spmv_us={r['spmv_us']:.0f}"))
+    ob, pa = out["oblivious"], out["pod_aware"]
+    rows.append(row(
+        "cg_pod__inter_volume_ratio",
+        ob["inter_comm_volume"] / max(pa["inter_comm_volume"], 1),
+        f"pod_aware_lower={int(pa['inter_comm_volume'] < ob['inter_comm_volume'])};"
+        f"rounds_le={int(pa['rounds_inter'] <= ob['rounds_inter'])};"
+        f"agree_1e-5={int(out['max_rel_between'] < 1e-5)}"))
+
+
 def _bench_hier(rows: list[str]) -> None:
     """Multi-pod (pods=2, k=8) schedule vs the flat plan.
 
@@ -249,6 +350,7 @@ def run() -> list[str]:
     _bench_build_plan(rows)
     _bench_operator_backends(rows)
     _bench_hier(rows)
+    _bench_pod(rows)
     g = rdg(30000, seed=4)
     indptr, indices, data = laplacian_csr(g, shift=1e-2)
     rows_a, cols_a, vals_a = (jnp.asarray(a) for a in
@@ -301,17 +403,24 @@ def run() -> list[str]:
 
 
 def main() -> None:
-    """``python -m benchmarks.bench_cg --hier`` (the ``make bench-hier``
-    target): only the multi-pod section, on forced host devices."""
+    """``python -m benchmarks.bench_cg --hier`` (``make bench-hier``):
+    only the multi-pod schedule section; ``--pod-aware``
+    (``make bench-pod``): only the pod-aware vs pod-oblivious partition
+    comparison.  Both on forced host devices."""
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--hier", action="store_true",
                     help="run only the multi-pod (dist_hier) benchmark")
+    ap.add_argument("--pod-aware", action="store_true",
+                    help="run only the pod-aware vs pod-oblivious "
+                         "partition comparison")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     rows: list[str] = []
     if args.hier:
         _bench_hier(rows)
+    elif args.pod_aware:
+        _bench_pod(rows)
     else:
         rows = run()
     for r in rows:

@@ -1,13 +1,16 @@
 """LDHT core: the paper's contribution as a composable library."""
-from .api import METHODS, evaluate, partition
+from .api import (HierPartition, METHODS, evaluate, partition,
+                  partition_hier, pod_assignment_for)
 from .block_sizes import (hetero_batch_split, max_load_ratio,
                           target_block_sizes, target_block_sizes_jax)
-from .topology import (PU, TABLE_III_FAST_SPECS, Topology,
-                       contiguous_pods, scale_to_load)
+from .topology import (INTER_LINK_COST, INTRA_LINK_COST, LinkCosts, PU,
+                       TABLE_III_FAST_SPECS, Topology, contiguous_pods,
+                       normalize_pod_of, scale_to_load)
 
 __all__ = [
-    "METHODS", "evaluate", "partition", "target_block_sizes",
-    "target_block_sizes_jax", "hetero_batch_split", "max_load_ratio",
-    "PU", "Topology", "scale_to_load", "contiguous_pods",
-    "TABLE_III_FAST_SPECS",
+    "METHODS", "evaluate", "partition", "partition_hier", "HierPartition",
+    "pod_assignment_for", "target_block_sizes", "target_block_sizes_jax",
+    "hetero_batch_split", "max_load_ratio", "PU", "Topology",
+    "scale_to_load", "contiguous_pods", "normalize_pod_of", "LinkCosts",
+    "INTRA_LINK_COST", "INTER_LINK_COST", "TABLE_III_FAST_SPECS",
 ]

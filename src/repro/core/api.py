@@ -15,11 +15,24 @@ Methods (paper nomenclature):
              geometric initial partition + combinatorial refinement)
   greedyRef— BFS-greedy growing + multilevel FM    (ParMetisGraph-like:
              combinatorial initial partition + combinatorial refinement)
+
+Pod-aware mode (``pods=``): the flat objective (Eq. 1) ignores that on a
+multi-pod machine only the *inter-pod* cut pays slow-link latency
+(``sparse.distributed`` ``comm='hier'``).  :func:`partition_hier` runs
+the whole pipeline hierarchically, WindGP-style: Algorithm-1 targets are
+aggregated per pod (``Topology.pod_aggregate``), the graph is first
+partitioned into pods (minimizing the future inter-pod cut directly),
+then within each pod into its PUs, then a pod-level sweep regroups
+equal-spec blocks on the quotient graph and a weighted FM pass refines
+against the two-level objective (inter-pod edges cost lambda-x intra,
+``topology.LinkCosts``).  The returned :class:`HierPartition` carries the
+pod assignment the hier runtime consumes directly
+(``make_operator(..., part=hier_partition)``).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Callable
 
 import numpy as np
 
@@ -27,35 +40,45 @@ from ..sparse.graph import Graph
 from .balanced_kmeans import (partition_balanced_kmeans,
                               partition_hierarchical_kmeans)
 from .block_sizes import target_block_sizes
-from .metrics import summarize
+from .metrics import summarize, summarize_hier
 from .multilevel import partition_multilevel_refine
 from .rcb import partition_rcb
+from .refinement import (quotient_graph, refine_partition,
+                         refine_pod_assignment)
 from .rib import partition_rib
 from .sfc import partition_sfc
-from .topology import Topology
+from .topology import Topology, normalize_pod_of
 
 
 def _greedy_growing(g: Graph, tw: np.ndarray, seed: int = 0) -> np.ndarray:
     """Combinatorial initial partition: multi-source BFS region growing with
-    heterogeneous capacities (GGP — the classic Metis-style initializer)."""
+    heterogeneous capacities (GGP — the classic Metis-style initializer).
+
+    Blocks with a zero rounded target get no seed and receive no orphans
+    — on fully saturated topologies a zero-target block must stay empty,
+    not grab a seed vertex another block needs."""
     rng = np.random.default_rng(seed)
     k = len(tw)
     want = np.round(tw).astype(np.int64)
     want[np.argmax(want)] += g.n - want.sum()
     part = -np.ones(g.n, dtype=np.int32)
+    active = np.flatnonzero(want > 0)
     # seeds: spread via random picks (BFS-farthest would be better; this is
     # the baseline tool, quality is allowed to be baseline-ish)
-    seeds = rng.choice(g.n, size=k, replace=False)
+    seeds = np.full(k, -1, dtype=np.int64)
+    seeds[active] = rng.choice(g.n, size=len(active), replace=False)
     from collections import deque
-    queues = [deque([int(s)]) for s in seeds]
+    queues = [deque([int(seeds[b])] if seeds[b] >= 0 else [])
+              for b in range(k)]
     sizes = np.zeros(k, dtype=np.int64)
-    for b, s in enumerate(seeds):
+    for b in active:
+        s = seeds[b]
         if part[s] == -1:
             part[s] = b
             sizes[b] += 1
-    active = True
-    while active:
-        active = False
+    active_mask = want > 0
+    while True:
+        progressed_any = False
         for b in np.argsort(sizes / np.maximum(want, 1)):
             if sizes[b] >= want[b] or not queues[b]:
                 continue
@@ -68,31 +91,35 @@ def _greedy_growing(g: Graph, tw: np.ndarray, seed: int = 0) -> np.ndarray:
                         sizes[b] += 1
                         queues[b].append(int(u))
                         progressed = True
-                active = active or progressed
-    # orphans (disconnected leftovers): assign to the most underloaded block
+            progressed_any = progressed_any or progressed
+        if not progressed_any:
+            break
+    # orphans (disconnected leftovers): most underloaded *active* block —
+    # never a zero-target one
     for v in np.nonzero(part == -1)[0]:
-        b = int(np.argmin(sizes / np.maximum(want, 1)))
+        ratio = np.where(active_mask, sizes / np.maximum(want, 1), np.inf)
+        b = int(np.argmin(ratio))
         part[v] = b
         sizes[b] += 1
     return part
 
 
-def partition(g: Graph, topo: Topology, method: str = "geoRef",
-              tw: np.ndarray | None = None, seed: int = 0,
-              eps: float = 0.03, **kw) -> tuple[np.ndarray, np.ndarray]:
-    """Two-stage LDHT solve.  Returns (part, tw)."""
-    if tw is None:
-        tw = target_block_sizes(g.n, topo)
-    mems = topo.memories
+def _dispatch(g: Graph, method: str, tw: np.ndarray, mems: np.ndarray,
+              fanouts: tuple[int, ...], seed: int, eps: float,
+              **kw) -> np.ndarray:
+    """Stage-2 method dispatch shared by the flat and hierarchical
+    pipelines; ``tw``/``mems``/``fanouts`` describe whatever block level
+    is being partitioned (PUs, or pods for the hier top level)."""
     if method == "geoKM":
         part = partition_balanced_kmeans(g, tw, seed=seed, **kw)
     elif method == "geoRef":
         part = partition_balanced_kmeans(g, tw, seed=seed, **kw)
-        part = partition_multilevel_refine(g, part, tw, mems=mems, eps=eps)
+        part = partition_multilevel_refine(g, part, tw, mems=mems, eps=eps,
+                                           seed=seed)
     elif method == "geoHier":
-        part = partition_hierarchical_kmeans(g, tw, topo.fanouts, seed=seed,
-                                             **kw)
-        part = partition_multilevel_refine(g, part, tw, mems=mems, eps=eps)
+        part = partition_hierarchical_kmeans(g, tw, fanouts, seed=seed, **kw)
+        part = partition_multilevel_refine(g, part, tw, mems=mems, eps=eps,
+                                           seed=seed)
     elif method == "sfc":
         part = partition_sfc(g, tw, seed=seed)
     elif method == "rcb":
@@ -101,13 +128,154 @@ def partition(g: Graph, topo: Topology, method: str = "geoRef",
         part = partition_rib(g, tw, seed=seed)
     elif method == "sfcRef":
         part = partition_sfc(g, tw, seed=seed)
-        part = partition_multilevel_refine(g, part, tw, mems=mems, eps=eps)
+        part = partition_multilevel_refine(g, part, tw, mems=mems, eps=eps,
+                                           seed=seed)
     elif method == "greedyRef":
         part = _greedy_growing(g, tw, seed=seed)
-        part = partition_multilevel_refine(g, part, tw, mems=mems, eps=eps)
+        part = partition_multilevel_refine(g, part, tw, mems=mems, eps=eps,
+                                           seed=seed)
     else:
         raise ValueError(f"unknown method {method!r}")
-    return part.astype(np.int32), tw
+    return np.asarray(part, dtype=np.int32)
+
+
+def partition(g: Graph, topo: Topology, method: str = "geoRef",
+              tw: np.ndarray | None = None, seed: int = 0,
+              eps: float = 0.03, pods=None, lam: float | None = None,
+              **kw) -> tuple[np.ndarray, np.ndarray]:
+    """Two-stage LDHT solve.  Returns (part, tw).
+
+    With ``pods`` (pod count or explicit (k,) pod-of-PU array) the
+    pipeline runs hierarchically via :func:`partition_hier`; use that
+    function directly when you also need the resulting pod assignment
+    (e.g. to feed ``sparse.distributed.build_plan_hier``)."""
+    if pods is not None:
+        res = partition_hier(g, topo, method, pods=pods, tw=tw, seed=seed,
+                             eps=eps, lam=lam, **kw)
+        return res.part, res.tw
+    if tw is None:
+        tw = target_block_sizes(g.n, topo)
+    part = _dispatch(g, method, tw, topo.memories, topo.fanouts, seed, eps,
+                     **kw)
+    return part, tw
+
+
+@dataclasses.dataclass
+class HierPartition:
+    """Pod-aware pipeline output: the partition *and* the co-optimized
+    pod assignment that the hier runtime consumes.
+
+    ``pod_of[b]`` is the pod of block b.  After the pod-level sweep it
+    need not be contiguous — ``sparse.distributed.build_plan_hier``
+    relabels blocks pod-major internally (``block_map``), and
+    ``sparse.make_operator(..., backend='dist_hier', part=<this>)``
+    unpacks everything directly.
+    """
+
+    part: np.ndarray        # (n,) vertex -> block (= PU)
+    tw: np.ndarray          # (k,) Algorithm-1 targets, PU order
+    pod_of: np.ndarray      # (k,) block -> pod
+    lam: float              # inter/intra link-cost ratio of the objective
+
+    @property
+    def k(self) -> int:
+        return len(self.tw)
+
+    @property
+    def n_pods(self) -> int:
+        return int(self.pod_of.max()) + 1
+
+
+def _spec_groups(topo: Topology) -> np.ndarray:
+    """(k,) group id per PU: PUs are interchangeable (their blocks may
+    trade pod slots) iff they share (speed, memory)."""
+    spec = np.stack([topo.speeds, topo.memories], axis=1)
+    _, groups = np.unique(spec, axis=0, return_inverse=True)
+    return groups
+
+
+def pod_assignment_for(g: Graph, part: np.ndarray, topo: Topology,
+                       pods) -> np.ndarray:
+    """Partition-derived pod assignment for an existing (flat) partition:
+    start from ``Topology.pod_assignment`` and KL-sweep equal-spec blocks
+    on the quotient graph (``refinement.refine_pod_assignment``) so the
+    heaviest block pairs share pods.  The inter-pod cut never increases
+    versus the contiguous grouping; feed the result to
+    ``build_plan_hier``/``make_operator`` as the explicit pod array."""
+    pod_of = normalize_pod_of(pods, topo.k)
+    pairs, w = quotient_graph(g, np.asarray(part, dtype=np.int32), topo.k)
+    return refine_pod_assignment(pairs, w, pod_of,
+                                 groups=_spec_groups(topo))
+
+
+def partition_hier(g: Graph, topo: Topology, method: str = "geoRef",
+                   pods=2, tw: np.ndarray | None = None, seed: int = 0,
+                   eps: float = 0.03, lam: float | None = None,
+                   refine: bool = True, **kw) -> HierPartition:
+    """Pod-aware two-level pipeline (the tentpole of the hier runtime):
+
+      A. Algorithm-1 targets are aggregated per pod
+         (``Topology.pod_aggregate``) and the graph is partitioned into
+         *pods* with the chosen method — the future inter-pod cut is
+         minimized directly, at the pod-level granularity;
+      B. each pod's subgraph is partitioned into its PUs with the leaf
+         targets (rescaled to the realized pod sizes);
+      C. a pod-level KL sweep regroups equal-spec blocks on the quotient
+         graph (``refinement.refine_pod_assignment``) — the
+         partition-derived pod assignment;
+      D. scheduled pairwise FM refines against the weighted two-level
+         objective (inter-pod edges cost ``lam``-x intra ones).
+
+    ``lam`` defaults to the topology's link-cost ratio
+    (``topo.link_costs().lam`` — the hier round-latency model).
+    """
+    if tw is None:
+        tw = target_block_sizes(g.n, topo)
+    tw = np.asarray(tw, dtype=np.float64)
+    if lam is None:
+        lam = topo.link_costs().lam
+    pod_of = normalize_pod_of(pods, topo.k)
+    n_pods = int(pod_of.max()) + 1
+    if n_pods == 1:
+        part = _dispatch(g, method, tw, topo.memories, topo.fanouts, seed,
+                         eps, **kw)
+        return HierPartition(part=part, tw=tw, pod_of=pod_of, lam=lam)
+
+    # A. pods first, on Algorithm-1 targets aggregated per pod
+    pod_topo = topo.pod_aggregate(pod_of)
+    pod_tw = np.zeros(n_pods)
+    np.add.at(pod_tw, pod_of, tw)
+    vertex_pod = _dispatch(g, method, pod_tw, pod_topo.memories,
+                           (n_pods,), seed, eps, **kw)
+
+    # B. within each pod, on the leaf targets (rescaled to realized size)
+    part = np.empty(g.n, dtype=np.int32)
+    mems = topo.memories
+    for p in range(n_pods):
+        pus = np.flatnonzero(pod_of == p)
+        mask = vertex_pod == p
+        n_p = int(mask.sum())
+        if n_p == 0:
+            continue
+        sub, ids = g.subgraph(mask)
+        tw_p = tw[pus] * (n_p / max(tw[pus].sum(), 1e-12))
+        if len(pus) == 1:
+            part[ids] = pus[0]
+            continue
+        sub_part = _dispatch(sub, method, tw_p, mems[pus],
+                             (len(pus),), seed + p + 1, eps, **kw)
+        part[ids] = pus[sub_part]
+
+    # C. pod-level sweep: co-optimize the pod assignment with the
+    # realized partition (equal-spec blocks may trade pod slots)
+    if refine:
+        pairs, w = quotient_graph(g, part, topo.k)
+        pod_of = refine_pod_assignment(pairs, w, pod_of,
+                                       groups=_spec_groups(topo))
+        # D. vertex-level FM against the weighted two-level objective
+        part = refine_partition(g, part, tw, mems=mems, eps=eps,
+                                pod_of=pod_of, lam=lam)
+    return HierPartition(part=part, tw=tw, pod_of=pod_of, lam=lam)
 
 
 METHODS = ("geoKM", "geoRef", "geoHier", "sfc", "rcb", "rib", "sfcRef",
@@ -115,19 +283,35 @@ METHODS = ("geoKM", "geoRef", "geoHier", "sfc", "rcb", "rib", "sfcRef",
 
 
 def evaluate(g: Graph, topo: Topology, methods=METHODS, seed: int = 0,
+             pods=None, lam: float | None = None,
              verbose: bool = True) -> dict[str, dict]:
-    """Run all methods; return {method: metrics+time} (Table IV analogue)."""
+    """Run all methods; return {method: metrics+time} (Table IV analogue).
+
+    With ``pods`` each method runs the pod-aware pipeline
+    (:func:`partition_hier`) and the metrics include the intra/inter-pod
+    split plus the weighted two-level objective."""
     out = {}
     tw = target_block_sizes(g.n, topo)
     for m in methods:
         t0 = time.perf_counter()
-        part, _ = partition(g, topo, m, tw=tw, seed=seed)
+        if pods is None:
+            part, _ = partition(g, topo, m, tw=tw, seed=seed)
+            s = summarize(g, part, topo, tw)
+        else:
+            res = partition_hier(g, topo, m, pods=pods, tw=tw, seed=seed,
+                                 lam=lam)
+            part = res.part
+            s = summarize_hier(g, part, topo, tw, res.pod_of, lam=res.lam)
         dt = time.perf_counter() - t0
-        s = summarize(g, part, topo, tw)
         s["time_s"] = dt
         out[m] = s
         if verbose:
-            print(f"  {m:10s} cut={s['cut']:9.0f} maxCV={s['max_comm_volume']:6d}"
-                  f" imb={s['imbalance']:.3f} memViol={s['mem_violations']}"
-                  f" t={dt:6.2f}s")
+            line = (f"  {m:10s} cut={s['cut']:9.0f}"
+                    f" maxCV={s['max_comm_volume']:6d}"
+                    f" imb={s['imbalance']:.3f}"
+                    f" memViol={s['mem_violations']}")
+            if pods is not None:
+                line += (f" interCV={s['comm_volume_inter']:6d}"
+                         f" obj={s['two_level_objective']:9.0f}")
+            print(line + f" t={dt:6.2f}s")
     return out

@@ -71,9 +71,12 @@ def partition_multilevel_refine(g: Graph, part0: np.ndarray, tw: np.ndarray,
                                 ) -> np.ndarray:
     """Geographer-R refinement given an initial partition (e.g. geoKM).
 
-    Note: on coarse levels supernodes have weight > 1; the pairwise FM uses
-    unit weights, so we run it with caps scaled by the mean supernode weight.
-    Boundary-exact refinement happens at the finest level.
+    On coarse levels supernodes have weight > 1; the per-level supernode
+    weights (``contract``'s ``cvw``) are threaded into the pairwise FM's
+    size/cap accounting, so the heterogeneous caps (Eq. 3) hold in true
+    vertex units at every level — a heavy supernode cannot slip into a
+    block whose *mean*-scaled cap would have admitted it.  Boundary-exact
+    refinement happens at the finest level (unit weights there).
     """
     graphs = [g]
     parts = [np.asarray(part0, dtype=np.int32).copy()]
@@ -84,24 +87,25 @@ def partition_multilevel_refine(g: Graph, part0: np.ndarray, tw: np.ndarray,
         if cur.n <= coarsest:
             break
         match = heavy_edge_matching(cur, cpart, seed=seed + lvl)
-        cg, cp, f2c, cvw = contract(cur, cpart, match)
+        cg, cp, f2c, _cvw = contract(cur, cpart, match)
         if cg.n >= cur.n * 0.95:      # matching stalled
             break
         graphs.append(cg)
         parts.append(cp)
         maps.append(f2c)
-        vws.append(cvw)
+        # cumulative weight in *finest*-vertex units (not the previous
+        # level's supernode count): caps stay comparable across levels
+        vws.append(np.bincount(f2c, weights=vws[-1],
+                               minlength=cg.n).astype(np.int64))
         if verbose:
             print(f"  level {lvl + 1}: {cg.n} vertices")
 
-    # refine coarsest -> finest
-    k = len(tw)
+    # refine coarsest -> finest: targets/caps stay in true vertex units,
+    # the per-level supernode weights carry the size accounting
     for lvl in range(len(graphs) - 1, -1, -1):
-        scale = graphs[0].n / graphs[lvl].n     # avg supernode weight
-        tw_l = np.asarray(tw) / scale
-        mems_l = None if mems is None else np.asarray(mems) / scale
-        parts[lvl] = refine_partition(graphs[lvl], parts[lvl], tw_l,
-                                      mems=mems_l, eps=eps, passes=passes,
+        parts[lvl] = refine_partition(graphs[lvl], parts[lvl], tw,
+                                      mems=mems, eps=eps, passes=passes,
+                                      vw=None if lvl == 0 else vws[lvl],
                                       verbose=verbose)
         if lvl > 0:
             parts[lvl - 1] = parts[lvl][maps[lvl - 1]]

@@ -218,22 +218,57 @@ def _boundary_candidates(g: Graph, part: np.ndarray, a: int, b: int,
 
 def fm_pair_refine(g: Graph, part: np.ndarray, a: int, b: int,
                    caps: np.ndarray, bfs_hops: int = 2,
-                   max_moves: int | None = None) -> float:
+                   max_moves: int | None = None,
+                   pod_of: np.ndarray | None = None, lam: float = 1.0,
+                   vw: np.ndarray | None = None) -> float:
     """One FM pass between blocks a and b.  Mutates ``part``.
 
-    Returns the achieved cut gain (>= 0; rolls back to the best prefix).
+    Returns the achieved gain (>= 0; rolls back to the best prefix).
+
+    With ``pod_of`` (+ ``lam``) the gains are computed against the
+    *weighted two-level objective* (``metrics.two_level_objective``):
+    a cut edge costs 1 inside a pod and ``lam`` across pods, so moves
+    that pull an edge off the slow inter-pod links are worth lam-x more
+    — the hier runtime's link-cost model.  Without ``pod_of`` the gain
+    is the flat cut (every cut edge costs 1), bit-identical to the
+    pre-pod-aware behavior.
+
+    ``vw`` (n,) supplies per-vertex weights for the size/cap accounting
+    (coarse-level supernodes in the multilevel pipeline); ``caps`` is
+    then in weight units, not vertex counts.
     """
     cand = _boundary_candidates(g, part, a, b, bfs_hops)
     if len(cand) == 0:
         return 0.0
-    sizes = block_sizes_of(part, len(caps)).astype(np.int64)
+    if vw is None:
+        sizes = block_sizes_of(part, len(caps)).astype(np.float64)
+    else:
+        vw = np.asarray(vw, dtype=np.float64)
+        sizes = np.bincount(part, weights=vw, minlength=len(caps))
 
-    def gain_of(v: int) -> float:
-        nb = g.indices[g.indptr[v]:g.indptr[v + 1]]
-        wv = g.weights[g.indptr[v]:g.indptr[v + 1]]
-        own, other = (a, b) if part[v] == a else (b, a)
-        return float(np.sum(wv * (part[nb] == other))
-                     - np.sum(wv * (part[nb] == own)))
+    if pod_of is None:
+        def gain_of(v: int) -> float:
+            nb = g.indices[g.indptr[v]:g.indptr[v + 1]]
+            wv = g.weights[g.indptr[v]:g.indptr[v + 1]]
+            own, other = (a, b) if part[v] == a else (b, a)
+            return float(np.sum(wv * (part[nb] == other))
+                         - np.sum(wv * (part[nb] == own)))
+    else:
+        pod_of = np.asarray(pod_of)
+
+        def edge_cost(blk: np.ndarray, at: int) -> np.ndarray:
+            # per-neighbor cost of v living in block ``at``: 0 for
+            # same-block edges, 1 intra-pod, lam across pods
+            return np.where(blk == at, 0.0,
+                            np.where(pod_of[blk] == pod_of[at], 1.0, lam))
+
+        def gain_of(v: int) -> float:
+            nb = g.indices[g.indptr[v]:g.indptr[v + 1]]
+            wv = g.weights[g.indptr[v]:g.indptr[v + 1]]
+            own, other = (a, b) if part[v] == a else (b, a)
+            blk = part[nb]
+            return float(np.sum(wv * (edge_cost(blk, own)
+                                      - edge_cost(blk, other))))
 
     heap = [(-gain_of(v), v) for v in cand]
     heapq.heapify(heap)
@@ -255,11 +290,12 @@ def fm_pair_refine(g: Graph, part: np.ndarray, a: int, b: int,
         gain = -neg_g
         frm = int(part[v])
         to = b if frm == a else a
-        if sizes[to] + 1 > caps[to]:
+        w_v = 1.0 if vw is None else vw[v]
+        if sizes[to] + w_v > caps[to]:
             continue
         part[v] = to
-        sizes[frm] -= 1
-        sizes[to] += 1
+        sizes[frm] -= w_v
+        sizes[to] += w_v
         locked[v] = True
         total += gain
         history.append((v, frm, to, gain))
@@ -279,8 +315,15 @@ def fm_pair_refine(g: Graph, part: np.ndarray, a: int, b: int,
 def refine_partition(g: Graph, part: np.ndarray, tw: np.ndarray,
                      mems: np.ndarray | None = None, eps: float = 0.03,
                      passes: int = 3, bfs_hops: int = 2,
+                     pod_of: np.ndarray | None = None, lam: float = 1.0,
+                     vw: np.ndarray | None = None,
                      verbose: bool = False) -> np.ndarray:
-    """geoRef: scheduled pairwise FM until no pass improves the cut."""
+    """geoRef: scheduled pairwise FM until no pass improves the objective.
+
+    ``pod_of``/``lam`` switch the FM gains to the weighted two-level
+    objective (inter-pod cut edges cost lam-x intra ones); ``vw`` makes
+    the size/cap accounting weight-aware (coarse multilevel levels —
+    ``tw``/``mems`` are then compared against summed vertex weights)."""
     part = np.asarray(part, dtype=np.int32).copy()
     k = len(tw)
     caps = np.ceil(np.asarray(tw) * (1.0 + eps))
@@ -295,10 +338,70 @@ def refine_partition(g: Graph, part: np.ndarray, tw: np.ndarray,
         for c in range(colors.max() + 1):
             for e in np.nonzero(colors == c)[0]:
                 gain += fm_pair_refine(g, part, int(pairs[e, 0]),
-                                       int(pairs[e, 1]), caps, bfs_hops)
+                                       int(pairs[e, 1]), caps, bfs_hops,
+                                       pod_of=pod_of, lam=lam, vw=vw)
         if verbose:
             print(f"  refine pass {p}: gain {gain:.0f} "
                   f"cut {edge_cut(g, part):.0f}")
         if gain <= 0:
             break
     return part
+
+
+# -- pod-level sweep on the block quotient graph -----------------------------
+
+def refine_pod_assignment(pairs: np.ndarray, weights: np.ndarray,
+                          pod_of: np.ndarray,
+                          groups: np.ndarray | None = None,
+                          max_swaps: int | None = None) -> np.ndarray:
+    """Kernighan–Lin sweep of the block->pod grouping on the block
+    quotient graph: repeatedly apply the best block swap (across two
+    pods) that reduces the inter-pod quotient weight, until none helps.
+
+    ``pairs``/``weights`` are :func:`quotient_graph` output; ``pod_of``
+    the starting (k,) assignment (e.g. ``Topology.pod_assignment`` —
+    contiguous).  Swapping preserves the pod sizes (the hier meshes are
+    rectangular), and ``groups`` (k,) restricts swaps to blocks with the
+    same group id — pass the PU spec class so a fast PU's block never
+    lands on a slow PU's pod slot; two blocks may trade places only when
+    their PUs are interchangeable.
+
+    Returns the refined (k,) pod assignment — the *partition-derived*
+    grouping that ``sparse.distributed.build_plan_hier`` consumes as an
+    explicit pod array.  The inter-pod quotient weight (= inter-pod cut)
+    never increases; the flat cut is untouched (only labels regroup).
+    Deterministic: ties break on the smallest (x, y).  O(k^2) candidate
+    pairs per applied swap with O(k) gain evaluation — the quotient
+    graph has one vertex per PU, so this is host-trivial.
+    """
+    pod_of = np.asarray(pod_of, dtype=np.int64).copy()
+    k = len(pod_of)
+    W = np.zeros((k, k), dtype=np.float64)
+    if len(pairs):
+        pairs = np.asarray(pairs, dtype=np.int64)
+        W[pairs[:, 0], pairs[:, 1]] = weights
+        W += W.T
+    groups = (np.zeros(k, dtype=np.int64) if groups is None
+              else np.asarray(groups))
+    if max_swaps is None:
+        max_swaps = k * k
+    for _ in range(max_swaps):
+        best_gain, best = 1e-9, None
+        for x in range(k):
+            for y in range(x + 1, k):
+                if pod_of[x] == pod_of[y] or groups[x] != groups[y]:
+                    continue
+                mp = pod_of == pod_of[x]
+                mq = pod_of == pod_of[y]
+                # KL gain: D_x + D_y - 2 w(x,y); edges to third pods and
+                # the x-y edge itself stay inter-pod either way
+                d_x = W[x] @ mq - W[x] @ mp
+                d_y = W[y] @ mp - W[y] @ mq
+                gain = float(d_x + d_y - 2.0 * W[x, y])
+                if gain > best_gain:
+                    best_gain, best = gain, (x, y)
+        if best is None:
+            break
+        x, y = best
+        pod_of[x], pod_of[y] = pod_of[y], pod_of[x]
+    return pod_of

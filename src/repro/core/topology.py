@@ -93,6 +93,38 @@ class Topology:
         """
         return contiguous_pods(self.k, pods)
 
+    def pod_aggregate(self, pods) -> "Topology":
+        """One-PU-per-pod aggregate topology (inner tree nodes, Sec. II-B).
+
+        ``pods`` is a pod count (contiguous grouping via
+        :meth:`pod_assignment`) or an explicit (k,) pod-of-PU array.
+        Each aggregate PU carries the summed speed and memory of its
+        members, so Algorithm 1 on the aggregate yields the per-pod
+        block sizes of the two-level pipeline (``api.partition_hier``):
+        the pod-level targets are exactly the per-pod sums of the leaf
+        targets whenever no member is memory-saturated, and remain
+        feasible (per-pod memory is the true per-pod capacity) when some
+        are.
+        """
+        pod_of = normalize_pod_of(pods, self.k)
+        n_pods = int(pod_of.max()) + 1
+        speeds = np.zeros(n_pods)
+        mems = np.zeros(n_pods)
+        np.add.at(speeds, pod_of, self.speeds)
+        np.add.at(mems, pod_of, self.memories)
+        return Topology(tuple(PU(speeds[p], mems[p], f"pod{p}")
+                              for p in range(n_pods)), (n_pods,))
+
+    def link_costs(self, intra: float | None = None,
+                   inter: float | None = None) -> "LinkCosts":
+        """Per-cut-edge link-cost model for this topology's two-level
+        tree (``fanouts``): edges whose endpoints share a pod ride the
+        fast intra-pod links, pod-crossing edges pay the slow top-level
+        links.  Defaults come from the hier round latencies
+        (:data:`INTRA_LINK_COST` / :data:`INTER_LINK_COST`)."""
+        return LinkCosts(INTRA_LINK_COST if intra is None else intra,
+                         INTER_LINK_COST if inter is None else inter)
+
     # -- constructors for the paper's simulated systems ---------------------
     @staticmethod
     def homogeneous(k: int, speed: float = 1.0, memory: float = 2.0,
@@ -147,6 +179,69 @@ class Topology:
                               2.0 if fast else slow_memory,
                               f"n{node}c{c}"))
         return Topology(tuple(pus), fanouts=(nodes, cores_per_node))
+
+
+# -- link-cost model over the two-level topology tree -----------------------
+#
+# The hier runtime (sparse/distributed.py, comm="hier") pays its two
+# ppermute classes at different latencies: intra-pod rounds ride the fast
+# per-pod axes and overlap the inter-pod exchange, while every inter-pod
+# round traverses the slow combined-axes links.  The per-cut-edge costs
+# below are the relative round latencies that schedule implies — one unit
+# for an intra-pod halo word, INTER_LINK_COST units for an inter-pod one
+# (the ~4x DCN-vs-ICI gap the hier benchmark models).  Their ratio is the
+# lambda of the weighted two-level objective (metrics.two_level_objective)
+# that the pod-aware refinement minimizes; override from measured round
+# latencies when calibrating a real machine.
+
+INTRA_LINK_COST = 1.0
+INTER_LINK_COST = 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkCosts:
+    """Intra-pod vs inter-pod per-edge communication cost."""
+
+    intra: float = INTRA_LINK_COST
+    inter: float = INTER_LINK_COST
+
+    def __post_init__(self):
+        if self.intra <= 0 or self.inter <= 0:
+            raise ValueError("link costs must be positive")
+
+    @property
+    def lam(self) -> float:
+        """lambda = inter/intra, the weight of the two-level objective."""
+        return self.inter / self.intra
+
+    def matrix(self, pod_of: np.ndarray) -> np.ndarray:
+        """(k, k) cost per block pair: 0 on the diagonal, ``intra`` for
+        same-pod pairs, ``inter`` for pod-crossing pairs."""
+        pod_of = np.asarray(pod_of)
+        same = pod_of[:, None] == pod_of[None, :]
+        cost = np.where(same, self.intra, self.inter)
+        np.fill_diagonal(cost, 0.0)
+        return cost
+
+
+def normalize_pod_of(pods, k: int) -> np.ndarray:
+    """``pods`` (pod count or explicit (k,) pod-of-block array) -> (k,)
+    int64 pod ids.  The explicit path validates shape and equal pod sizes
+    (the hier meshes are rectangular), mirroring
+    ``sparse.distributed.build_plan_hier``."""
+    if np.ndim(pods) == 0:
+        return contiguous_pods(k, int(pods))
+    pod_of = np.ascontiguousarray(pods, dtype=np.int64)
+    if len(pod_of) != k:
+        raise ValueError(f"pods array has {len(pod_of)} entries, "
+                         f"expected k={k}")
+    if pod_of.min() < 0:
+        raise ValueError("pod ids must be >= 0")
+    counts = np.bincount(pod_of, minlength=int(pod_of.max()) + 1)
+    if not (counts == counts[0]).all():
+        raise ValueError(f"pods must be equal-sized for a rectangular "
+                         f"mesh; got sizes {counts.tolist()}")
+    return pod_of
 
 
 def contiguous_pods(k: int, pods: int) -> np.ndarray:

@@ -799,10 +799,12 @@ def build_plan_hier(indptr: np.ndarray, indices: np.ndarray,
     block b goes to pod ``b // (k // pods)``, matching
     ``core.topology.Topology.pod_assignment``: Algorithm-1 orders fast PUs
     first, so the fast PUs that share the heaviest cut land in one pod) or
-    an explicit (k,) pod id per block.  Pods must be equal-sized (the mesh
-    is rectangular).  Blocks are relabeled pod-major; ``block_map`` maps
-    the caller's block ids to device positions (scatter/gather are
-    unaffected — they go through ``perm``).
+    an explicit (k,) pod id per block — e.g. the partition-derived
+    assignment of ``core.api.partition_hier`` / ``pod_assignment_for``
+    (generally non-contiguous after the pod-level sweep).  Pods must be
+    equal-sized (the mesh is rectangular).  Blocks are relabeled
+    pod-major; ``block_map`` maps the caller's block ids to device
+    positions (scatter/gather are unaffected — they go through ``perm``).
 
     Intra-pod and inter-pod halo edges get separate Misra-Gries colorings:
     intra over the union of the pods' *local-index* quotient graphs (one
@@ -811,23 +813,14 @@ def build_plan_hier(indptr: np.ndarray, indices: np.ndarray,
     linearized axes).  Vectorized NumPy throughout; the only Python loops
     are over quotient edges and chunks, as in :func:`build_plan`.
     """
-    from ..core.topology import contiguous_pods
+    from ..core.topology import normalize_pod_of
 
     n = len(indptr) - 1
     part = np.ascontiguousarray(part, dtype=np.int32)
-    if np.ndim(pods) == 0:
-        n_pods = int(pods)
-        pod_of_block = contiguous_pods(k, n_pods)
-    else:
-        pod_of_block = np.ascontiguousarray(pods, dtype=np.int64)
-        if len(pod_of_block) != k:
-            raise ValueError(f"pods array has {len(pod_of_block)} entries, "
-                             f"expected k={k}")
-        n_pods = int(pod_of_block.max()) + 1
-        counts = np.bincount(pod_of_block, minlength=n_pods)
-        if not (counts == counts[0]).all():
-            raise ValueError(f"pods must be equal-sized for a rectangular "
-                             f"mesh; got sizes {counts.tolist()}")
+    # one validation definition shared with the partitioner side
+    # (core.api.partition_hier produces what this consumes)
+    pod_of_block = normalize_pod_of(pods, k)
+    n_pods = int(pod_of_block.max()) + 1
     k_local = k // n_pods
     # pod-major relabeling: device position = pod * k_local + rank in pod
     order_blocks = np.argsort(pod_of_block, kind="stable")

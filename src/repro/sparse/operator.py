@@ -294,7 +294,21 @@ def make_operator(indptr, indices, data, backend: str = "coo", *,
     ``dist_hier`` additionally needs ``pods=`` (pod count or explicit (k,)
     pod-of-block array, e.g. ``core.topology.Topology.pod_assignment``)
     and a multi-pod mesh; ``axis`` defaults to the mesh's full
-    ``(pod_axis, *intra_axes)`` tuple."""
+    ``(pod_axis, *intra_axes)`` tuple.
+
+    ``part`` may also be a ``core.api.HierPartition`` (the pod-aware
+    pipeline's output, duck-typed on ``.part``/``.pod_of``): the block
+    partition, ``k``, and — for ``dist_hier`` — the partition-derived
+    pod assignment are unpacked from it, so the partitioner output
+    drives the runtime directly."""
+    if part is not None and hasattr(part, "part") and hasattr(part,
+                                                              "pod_of"):
+        hp = part
+        part = np.asarray(hp.part)
+        if k is None:
+            k = hp.k
+        if backend == "dist_hier":
+            kw.setdefault("pods", np.asarray(hp.pod_of))
     if backend == "coo":
         return CooOperator.from_csr(indptr, indices, data, **kw)
     if backend == "bell":

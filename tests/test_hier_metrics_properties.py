@@ -1,0 +1,147 @@
+"""Property-based suite for the hierarchical (pod-aware) metrics and
+refinement (ISSUE 4 satellite).
+
+Invariants, against a brute-force dense NumPy oracle:
+  * intra + inter pod cut exactly tiles the flat edge cut;
+  * intra + inter pod comm volumes exactly tile the flat comm volumes;
+  * pod-aware FM (``refine_partition(pod_of=..., lam=...)``) never
+    increases the weighted two-level objective and respects the caps;
+  * the pod-level KL sweep (``refine_pod_assignment``) never increases
+    the inter-pod quotient weight, preserves pod sizes, and preserves
+    the per-spec-group pod multiset.
+
+Everything here is host-only NumPy (no devices, no JAX version
+sensitivity) — it runs unskipped in both CI matrix jobs.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metrics import (comm_volumes, edge_cut, pod_comm_volumes,
+                                pod_cut_split, two_level_objective)
+from repro.core.refinement import (quotient_graph, refine_partition,
+                                   refine_pod_assignment)
+from repro.sparse.graph import Graph, from_edges
+
+
+def random_instance(seed: int, k: int, pods: int):
+    """Random weighted graph + partition + (shuffled) equal-size pods."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 48))
+    m = int(rng.integers(n, 4 * n))
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    w = rng.integers(1, 6, m).astype(np.float64)
+    g = from_edges(n, src, dst, w, symmetrize=True)
+    part = rng.integers(0, k, n).astype(np.int32)
+    perm = rng.permutation(k)
+    pod_of = np.empty(k, dtype=np.int64)
+    pod_of[perm] = np.arange(k) // (k // pods)
+    return g, part, pod_of
+
+
+def oracle_split(g: Graph, part: np.ndarray, pod_of: np.ndarray, k: int):
+    """O(n^2) dense reference for the pod cut/volume split."""
+    A = np.zeros((g.n, g.n))
+    src, dst, w = g.edge_list()
+    A[src, dst] = w
+    intra_cut = inter_cut = 0.0
+    for i in range(g.n):
+        for j in range(i + 1, g.n):
+            if A[i, j] and part[i] != part[j]:
+                if pod_of[part[i]] == pod_of[part[j]]:
+                    intra_cut += A[i, j]
+                else:
+                    inter_cut += A[i, j]
+    intra_v = np.zeros(k, dtype=np.int64)
+    inter_v = np.zeros(k, dtype=np.int64)
+    for b in range(k):
+        for v in range(g.n):
+            if part[v] == b:
+                continue
+            nb = g.indices[g.indptr[v]:g.indptr[v + 1]]
+            if len(nb) and np.any(part[nb] == b):
+                if pod_of[part[v]] == pod_of[b]:
+                    intra_v[b] += 1
+                else:
+                    inter_v[b] += 1
+    return intra_cut, inter_cut, intra_v, inter_v
+
+
+KP = [(2, 2), (4, 2), (6, 3), (8, 2), (8, 4)]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10**6), st.sampled_from(KP))
+def test_split_tiles_flat_and_matches_oracle(seed, kp):
+    k, pods = kp
+    g, part, pod_of = random_instance(seed, k, pods)
+    ia, ie = pod_cut_split(g, part, pod_of)
+    iv, ev = pod_comm_volumes(g, part, k, pod_of)
+    # exact tiling of the flat metrics
+    assert ia + ie == pytest.approx(edge_cut(g, part))
+    np.testing.assert_array_equal(iv + ev, comm_volumes(g, part, k))
+    # brute-force oracle agreement
+    o_ia, o_ie, o_iv, o_ev = oracle_split(g, part, pod_of, k)
+    assert ia == pytest.approx(o_ia) and ie == pytest.approx(o_ie)
+    np.testing.assert_array_equal(iv, o_iv)
+    np.testing.assert_array_equal(ev, o_ev)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10**6), st.sampled_from(KP),
+       st.sampled_from([1.0, 2.0, 4.0, 16.0]))
+def test_pod_aware_refinement_objective_and_caps(seed, kp, lam):
+    k, pods = kp
+    g, part, pod_of = random_instance(seed, k, pods)
+    sizes = np.bincount(part, minlength=k)
+    tw = np.maximum(sizes, 1).astype(np.float64)     # initially feasible
+    before = two_level_objective(g, part, pod_of, lam)
+    out = refine_partition(g, part, tw, eps=0.25, pod_of=pod_of, lam=lam)
+    after = two_level_objective(g, out, pod_of, lam)
+    assert after <= before + 1e-6
+    caps = np.ceil(tw * 1.25)
+    assert (np.bincount(out, minlength=k) <= caps).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10**6), st.sampled_from(KP), st.booleans())
+def test_pod_sweep_invariants(seed, kp, grouped):
+    k, pods = kp
+    g, part, pod_of = random_instance(seed, k, pods)
+    rng = np.random.default_rng(seed + 1)
+    groups = (rng.integers(0, 2, k) if grouped
+              else np.zeros(k, dtype=np.int64))
+    pairs, w = quotient_graph(g, part, k)
+    out = refine_pod_assignment(pairs, w, pod_of, groups=groups)
+
+    W = np.zeros((k, k))
+    if len(pairs):
+        W[pairs[:, 0], pairs[:, 1]] = w
+        W += W.T
+
+    def inter(p):
+        return W[np.asarray(p)[:, None] != np.asarray(p)[None, :]].sum() / 2
+
+    assert inter(out) <= inter(pod_of) + 1e-9
+    np.testing.assert_array_equal(np.bincount(out, minlength=pods),
+                                  np.bincount(pod_of, minlength=pods))
+    for grp in np.unique(groups):
+        assert sorted(out[groups == grp].tolist()) == \
+            sorted(pod_of[groups == grp].tolist())
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10**6), st.sampled_from([2, 4, 6]))
+def test_fm_weighted_sizes_respect_caps(seed, k):
+    """Per-vertex weights: refinement never pushes a block's *weighted*
+    size past its cap when the input partition is feasible."""
+    rng = np.random.default_rng(seed)
+    g, part, _ = random_instance(seed, k, 1 if k % 2 else 2)
+    vw = rng.integers(1, 5, g.n).astype(np.int64)
+    wsizes = np.bincount(part, weights=vw.astype(float), minlength=k)
+    tw = np.maximum(wsizes, 1.0)
+    out = refine_partition(g, part, tw, eps=0.2, vw=vw)
+    caps = np.ceil(tw * 1.2)
+    after = np.bincount(out, weights=vw.astype(float), minlength=k)
+    assert (after <= caps).all()

@@ -1,0 +1,161 @@
+"""Satellite regressions for ISSUE 4.
+
+* multilevel supernode weights: coarse-level FM must account block sizes
+  and caps in true finest-vertex units (``vw``), not mean-scaled counts —
+  a heavy supernode could silently violate the memory caps (Eq. 3);
+* ``partition`` forwards ``seed`` into the multilevel refinement, so
+  ``heavy_edge_matching`` is actually seed-varied;
+* ``imbalance`` and ``_greedy_growing`` guard zero-target blocks
+  (fully saturated topologies).
+"""
+import numpy as np
+import pytest
+
+from repro.core import Topology, partition, scale_to_load
+from repro.core.api import _greedy_growing
+from repro.core.metrics import imbalance, memory_violations
+from repro.core.multilevel import (contract, heavy_edge_matching,
+                                   partition_multilevel_refine)
+from repro.core.refinement import fm_pair_refine, refine_partition
+from repro.sparse.generators import rdg
+from repro.sparse.graph import from_edges
+
+
+# -- per-vertex weights in FM size/cap accounting ---------------------------
+
+def _heavy_vertex_instance():
+    """Vertex 0 (weight 3) sits in block 0 but is wired to block 1: the
+    cut gain of moving it is strongly positive, and only *weighted* cap
+    accounting can see that block 1 has no room for it."""
+    # blocks: {0,1,2} and {3,4,5}; vertex 0 heavy, pulled toward block 1
+    src = [0, 0, 0, 1, 2, 3, 4]
+    dst = [3, 4, 5, 2, 1, 4, 5]
+    w = [5.0, 5.0, 5.0, 1.0, 1.0, 1.0, 1.0]
+    g = from_edges(6, src, dst, w, symmetrize=True)
+    part = np.array([0, 0, 0, 1, 1, 1], dtype=np.int32)
+    vw = np.array([3, 1, 1, 1, 1, 1], dtype=np.int64)
+    return g, part, vw
+
+
+def test_fm_respects_weighted_caps():
+    g, part, vw = _heavy_vertex_instance()
+    caps = np.array([5.0, 5.0])           # weighted sizes start at (5, 3)
+    # unweighted accounting would admit vertex 0 into block 1 (3+1 <= 5)
+    p_unw = part.copy()
+    fm_pair_refine(g, p_unw, 0, 1, caps)
+    assert p_unw[0] == 1
+    # weighted accounting must refuse (3 + 3 > 5)
+    p_w = part.copy()
+    fm_pair_refine(g, p_w, 0, 1, caps, vw=vw)
+    assert p_w[0] == 0
+    sizes_w = np.bincount(p_w, weights=vw.astype(float), minlength=2)
+    assert (sizes_w <= caps).all()
+
+
+def test_refine_partition_threads_vertex_weights():
+    g, part, vw = _heavy_vertex_instance()
+    tw = np.array([4.0, 4.0])
+    out = refine_partition(g, part, tw, mems=np.array([5.0, 5.0]),
+                           eps=0.25, vw=vw)
+    sizes_w = np.bincount(out, weights=vw.astype(float), minlength=2)
+    assert (sizes_w <= 5.0).all()
+
+
+def test_multilevel_skewed_matching_respects_caps():
+    """End-to-end: heavy intra-block edges force a skewed matching (some
+    supernodes weight 2, some 1); with per-vertex weights threaded
+    through, the refined partition never exceeds the memory caps."""
+    g = rdg(1500, seed=13)
+    topo = scale_to_load(Topology.topo1(6, 2 / 6, 4.0, 5.2), g.n)
+    from repro.core import target_block_sizes
+    tw = target_block_sizes(g.n, topo)
+    from repro.core.balanced_kmeans import partition_balanced_kmeans
+    part0 = partition_balanced_kmeans(g, tw, seed=0)
+    # force real coarsening on this small instance
+    out = partition_multilevel_refine(g, part0, tw, mems=topo.memories,
+                                      eps=0.03, coarsest=128, max_levels=3)
+    assert memory_violations(out, topo, slack=0.03) == 0
+    sizes = np.bincount(out, minlength=topo.k)
+    caps = np.minimum(np.ceil(tw * 1.03), np.floor(topo.memories))
+    assert (sizes <= caps).all()
+
+
+def test_contract_weights_are_cumulative():
+    """A twice-contracted supernode's weight is its finest-vertex count
+    — the accounting ``partition_multilevel_refine`` now relies on."""
+    g = rdg(400, seed=3)
+    part = np.zeros(g.n, dtype=np.int32)
+    vw = np.ones(g.n, dtype=np.int64)
+    cur = g
+    for lvl in range(2):
+        match = heavy_edge_matching(cur, part, seed=lvl)
+        cg, part, f2c, cvw = contract(cur, part, match)
+        vw = np.bincount(f2c, weights=vw, minlength=cg.n).astype(np.int64)
+        cur = cg
+    assert vw.sum() == g.n
+    assert vw.max() >= 2          # something actually matched twice
+
+
+# -- seed forwarding --------------------------------------------------------
+
+def test_partition_forwards_seed_to_multilevel(monkeypatch):
+    import repro.core.multilevel as ml
+    seen = []
+    orig = ml.heavy_edge_matching
+
+    def spy(g, part, seed=0):
+        seen.append(seed)
+        return orig(g, part, seed=seed)
+
+    monkeypatch.setattr(ml, "heavy_edge_matching", spy)
+    g = rdg(5000, seed=2)        # above the multilevel coarsest threshold
+    topo = scale_to_load(Topology.homogeneous(4), g.n)
+    partition(g, topo, "geoRef", seed=7)
+    assert seen and seen[0] == 7          # seed + level offset
+    seen.clear()
+    partition(g, topo, "geoRef", seed=11)
+    assert seen and seen[0] == 11
+
+
+def test_evaluate_seed_varies_results():
+    from repro.core import evaluate
+    g = rdg(1200, seed=4)
+    topo = scale_to_load(Topology.homogeneous(4), g.n)
+    a = evaluate(g, topo, methods=("greedyRef",), seed=1, verbose=False)
+    b = evaluate(g, topo, methods=("greedyRef",), seed=2, verbose=False)
+    assert a["greedyRef"]["cut"] != b["greedyRef"]["cut"]
+
+
+# -- zero-target guards -----------------------------------------------------
+
+def test_imbalance_zero_target_blocks():
+    tw = np.array([4.0, 4.0, 0.0])
+    # empty zero-target block: ignored, not inf / not 1e12-ish garbage
+    part_ok = np.array([0, 0, 0, 0, 1, 1, 1, 1])
+    assert imbalance(part_ok, tw) == pytest.approx(1.0)
+    # populated zero-target block: any load is a violation -> inf
+    part_bad = np.array([0, 0, 0, 0, 1, 1, 1, 2])
+    assert imbalance(part_bad, tw) == float("inf")
+    # all-zero targets, empty partition arrays degenerate to 1.0
+    assert imbalance(np.zeros(0, dtype=np.int32), np.zeros(2)) == 1.0
+
+
+def test_greedy_growing_skips_zero_target_blocks():
+    g = rdg(300, seed=6)
+    tw = np.array([g.n / 2.0, g.n / 2.0, 0.0])
+    part = _greedy_growing(g, tw, seed=0)
+    sizes = np.bincount(part, minlength=3)
+    assert sizes[2] == 0                       # no seed, no orphans
+    assert sizes.sum() == g.n
+    assert imbalance(part, tw) < 1.2
+
+
+def test_partition_greedy_ref_with_zero_target():
+    """greedyRef end-to-end with an explicit zero target: the saturated
+    pipeline leaves the zero-target block empty and finite-imbalanced."""
+    g = rdg(500, seed=7)
+    topo = scale_to_load(Topology.homogeneous(4), g.n)
+    tw = np.array([g.n / 3.0, g.n / 3.0, g.n / 3.0, 0.0])
+    part, _ = partition(g, topo, "greedyRef", tw=tw)
+    assert np.bincount(part, minlength=4)[3] == 0
+    assert np.isfinite(imbalance(part, tw))

@@ -121,7 +121,7 @@ CROSS_BACKENDS = ("coo", "coo+jacobi", "bell", "bell+jacobi",
                   "dist_halo+jacobi_fused", "dist_halo+block_jacobi",
                   "dist_halo_seq", "dist_bell",
                   "dist_allgather", "dist_hier", "dist_hier+jacobi",
-                  "dist_hier+block_jacobi_fused")
+                  "dist_hier+block_jacobi_fused", "dist_hier_podaware")
 
 CROSS_SCRIPT = textwrap.dedent("""
     import os
@@ -141,11 +141,20 @@ CROSS_SCRIPT = textwrap.dedent("""
     mesh_hier = make_test_mesh(8, pods=2)    # ("pod", "pu") = (2, 4)
     b = np.random.default_rng(1).normal(size=g.n).astype(np.float32)
 
+    # partition-derived (swept, generally non-contiguous) pod assignment
+    # driving the hier runtime — the ISSUE 4 acceptance path
+    from repro.core import Topology, pod_assignment_for, scale_to_load
+    topo8 = scale_to_load(Topology.homogeneous(8), g.n)
+    pod_sw = pod_assignment_for(g, part, topo8, 2)
+
     sols = {}
     for name in %r:
         backend, _, variant = name.partition("+")
         kw = {}
-        if backend.startswith("dist"):
+        if backend == "dist_hier_podaware":
+            backend = "dist_hier"
+            kw = dict(part=part, k=8, mesh=mesh_hier, pods=pod_sw)
+        elif backend.startswith("dist"):
             kw = dict(part=part, k=8, mesh=mesh)
             if backend == "dist_hier":
                 kw.update(mesh=mesh_hier, pods=2)
