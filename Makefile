@@ -4,7 +4,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test tier1 deps bench-cg bench bench-hier bench-pod
+.PHONY: test tier1 deps bench-cg bench bench-hier bench-pod bench-tree
 
 deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -29,6 +29,11 @@ bench-hier:
 # inter-pod comm volume / rounds and dist_hier CG time (ISSUE 4)
 bench-pod:
 	$(PYTHON) -m benchmarks.bench_cg --pod-aware
+
+# Depth-3 (2,2,2) tree schedule: per-level round/comm-volume split and
+# tree-aware vs oblivious partitions of the same mesh (ISSUE 5)
+bench-tree:
+	$(PYTHON) -m benchmarks.bench_cg --tree
 
 bench:
 	$(PYTHON) -m benchmarks.run

@@ -137,6 +137,7 @@ HIER_SCRIPT = textwrap.dedent("""
     sols = {}
     for name, kw in (("dist_halo", dict(mesh=mesh)),
                      ("dist_hier", dict(mesh=mesh_hier, pods=2)),
+                     ("dist_hier_bell", dict(mesh=mesh_hier, pods=2)),
                      ("dist_hier+block_jacobi", dict(mesh=mesh_hier,
                                                      pods=2))):
         backend, _, variant = name.partition("+")
@@ -229,6 +230,112 @@ POD_SCRIPT = textwrap.dedent("""
 """)
 
 
+TREE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, time
+    import numpy as np
+    import jax
+    from repro.core import (Topology, canonical_ancestors, partition_tree,
+                            scale_to_load)
+    from repro.core.metrics import tree_comm_volumes
+    from repro.sparse import make_operator, cg_solve_global
+    from repro.sparse.distributed import build_plan, build_plan_tree
+    from repro.sparse.generators import grid
+    from repro.sparse.graph import laplacian_csr
+    from repro.launch.mesh import make_test_mesh
+
+    # stripes across the long axis on the depth-3 (2, 2, 2) mesh: every
+    # stripe boundary costs a full 128-wide grid line, and the flat plan
+    # pays every one of its rounds at the slowest-link latency
+    g = grid((16, 128))
+    indptr, indices, data = laplacian_csr(g, shift=1e-2)
+    topo = scale_to_load(Topology.homogeneous(8, fanouts=(2, 2, 2)), g.n)
+    mesh_tree = make_test_mesh(8, fanouts=(2, 2, 2))  # (pod, host, pu)
+    b = np.random.default_rng(1).normal(size=g.n).astype(np.float32)
+
+    part_s = ((np.arange(g.n) * 8) // g.n).astype(np.int32)
+    anc_c = canonical_ancestors((2, 2, 2))
+    fp = build_plan(indptr, indices, data, part_s, 8)
+    res = partition_tree(g, topo, "geoRef")
+
+    out = {"rounds_flat": fp.n_rounds}
+    for name, part, tree in (("oblivious", part_s, anc_c),
+                             ("tree_aware", res.part, res.anc)):
+        vols = tree_comm_volumes(g, part, 8, tree)
+        if name == "tree_aware":     # partitioner output drives the runtime
+            op = make_operator(indptr, indices, data, "dist_hier",
+                               part=res, mesh=mesh_tree)
+        else:
+            op = make_operator(indptr, indices, data, "dist_hier",
+                               part=part, k=8, mesh=mesh_tree, tree=tree)
+        plan = op.plan               # the TreePlan the runtime executes
+        t0 = time.perf_counter()
+        x, iters, resid = cg_solve_global(op, b, tol=1e-7, max_iters=2000)
+        wall = (time.perf_counter() - t0) * 1e6
+        xb = op.scatter(np.random.default_rng(3).normal(
+            size=g.n).astype(np.float32))
+        op.matvec(xb).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(20):
+            y = op.matvec(xb)
+        y.block_until_ready()
+        out[name] = {
+            "rounds_by_level": list(plan.n_rounds_lvl),
+            "volume_by_level": [int(v.sum()) for v in vols],
+            "max_volume_by_level": [int(v.max()) for v in vols],
+            "iters": iters, "res": resid, "cg_wall_us": wall,
+            "spmv_us": (time.perf_counter() - t0) / 20 * 1e6,
+        }
+        out[name + "_x"] = np.asarray(x).tolist()
+    xa = np.array(out.pop("oblivious_x"))
+    xb_ = np.array(out.pop("tree_aware_x"))
+    out["max_rel_between"] = float(
+        np.abs(xa - xb_).max() / np.abs(xa).max())
+    print(json.dumps(out))
+""")
+
+
+def _bench_tree(rows: list[str]) -> None:
+    """Depth-3 (2, 2, 2) tree schedule: per-level round/volume split,
+    tree-aware vs oblivious partition (ISSUE 5).
+
+    The headline numbers are the *per-level* round split (the flat plan
+    pays its whole total at the slowest-link latency; the tree plan pays
+    only ``rounds_by_level[-1]`` there) and the outermost-level comm
+    volume, which the tree-aware pipeline must bring strictly below the
+    stripes baseline.  Same forced-host-device caveat as the other
+    distributed rows: local memcpy collectives show schedule overhead,
+    not the per-level-latency win the splits quantify.
+    """
+    proc = subprocess.run([sys.executable, "-c", TREE_SCRIPT],
+                          capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        rows.append(row("cg_tree__ERROR", 0,
+                        proc.stderr[-200:].replace(",", ";")))
+        return
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    for name in ("oblivious", "tree_aware"):
+        r = out[name]
+        lv = ";".join(f"lv{l}={c}" for l, c in
+                      enumerate(r["rounds_by_level"]))
+        vv = ";".join(f"lv{l}CV={c}" for l, c in
+                      enumerate(r["volume_by_level"]))
+        rows.append(row(
+            f"cg_tree__{name}", r["cg_wall_us"],
+            f"{lv};{vv};flat_total={out['rounds_flat']};"
+            f"iters={r['iters']};spmv_us={r['spmv_us']:.0f}"))
+    ob, ta = out["oblivious"], out["tree_aware"]
+    rows.append(row(
+        "cg_tree__outer_volume_ratio",
+        ob["volume_by_level"][-1] / max(ta["volume_by_level"][-1], 1),
+        f"tree_aware_lower="
+        f"{int(ta['volume_by_level'][-1] < ob['volume_by_level'][-1])};"
+        f"outer_rounds_lt_flat="
+        f"{int(ob['rounds_by_level'][-1] < out['rounds_flat'])};"
+        f"agree_1e-5={int(out['max_rel_between'] < 1e-5)}"))
+
+
 def _bench_pod(rows: list[str]) -> None:
     """Pod-aware vs pod-oblivious partitions of the same mesh (ISSUE 4).
 
@@ -287,7 +394,8 @@ def _bench_hier(rows: list[str]) -> None:
         f"inter={out['rounds_inter']};intra={out['rounds_intra']};"
         f"flat_total={out['rounds_flat']};"
         f"inter_lt_flat={int(out['rounds_inter'] < out['rounds_flat'])}"))
-    for name in ("dist_halo", "dist_hier", "dist_hier+block_jacobi"):
+    for name in ("dist_halo", "dist_hier", "dist_hier_bell",
+                 "dist_hier+block_jacobi"):
         r = out[name]
         rows.append(row(f"cg_hier__{name.replace('+', '_')}", r["wall_us"],
                         f"iters={r['iters']};spmv_us={r['spmv_us']:.0f}"))
@@ -351,6 +459,7 @@ def run() -> list[str]:
     _bench_operator_backends(rows)
     _bench_hier(rows)
     _bench_pod(rows)
+    _bench_tree(rows)
     g = rdg(30000, seed=4)
     indptr, indices, data = laplacian_csr(g, shift=1e-2)
     rows_a, cols_a, vals_a = (jnp.asarray(a) for a in
@@ -406,7 +515,8 @@ def main() -> None:
     """``python -m benchmarks.bench_cg --hier`` (``make bench-hier``):
     only the multi-pod schedule section; ``--pod-aware``
     (``make bench-pod``): only the pod-aware vs pod-oblivious partition
-    comparison.  Both on forced host devices."""
+    comparison; ``--tree`` (``make bench-tree``): the depth-3 (2, 2, 2)
+    per-level round/volume split.  All on forced host devices."""
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--hier", action="store_true",
@@ -414,6 +524,9 @@ def main() -> None:
     ap.add_argument("--pod-aware", action="store_true",
                     help="run only the pod-aware vs pod-oblivious "
                          "partition comparison")
+    ap.add_argument("--tree", action="store_true",
+                    help="run only the depth-3 tree schedule benchmark "
+                         "(per-level round split on the (2,2,2) mesh)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     rows: list[str] = []
@@ -421,6 +534,8 @@ def main() -> None:
         _bench_hier(rows)
     elif args.pod_aware:
         _bench_pod(rows)
+    elif args.tree:
+        _bench_tree(rows)
     else:
         rows = run()
     for r in rows:

@@ -1,16 +1,22 @@
 """LDHT core: the paper's contribution as a composable library."""
 from .api import (HierPartition, METHODS, evaluate, partition,
-                  partition_hier, pod_assignment_for)
+                  partition_hier, partition_tree, pod_assignment_for,
+                  tree_assignment_for)
 from .block_sizes import (hetero_batch_split, max_load_ratio,
-                          target_block_sizes, target_block_sizes_jax)
+                          target_block_sizes, target_block_sizes_jax,
+                          tree_target_block_sizes, waterfill)
 from .topology import (INTER_LINK_COST, INTRA_LINK_COST, LinkCosts, PU,
-                       TABLE_III_FAST_SPECS, Topology, contiguous_pods,
-                       normalize_pod_of, scale_to_load)
+                       TABLE_III_FAST_SPECS, Topology, canonical_ancestors,
+                       contiguous_pods, level_matrix, normalize_pod_of,
+                       normalize_tree_of, scale_to_load)
 
 __all__ = [
-    "METHODS", "evaluate", "partition", "partition_hier", "HierPartition",
-    "pod_assignment_for", "target_block_sizes", "target_block_sizes_jax",
+    "METHODS", "evaluate", "partition", "partition_hier", "partition_tree",
+    "HierPartition", "pod_assignment_for", "tree_assignment_for",
+    "target_block_sizes", "target_block_sizes_jax",
+    "tree_target_block_sizes", "waterfill",
     "hetero_batch_split", "max_load_ratio", "PU", "Topology",
-    "scale_to_load", "contiguous_pods", "normalize_pod_of", "LinkCosts",
+    "scale_to_load", "canonical_ancestors", "contiguous_pods",
+    "level_matrix", "normalize_pod_of", "normalize_tree_of", "LinkCosts",
     "INTRA_LINK_COST", "INTER_LINK_COST", "TABLE_III_FAST_SPECS",
 ]

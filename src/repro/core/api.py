@@ -16,17 +16,21 @@ Methods (paper nomenclature):
   greedyRef— BFS-greedy growing + multilevel FM    (ParMetisGraph-like:
              combinatorial initial partition + combinatorial refinement)
 
-Pod-aware mode (``pods=``): the flat objective (Eq. 1) ignores that on a
-multi-pod machine only the *inter-pod* cut pays slow-link latency
-(``sparse.distributed`` ``comm='hier'``).  :func:`partition_hier` runs
-the whole pipeline hierarchically, WindGP-style: Algorithm-1 targets are
-aggregated per pod (``Topology.pod_aggregate``), the graph is first
-partitioned into pods (minimizing the future inter-pod cut directly),
-then within each pod into its PUs, then a pod-level sweep regroups
-equal-spec blocks on the quotient graph and a weighted FM pass refines
-against the two-level objective (inter-pod edges cost lambda-x intra,
-``topology.LinkCosts``).  The returned :class:`HierPartition` carries the
-pod assignment the hier runtime consumes directly
+Tree-aware mode (``pods=`` / ``tree=`` / ``fanouts=``): the flat
+objective (Eq. 1) ignores that on a hierarchical machine each cut edge
+pays the link latency of its LCA level (``sparse.distributed``
+``comm='hier'``).  :func:`partition_tree` runs the whole pipeline
+recursively down the ``fanouts`` tree, WindGP-style: at every level the
+load is water-filled over the subtree aggregates (the tree-aware
+Algorithm 1 — no stage-B rescale) and the graph is partitioned at that
+granularity, minimizing the future level-crossing cut directly; a
+per-level KL sweep then regroups equal-spec blocks on the quotient graph
+(``refinement.refine_tree_assignment``) and a weighted FM pass refines
+against the tree objective (a cut edge costs ``lams[LCA level]``,
+``topology.LinkCosts``).  :func:`partition_hier` is the two-level
+(``pods=``) instance, bit-identical to the PR 4 pod pipeline at the
+refinement stages.  The returned :class:`HierPartition` carries the full
+ancestor table the tree runtime consumes directly
 (``make_operator(..., part=hier_partition)``).
 """
 from __future__ import annotations
@@ -39,15 +43,15 @@ import numpy as np
 from ..sparse.graph import Graph
 from .balanced_kmeans import (partition_balanced_kmeans,
                               partition_hierarchical_kmeans)
-from .block_sizes import target_block_sizes
-from .metrics import summarize, summarize_hier
+from .block_sizes import target_block_sizes, waterfill
+from .metrics import summarize, summarize_hier, summarize_tree
 from .multilevel import partition_multilevel_refine
 from .rcb import partition_rcb
 from .refinement import (quotient_graph, refine_partition,
-                         refine_pod_assignment)
+                         refine_pod_assignment, refine_tree_assignment)
 from .rib import partition_rib
 from .sfc import partition_sfc
-from .topology import Topology, normalize_pod_of
+from .topology import Topology, normalize_pod_of, normalize_tree_of
 
 
 def _greedy_growing(g: Graph, tw: np.ndarray, seed: int = 0) -> np.ndarray:
@@ -142,16 +146,23 @@ def _dispatch(g: Graph, method: str, tw: np.ndarray, mems: np.ndarray,
 def partition(g: Graph, topo: Topology, method: str = "geoRef",
               tw: np.ndarray | None = None, seed: int = 0,
               eps: float = 0.03, pods=None, lam: float | None = None,
+              fanouts=None, tree=None, lams=None,
               **kw) -> tuple[np.ndarray, np.ndarray]:
     """Two-stage LDHT solve.  Returns (part, tw).
 
     With ``pods`` (pod count or explicit (k,) pod-of-PU array) the
-    pipeline runs hierarchically via :func:`partition_hier`; use that
-    function directly when you also need the resulting pod assignment
-    (e.g. to feed ``sparse.distributed.build_plan_hier``)."""
+    pipeline runs hierarchically via :func:`partition_hier`; with
+    ``fanouts``/``tree`` it runs the arbitrary-depth recursion
+    (:func:`partition_tree`).  Use those functions directly when you
+    also need the resulting ancestor table (e.g. to feed
+    ``sparse.distributed.build_plan_tree``)."""
     if pods is not None:
         res = partition_hier(g, topo, method, pods=pods, tw=tw, seed=seed,
                              eps=eps, lam=lam, **kw)
+        return res.part, res.tw
+    if fanouts is not None or tree is not None:
+        res = partition_tree(g, topo, method, fanouts=fanouts, tree=tree,
+                             tw=tw, seed=seed, eps=eps, lams=lams, **kw)
         return res.part, res.tw
     if tw is None:
         tw = target_block_sizes(g.n, topo)
@@ -162,24 +173,48 @@ def partition(g: Graph, topo: Topology, method: str = "geoRef",
 
 @dataclasses.dataclass
 class HierPartition:
-    """Pod-aware pipeline output: the partition *and* the co-optimized
-    pod assignment that the hier runtime consumes.
+    """Tree-aware pipeline output: the partition *and* the co-optimized
+    ancestor table that the tree runtime consumes.
 
-    ``pod_of[b]`` is the pod of block b.  After the pod-level sweep it
-    need not be contiguous — ``sparse.distributed.build_plan_hier``
-    relabels blocks pod-major internally (``block_map``), and
-    ``sparse.make_operator(..., backend='dist_hier', part=<this>)``
-    unpacks everything directly.
+    ``anc`` is the (h-1, k) ancestor table (``topology.normalize_tree_of``
+    form); ``pod_of``/``lam`` are its two-level views (top grouping and
+    outermost/innermost weight ratio), kept as the PR 4 pod API.  After
+    the per-level sweep the table need not be contiguous —
+    ``sparse.distributed.build_plan_tree`` relabels blocks tree-major
+    internally (``block_map``), and ``sparse.make_operator(...,
+    backend='dist_hier', part=<this>)`` unpacks everything directly.
     """
 
     part: np.ndarray        # (n,) vertex -> block (= PU)
     tw: np.ndarray          # (k,) Algorithm-1 targets, PU order
-    pod_of: np.ndarray      # (k,) block -> pod
-    lam: float              # inter/intra link-cost ratio of the objective
+    pod_of: np.ndarray      # (k,) block -> top-level group (pod)
+    lam: float              # outer/inner link-cost ratio of the objective
+    anc: np.ndarray = None  # (h-1, k) ancestor table; pod_of == anc[0]
+    lams: tuple = None      # (h,) per-level objective weights
+    fanouts: tuple = ()     # (k_1, ..., k_h) of the partitioned tree
+
+    def __post_init__(self):
+        if self.anc is None:
+            self.anc = np.asarray(self.pod_of)[None, :]
+        self.anc = np.asarray(self.anc)
+        if not self.fanouts:
+            self.fanouts = _infer_fanouts(self.anc, self.k)
+        if self.lams is None:
+            # geometric ladder from 1 to lam across the table's depth —
+            # (1, lam) at h == 2, consistent with the anc depth so the
+            # tree metrics accept (lams, anc) pairs straight off this
+            h = len(self.fanouts)
+            self.lams = ((1.0,) if h <= 1 else
+                         tuple(float(self.lam) ** (l / (h - 1))
+                               for l in range(h)))
 
     @property
     def k(self) -> int:
         return len(self.tw)
+
+    @property
+    def h(self) -> int:
+        return len(self.fanouts)
 
     @property
     def n_pods(self) -> int:
@@ -208,74 +243,179 @@ def pod_assignment_for(g: Graph, part: np.ndarray, topo: Topology,
                                  groups=_spec_groups(topo))
 
 
+def tree_assignment_for(g: Graph, part: np.ndarray, topo: Topology,
+                        tree=None, fanouts=None) -> np.ndarray:
+    """Partition-derived ancestor table for an existing (flat) partition
+    — the tree generalization of :func:`pod_assignment_for`: start from
+    the canonical nested grouping and sweep equal-spec blocks level by
+    level (``refinement.refine_tree_assignment``) so the heaviest block
+    pairs meet at the deepest (cheapest) tree level.  Feed the result to
+    ``build_plan_tree``/``make_operator`` as the explicit table."""
+    anc = normalize_tree_of(tree, topo.k,
+                            fanouts if (fanouts is not None or
+                                        tree is not None)
+                            else topo.fanouts)
+    pairs, w = quotient_graph(g, np.asarray(part, dtype=np.int32), topo.k)
+    return refine_tree_assignment(pairs, w, anc, groups=_spec_groups(topo))
+
+
+def _infer_fanouts(anc: np.ndarray, k: int) -> tuple[int, ...]:
+    """(k_1, ..., k_h) implied by a validated nested ancestor table."""
+    counts = [int(np.asarray(row).max()) + 1 for row in anc] + [k]
+    prev = 1
+    fanouts = []
+    for c in counts:
+        fanouts.append(c // prev)
+        prev = c
+    return tuple(fanouts)
+
+
+def partition_tree(g: Graph, topo: Topology, method: str = "geoRef",
+                   fanouts=None, tree=None, tw: np.ndarray | None = None,
+                   seed: int = 0, eps: float = 0.03, lams=None,
+                   refine: bool = True, **kw) -> HierPartition:
+    """Tree-aware recursive pipeline (the tentpole of the tree runtime):
+
+      A. the load is water-filled over the current level's subtree
+         aggregates (tree-aware Algorithm 1: summed speeds under summed
+         memories — ``block_sizes.waterfill``) and the graph is
+         partitioned at that granularity with the chosen method — the
+         future level-crossing cut is minimized directly;
+      B. recursion: each subtree's subgraph is partitioned among its
+         children the same way, down to the leaves — the realized
+         subtree load is water-filled over the children, so a saturated
+         member's overflow is absorbed by its siblings (no stage-B
+         rescale);
+      C. a per-level KL sweep regroups equal-spec blocks on the quotient
+         graph (``refinement.refine_tree_assignment``) — the
+         partition-derived ancestor table;
+      D. scheduled pairwise FM refines against the weighted tree
+         objective (a cut edge costs ``lams[LCA level]``).
+
+    ``tree`` accepts anything ``topology.normalize_tree_of`` does (pod
+    count, pod array, ancestor table); default is the canonical table of
+    ``fanouts`` (default ``topo.fanouts``).  ``lams`` defaults to the
+    topology's link-cost ladder (``topo.link_costs(levels=h).lams``).
+    At depth 2 every stage is the PR 4 pod pipeline (stages C/D
+    bit-identical; stages A/B replace the target rescale with the
+    per-subtree water-fill).
+    """
+    if tw is not None:
+        tw = np.asarray(tw, dtype=np.float64)
+    anc = normalize_tree_of(tree, topo.k,
+                            fanouts if (fanouts is not None or
+                                        tree is not None)
+                            else topo.fanouts)
+    h0 = anc.shape[0] + 1
+    # drop trivial levels: a row that does not strictly refine the one
+    # above (fanout 1) or that already separates every leaf (identity —
+    # its boundary coincides with the leaf level) adds no block pairs
+    kept, prev = [], 1
+    for t in range(anc.shape[0]):
+        c = int(anc[t].max()) + 1
+        if prev < c < topo.k:
+            kept.append(t)
+            prev = c
+    anc = anc[kept]
+    fanouts = _infer_fanouts(anc, topo.k)
+    h = len(fanouts)
+    if lams is None:
+        lams = tuple(topo.link_costs(levels=max(h, 2)).lams[:h])
+    else:
+        lams = tuple(float(x) for x in np.atleast_1d(lams))
+        if len(lams) == h0 and h != h0:
+            # keep the weights of the surviving levels (row t prices
+            # level h0-1-t; the leaf level keeps lams[0])
+            lams = tuple([lams[0]] + [lams[h0 - 1 - t]
+                                      for t in reversed(kept)])
+        elif len(lams) != h:
+            raise ValueError(f"need {h} per-level weights for the "
+                             f"{fanouts} tree, got {len(lams)}")
+    lam = lams[-1] / lams[0]
+
+    if anc.shape[0] == 0:                    # flat tree: no boundary to price
+        if tw is None:
+            tw = target_block_sizes(g.n, topo)
+        part = _dispatch(g, method, tw, topo.memories, topo.fanouts, seed,
+                         eps, **kw)
+        return HierPartition(part=part, tw=tw,
+                             pod_of=np.zeros(topo.k, dtype=np.int64),
+                             lam=lam, anc=np.zeros((0, topo.k), np.int64),
+                             lams=(lams[0],), fanouts=(topo.k,))
+
+    # A/B. recurse down the tree: water-fill the level's aggregates, then
+    # partition at that granularity and descend into each subtree
+    speeds, mems = topo.speeds, topo.memories
+    wleaf = speeds if tw is None else tw     # water-fill preference weights
+    part = np.empty(g.n, dtype=np.int32)
+    tw_out = np.zeros(topo.k, dtype=np.float64)
+
+    def rec(sub: Graph, ids: np.ndarray, pus: np.ndarray,
+            anc_sub: np.ndarray, seed_l: int) -> None:
+        if len(pus) == 1:
+            part[ids] = pus[0]
+            tw_out[pus[0]] = sub.n
+            return
+        if anc_sub.shape[0] == 0:            # leaf level: PUs directly
+            tw_p = waterfill(sub.n, wleaf[pus], mems[pus], strict=False)
+            tw_out[pus] = tw_p
+            sub_part = _dispatch(sub, method, tw_p, mems[pus],
+                                 (len(pus),), seed_l, eps, **kw)
+            part[ids] = pus[sub_part]
+            return
+        top = anc_sub[0]
+        gids = np.unique(top)
+        wg = np.array([wleaf[pus[top == gi]].sum() for gi in gids])
+        cg = np.array([mems[pus[top == gi]].sum() for gi in gids])
+        tw_g = waterfill(sub.n, wg, cg, strict=False)
+        vgrp = _dispatch(sub, method, tw_g, cg, (len(gids),), seed_l, eps,
+                         **kw)
+        for i, gi in enumerate(gids):
+            mask = vgrp == i
+            if not mask.any():
+                continue
+            ss, sids = sub.subgraph(mask)
+            rec(ss, ids[sids], pus[top == gi], anc_sub[1:, top == gi],
+                seed_l + i + 1)
+
+    rec(g, np.arange(g.n), np.arange(topo.k), anc, seed)
+    tw = tw_out if tw is None else tw
+
+    # C. per-level sweep: co-optimize the ancestor table with the
+    # realized partition (equal-spec blocks may trade slots)
+    if refine:
+        pairs, w = quotient_graph(g, part, topo.k)
+        anc = refine_tree_assignment(pairs, w, anc,
+                                     groups=_spec_groups(topo))
+        # D. vertex-level FM against the weighted tree objective
+        part = refine_partition(g, part, tw, mems=mems, eps=eps,
+                                anc=anc, lams=lams)
+    return HierPartition(part=part, tw=tw, pod_of=anc[0], lam=lam,
+                         anc=anc, lams=lams, fanouts=fanouts)
+
+
 def partition_hier(g: Graph, topo: Topology, method: str = "geoRef",
                    pods=2, tw: np.ndarray | None = None, seed: int = 0,
                    eps: float = 0.03, lam: float | None = None,
                    refine: bool = True, **kw) -> HierPartition:
-    """Pod-aware two-level pipeline (the tentpole of the hier runtime):
-
-      A. Algorithm-1 targets are aggregated per pod
-         (``Topology.pod_aggregate``) and the graph is partitioned into
-         *pods* with the chosen method — the future inter-pod cut is
-         minimized directly, at the pod-level granularity;
-      B. each pod's subgraph is partitioned into its PUs with the leaf
-         targets (rescaled to the realized pod sizes);
-      C. a pod-level KL sweep regroups equal-spec blocks on the quotient
-         graph (``refinement.refine_pod_assignment``) — the
-         partition-derived pod assignment;
-      D. scheduled pairwise FM refines against the weighted two-level
-         objective (inter-pod edges cost ``lam``-x intra ones).
+    """Pod-aware two-level pipeline — the ``h == 2`` instance of
+    :func:`partition_tree` (``pods`` = pod count or explicit (k,) pod
+    array; stages C/D are bit-identical to the PR 4 pod path, stages A/B
+    water-fill per subtree instead of rescaling the global targets).
 
     ``lam`` defaults to the topology's link-cost ratio
     (``topo.link_costs().lam`` — the hier round-latency model).
     """
-    if tw is None:
-        tw = target_block_sizes(g.n, topo)
-    tw = np.asarray(tw, dtype=np.float64)
     if lam is None:
         lam = topo.link_costs().lam
     pod_of = normalize_pod_of(pods, topo.k)
-    n_pods = int(pod_of.max()) + 1
-    if n_pods == 1:
-        part = _dispatch(g, method, tw, topo.memories, topo.fanouts, seed,
-                         eps, **kw)
-        return HierPartition(part=part, tw=tw, pod_of=pod_of, lam=lam)
-
-    # A. pods first, on Algorithm-1 targets aggregated per pod
-    pod_topo = topo.pod_aggregate(pod_of)
-    pod_tw = np.zeros(n_pods)
-    np.add.at(pod_tw, pod_of, tw)
-    vertex_pod = _dispatch(g, method, pod_tw, pod_topo.memories,
-                           (n_pods,), seed, eps, **kw)
-
-    # B. within each pod, on the leaf targets (rescaled to realized size)
-    part = np.empty(g.n, dtype=np.int32)
-    mems = topo.memories
-    for p in range(n_pods):
-        pus = np.flatnonzero(pod_of == p)
-        mask = vertex_pod == p
-        n_p = int(mask.sum())
-        if n_p == 0:
-            continue
-        sub, ids = g.subgraph(mask)
-        tw_p = tw[pus] * (n_p / max(tw[pus].sum(), 1e-12))
-        if len(pus) == 1:
-            part[ids] = pus[0]
-            continue
-        sub_part = _dispatch(sub, method, tw_p, mems[pus],
-                             (len(pus),), seed + p + 1, eps, **kw)
-        part[ids] = pus[sub_part]
-
-    # C. pod-level sweep: co-optimize the pod assignment with the
-    # realized partition (equal-spec blocks may trade pod slots)
-    if refine:
-        pairs, w = quotient_graph(g, part, topo.k)
-        pod_of = refine_pod_assignment(pairs, w, pod_of,
-                                       groups=_spec_groups(topo))
-        # D. vertex-level FM against the weighted two-level objective
-        part = refine_partition(g, part, tw, mems=mems, eps=eps,
-                                pod_of=pod_of, lam=lam)
-    return HierPartition(part=part, tw=tw, pod_of=pod_of, lam=lam)
+    res = partition_tree(g, topo, method, tree=pod_of[None, :], tw=tw,
+                         seed=seed, eps=eps, lams=(1.0, float(lam)),
+                         refine=refine, **kw)
+    if res.anc.shape[0] == 0:                # pods == 1 degenerates
+        return HierPartition(part=res.part, tw=res.tw, pod_of=pod_of,
+                             lam=lam)
+    return res
 
 
 METHODS = ("geoKM", "geoRef", "geoHier", "sfc", "rcb", "rib", "sfcRef",
@@ -283,25 +423,34 @@ METHODS = ("geoKM", "geoRef", "geoHier", "sfc", "rcb", "rib", "sfcRef",
 
 
 def evaluate(g: Graph, topo: Topology, methods=METHODS, seed: int = 0,
-             pods=None, lam: float | None = None,
+             pods=None, lam: float | None = None, fanouts=None,
+             tree=None, lams=None,
              verbose: bool = True) -> dict[str, dict]:
     """Run all methods; return {method: metrics+time} (Table IV analogue).
 
     With ``pods`` each method runs the pod-aware pipeline
     (:func:`partition_hier`) and the metrics include the intra/inter-pod
-    split plus the weighted two-level objective."""
+    split plus the weighted two-level objective; with ``fanouts``/
+    ``tree`` the arbitrary-depth pipeline (:func:`partition_tree`) with
+    per-level splits and the tree objective."""
     out = {}
     tw = target_block_sizes(g.n, topo)
+    tree_mode = fanouts is not None or tree is not None
     for m in methods:
         t0 = time.perf_counter()
-        if pods is None:
-            part, _ = partition(g, topo, m, tw=tw, seed=seed)
-            s = summarize(g, part, topo, tw)
-        else:
+        if pods is not None:
             res = partition_hier(g, topo, m, pods=pods, tw=tw, seed=seed,
                                  lam=lam)
             part = res.part
             s = summarize_hier(g, part, topo, tw, res.pod_of, lam=res.lam)
+        elif tree_mode:
+            res = partition_tree(g, topo, m, fanouts=fanouts, tree=tree,
+                                 tw=tw, seed=seed, lams=lams)
+            part = res.part
+            s = summarize_tree(g, part, topo, tw, res.anc, lams=res.lams)
+        else:
+            part, _ = partition(g, topo, m, tw=tw, seed=seed)
+            s = summarize(g, part, topo, tw)
         dt = time.perf_counter() - t0
         s["time_s"] = dt
         out[m] = s
@@ -313,5 +462,8 @@ def evaluate(g: Graph, topo: Topology, methods=METHODS, seed: int = 0,
             if pods is not None:
                 line += (f" interCV={s['comm_volume_inter']:6d}"
                          f" obj={s['two_level_objective']:9.0f}")
+            elif tree_mode:
+                line += (f" outerCV={s['comm_volume_by_level'][-1]:6d}"
+                         f" obj={s['tree_objective']:9.0f}")
             print(line + f" t={dt:6.2f}s")
     return out

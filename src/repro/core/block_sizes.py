@@ -29,6 +29,51 @@ import numpy as np
 from .topology import Topology
 
 
+def waterfill(load: float, weights: np.ndarray, caps: np.ndarray,
+              strict: bool = True) -> np.ndarray:
+    """The Algorithm-1 water-fill core: split ``load`` proportionally to
+    ``weights`` under per-unit ``caps``, greedily in decreasing
+    weight/cap order (Lemma 1: the saturated units form a prefix).
+
+    This is :func:`target_block_sizes` with arbitrary non-negative
+    weights — the recursive tree pipeline calls it at every tree level
+    (subtree aggregates first, then leaves within each subtree), so a
+    saturated member's overflow is absorbed by its *siblings* instead of
+    forcing a post-hoc rescale of the global targets.
+
+    ``strict=False`` relaxes the feasibility check: an overfull load
+    (``load > sum(caps)``) falls back to cap-ignoring proportional
+    shares — the recursion's escape hatch when an upstream partitioner
+    overfilled a subtree beyond its memory (the solution is already
+    infeasible; the caller's own caps decide what to keep).
+    """
+    weights = np.asarray(weights, dtype=np.float64)
+    caps = np.asarray(caps, dtype=np.float64)
+    k = len(weights)
+    if load > caps.sum() + 1e-12:
+        if strict:
+            raise ValueError(
+                f"infeasible: load {load} exceeds total memory "
+                f"{caps.sum()}")
+        w = weights if weights.sum() > 0 else caps
+        return w * (float(load) / w.sum())
+    if weights.sum() <= 0:
+        weights = caps                       # no preference: fill by cap
+    order = np.argsort(-(weights / caps), kind="stable")  # Line 1
+    tw = np.zeros(k, dtype=np.float64)
+    j_load = float(load)                                 # Line 2
+    j_speed = float(weights.sum())                       # Line 3
+    for idx in order:                                    # Line 4
+        des_w = weights[idx] * j_load / j_speed          # Line 5
+        if des_w > caps[idx]:                            # Line 6
+            tw[idx] = caps[idx]                          # Line 7  (saturated)
+        else:
+            tw[idx] = des_w                              # Line 10 (non-sat.)
+        j_load -= tw[idx]                                # Line 11
+        j_speed -= weights[idx]                          # Line 12
+    return tw
+
+
 def target_block_sizes(n: float, topo: Topology,
                        integral: bool = False) -> np.ndarray:
     """Algorithm 1 — returns tw in the ORIGINAL PU order.
@@ -39,27 +84,57 @@ def target_block_sizes(n: float, topo: Topology,
       integral: if True, round to integers that still sum to n (largest
         remainder method, respecting memory caps).
     """
-    speeds = topo.speeds
-    mems = topo.memories
     if not topo.feasible(n):
         raise ValueError(
             f"infeasible: load {n} exceeds total memory {topo.total_memory}")
-
-    k = topo.k
-    order = np.argsort(-(speeds / mems), kind="stable")  # Line 1
-    tw = np.zeros(k, dtype=np.float64)
-    j_load = float(n)                                    # Line 2
-    j_speed = float(speeds.sum())                        # Line 3
-    for idx in order:                                    # Line 4
-        des_w = speeds[idx] * j_load / j_speed           # Line 5
-        if des_w > mems[idx]:                            # Line 6
-            tw[idx] = mems[idx]                          # Line 7  (saturated)
-        else:
-            tw[idx] = des_w                              # Line 10 (non-sat.)
-        j_load -= tw[idx]                                # Line 11
-        j_speed -= speeds[idx]                           # Line 12
+    tw = waterfill(n, topo.speeds, topo.memories)
     if integral:
-        tw = _round_preserving_sum(tw, int(round(n)), mems)
+        tw = _round_preserving_sum(tw, int(round(n)), topo.memories)
+    return tw
+
+
+def tree_target_block_sizes(n: float, topo: Topology, tree=None,
+                            fanouts=None) -> np.ndarray:
+    """Tree-aware Algorithm 1 (ROADMAP: "pods in Algorithm 1") — returns
+    leaf tw in the ORIGINAL PU order.
+
+    Water-fills top-down: the root's load is split among the depth-1
+    subtrees by *aggregate* speed under *aggregate* memory, then each
+    subtree splits its share among its children, down to the leaves.  A
+    saturated member inside an unsaturated subtree is absorbed by its
+    siblings at the innermost level — the per-subtree shares never need
+    the stage-B rescale of the flat pipeline.  Coincides with the flat
+    :func:`target_block_sizes` whenever no PU saturates (proportional
+    shares compose), and with it per subtree when one does.
+
+    ``tree`` is anything ``topology.normalize_tree_of`` accepts (pod
+    count, pod array, (h-1, k) ancestor table); default is the canonical
+    table of ``fanouts`` (default ``topo.fanouts``).
+    """
+    from .topology import normalize_tree_of
+    if not topo.feasible(n):
+        raise ValueError(
+            f"infeasible: load {n} exceeds total memory {topo.total_memory}")
+    anc = normalize_tree_of(tree, topo.k,
+                            fanouts if (fanouts is not None or
+                                        tree is not None) else topo.fanouts)
+    speeds, mems = topo.speeds, topo.memories
+    tw = np.zeros(topo.k, dtype=np.float64)
+
+    def rec(pus: np.ndarray, anc_sub: np.ndarray, load: float) -> None:
+        if anc_sub.shape[0] == 0:
+            tw[pus] = waterfill(load, speeds[pus], mems[pus])
+            return
+        top = anc_sub[0]
+        gids = np.unique(top)
+        wg = np.array([speeds[pus[top == g]].sum() for g in gids])
+        cg = np.array([mems[pus[top == g]].sum() for g in gids])
+        shares = waterfill(load, wg, cg)
+        for share, gid in zip(shares, gids):
+            sel = top == gid
+            rec(pus[sel], anc_sub[1:, sel], float(share))
+
+    rec(np.arange(topo.k), anc, float(n))
     return tw
 
 

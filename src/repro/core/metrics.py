@@ -7,20 +7,50 @@
   * imbalance         — max_i tw_actual(b_i)/tw_target(b_i)
   * load ratio        — objective (2): max_i |b_i| / c_s(p_i)
 
-Hierarchical (pod-aware) metrics: given a pod assignment of the blocks,
-cut and comm volume split exactly into an intra-pod and an inter-pod
-component (every cut edge / received word crosses either a same-pod or a
-pod-crossing block pair, never both), and the *weighted two-level
-objective* prices the inter-pod component lambda-x higher — the
-WindGP-style objective the hier runtime's round latencies imply
-(``topology.LinkCosts``), minimized by the pod-aware refinement.
+Hierarchical (tree-aware) metrics: given an (h-1, k) ancestor table of
+the blocks (``topology.normalize_tree_of``), cut and comm volume split
+exactly into per-tree-level components — every cut edge / received word
+crosses a block pair with exactly one LCA level — and the *weighted tree
+objective* ``sum_level lam[level] * cut[level]`` prices each level by its
+link cost (``topology.LinkCosts.lams``), the objective the tree runtime's
+per-level round latencies imply and the tree-aware refinement minimizes.
+The PR 4 two-level (pod) metrics are the ``h == 2`` instance: their
+(intra, inter) pairs are exactly the level-0/level-1 entries.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from ..sparse.graph import Graph
-from .topology import LinkCosts, Topology
+from .topology import LinkCosts, Topology, level_matrix
+
+
+def _default_link_costs() -> LinkCosts:
+    """THE default cost model for every metric that takes an optional
+    ``lam``/``lams``: one resolution point, so the objective, the FM
+    gains, and ``summarize_hier``/``summarize_tree`` can never disagree
+    about what an unspecified lambda means.  Topology-calibrated models
+    come in through the ``lam``/``lams`` arguments
+    (``Topology.link_costs()``)."""
+    return LinkCosts()
+
+
+def _resolve_lam(lam: float | None) -> float:
+    return _default_link_costs().lam if lam is None else lam
+
+
+def resolve_lams(lams, h: int):
+    """(h,) per-level objective weights; defaults extend the one default
+    cost model geometrically to depth h (``link_costs`` ladder)."""
+    if lams is None:
+        base = _default_link_costs()
+        ratio = base.lam
+        return tuple(base.lams[l] if l < base.levels else
+                     float(ratio ** l) for l in range(h))
+    lams = tuple(float(x) for x in np.atleast_1d(np.asarray(lams)))
+    if len(lams) != h:
+        raise ValueError(f"need {h} per-level weights, got {len(lams)}")
+    return lams
 
 
 def edge_cut(g: Graph, part: np.ndarray) -> float:
@@ -107,33 +137,37 @@ def summarize(g: Graph, part: np.ndarray, topo: Topology,
     }
 
 
-# -- hierarchical (pod-aware) metrics ---------------------------------------
+# -- hierarchical (tree-aware) metrics --------------------------------------
 
-def pod_cut_split(g: Graph, part: np.ndarray,
-                  pod_of: np.ndarray) -> tuple[float, float]:
-    """Edge cut split by pod locality: ``(intra, inter)`` with
-    ``intra + inter == edge_cut`` exactly — a cut edge connects two
-    distinct blocks, which either share a pod or do not."""
-    pod_of = np.asarray(pod_of)
+def tree_cut_split(g: Graph, part: np.ndarray,
+                   anc: np.ndarray) -> np.ndarray:
+    """Edge cut split by LCA level: (h,) array with
+    ``tree_cut_split(...).sum() == edge_cut`` exactly — every cut edge
+    connects two distinct blocks with exactly one tree-distance level
+    (``topology.level_matrix``).  ``anc`` is the (h-1, k) ancestor table
+    (a (k,) pod array is the two-level instance)."""
+    anc = np.atleast_2d(np.asarray(anc))
+    h = anc.shape[0] + 1
+    lev = level_matrix(anc)
     src, dst, w = g.edge_list()
     pa, pb = part[src], part[dst]
-    ext = pa != pb
-    cross = pod_of[pa] != pod_of[pb]
-    intra2 = np.sum(w * (ext & ~cross))
-    inter2 = np.sum(w * (ext & cross))          # both directions counted
-    return float(intra2) / 2.0, float(inter2) / 2.0
+    lev_uv = lev[pa, pb]                        # -1 for same-block pairs
+    # both directions counted in each sum, halved per level
+    return np.array([float(np.sum(w * (lev_uv == l))) / 2.0
+                     for l in range(h)])
 
 
-def pod_comm_volumes(g: Graph, part: np.ndarray, k: int,
-                     pod_of: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-    """Received-words per block split by the owner's pod: ``(intra,
-    inter)`` (k,) arrays with ``intra + inter == comm_volumes`` exactly —
-    each distinct (receiver, remote vertex) pair has one owning block.
-
-    ``inter.sum()`` is the total word count the hier schedule moves over
-    the slow links; ``inter.max()`` the bottleneck per-PU slow-link
-    volume (the Langguth/Schlag/Schulz per-level bottleneck)."""
-    pod_of = np.asarray(pod_of)
+def tree_comm_volumes(g: Graph, part: np.ndarray, k: int,
+                      anc: np.ndarray) -> np.ndarray:
+    """Received-words per block split by the owner's LCA level: (h, k)
+    array with column sums over levels == :func:`comm_volumes` exactly —
+    each distinct (receiver, remote vertex) pair has one owning block,
+    hence one level.  Row ``l`` sums to the word count the tree schedule
+    moves over the level-``l`` links; ``row.max()`` is the per-level
+    bottleneck volume (the Langguth/Schlag/Schulz objective)."""
+    anc = np.atleast_2d(np.asarray(anc))
+    h = anc.shape[0] + 1
+    lev = level_matrix(anc)
     src, dst, _ = g.edge_list()
     pb, pv = part[src], part[dst]
     ext = pb != pv
@@ -141,41 +175,104 @@ def pod_comm_volumes(g: Graph, part: np.ndarray, k: int,
                       + dst[ext].astype(np.int64))
     blocks = pairs // g.n
     owners = part[pairs % g.n]
-    cross = pod_of[blocks] != pod_of[owners]
-    intra = np.bincount(blocks[~cross], minlength=k)
-    inter = np.bincount(blocks[cross], minlength=k)
-    return intra, inter
+    lev_pair = lev[blocks, owners]
+    return np.stack([np.bincount(blocks[lev_pair == l], minlength=k)
+                     for l in range(h)])
+
+
+def tree_objective(g: Graph, part: np.ndarray, anc: np.ndarray,
+                   lams=None) -> float:
+    """The weighted tree cut ``sum_level lam[level] * cut[level]`` — what
+    the tree-aware FM gains (``refinement.fm_pair_refine(anc=...)``)
+    minimize.  ``lams`` defaults to the shared cost model
+    (:func:`_default_link_costs`) extended to the table's depth; at
+    ``h == 2`` this is bit-identical to :func:`two_level_objective`."""
+    anc = np.atleast_2d(np.asarray(anc))
+    lams = resolve_lams(lams, anc.shape[0] + 1)
+    cuts = tree_cut_split(g, part, anc)
+    obj = 0.0
+    for lam_l, cut_l in zip(lams, cuts):
+        obj += lam_l * cut_l
+    return float(obj)
+
+
+def pod_cut_split(g: Graph, part: np.ndarray,
+                  pod_of: np.ndarray) -> tuple[float, float]:
+    """Edge cut split by pod locality — the two-level instance of
+    :func:`tree_cut_split`: ``(intra, inter)`` with ``intra + inter ==
+    edge_cut`` exactly."""
+    intra, inter = tree_cut_split(g, part,
+                                  np.asarray(pod_of)[None, :])
+    return float(intra), float(inter)
+
+
+def pod_comm_volumes(g: Graph, part: np.ndarray, k: int,
+                     pod_of: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Received-words per block split by the owner's pod — the two-level
+    instance of :func:`tree_comm_volumes`: ``(intra, inter)`` (k,)
+    arrays with ``intra + inter == comm_volumes`` exactly.
+
+    ``inter.sum()`` is the total word count the hier schedule moves over
+    the slow links; ``inter.max()`` the bottleneck per-PU slow-link
+    volume."""
+    vols = tree_comm_volumes(g, part, k, np.asarray(pod_of)[None, :])
+    return vols[0], vols[1]
 
 
 def two_level_objective(g: Graph, part: np.ndarray, pod_of: np.ndarray,
                         lam: float | None = None) -> float:
-    """The weighted two-level cut ``intra + lam * inter`` — what the
-    pod-aware FM gains (``refinement.fm_pair_refine(pod_of=...)``)
-    minimize.  ``lam`` defaults to the hier round-latency ratio
-    (``LinkCosts().lam``)."""
-    if lam is None:
-        lam = LinkCosts().lam
-    intra, inter = pod_cut_split(g, part, pod_of)
-    return intra + lam * inter
+    """The weighted two-level cut ``intra + lam * inter`` — the ``h == 2``
+    instance of :func:`tree_objective`.  ``lam`` defaults to the shared
+    cost model's round-latency ratio (one resolution point with
+    :func:`summarize_hier`)."""
+    lam = _resolve_lam(lam)
+    return tree_objective(g, part, np.asarray(pod_of)[None, :],
+                          lams=(1.0, lam))
+
+
+def summarize_tree(g: Graph, part: np.ndarray, topo: Topology,
+                   tw: np.ndarray, anc: np.ndarray,
+                   lams=None) -> dict:
+    """:func:`summarize` plus the per-level cut/volume splits and the
+    weighted tree objective (Table IV analogue for the tree pipeline)."""
+    anc = np.atleast_2d(np.asarray(anc))
+    h = anc.shape[0] + 1
+    lams = resolve_lams(lams, h)
+    out = summarize(g, part, topo, tw)
+    cuts = tree_cut_split(g, part, anc)
+    vols = tree_comm_volumes(g, part, topo.k, anc)
+    obj = 0.0
+    for lam_l, cut_l in zip(lams, cuts):
+        obj += lam_l * cut_l
+    out.update(
+        cut_by_level=cuts.tolist(),
+        comm_volume_by_level=[int(v.sum()) for v in vols],
+        max_comm_volume_by_level=[int(v.max(initial=0)) for v in vols],
+        tree_objective=float(obj),
+        lams=list(lams),
+    )
+    return out
 
 
 def summarize_hier(g: Graph, part: np.ndarray, topo: Topology,
                    tw: np.ndarray, pod_of: np.ndarray,
                    lam: float | None = None) -> dict:
     """:func:`summarize` plus the intra/inter split and the weighted
-    objective (Table IV analogue for the two-level pipeline)."""
-    if lam is None:
-        lam = LinkCosts().lam
-    out = summarize(g, part, topo, tw)
-    intra_cut, inter_cut = pod_cut_split(g, part, pod_of)
-    intra_v, inter_v = pod_comm_volumes(g, part, topo.k, pod_of)
+    objective — the two-level view of :func:`summarize_tree` (same
+    default cost model, so the objective and the summary can't
+    diverge)."""
+    lam = _resolve_lam(lam)
+    out = summarize_tree(g, part, topo, tw,
+                         np.asarray(pod_of)[None, :], lams=(1.0, lam))
+    cuts = out.pop("cut_by_level")
+    vols = out.pop("comm_volume_by_level")
+    maxv = out.pop("max_comm_volume_by_level")
+    out.pop("lams")
     out.update(
-        cut_intra=intra_cut, cut_inter=inter_cut,
-        comm_volume_intra=int(intra_v.sum()),
-        comm_volume_inter=int(inter_v.sum()),
-        max_comm_volume_intra=int(intra_v.max(initial=0)),
-        max_comm_volume_inter=int(inter_v.max(initial=0)),
-        two_level_objective=intra_cut + lam * inter_cut,
+        cut_intra=cuts[0], cut_inter=cuts[1],
+        comm_volume_intra=vols[0], comm_volume_inter=vols[1],
+        max_comm_volume_intra=maxv[0], max_comm_volume_inter=maxv[1],
+        two_level_objective=out.pop("tree_objective"),
         lam=lam,
     )
     return out

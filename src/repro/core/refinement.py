@@ -22,7 +22,8 @@ import heapq
 import numpy as np
 
 from ..sparse.graph import Graph
-from .metrics import block_sizes_of, edge_cut
+from .metrics import block_sizes_of, edge_cut, resolve_lams
+from .topology import level_matrix
 
 
 # -- 1. quotient graph ------------------------------------------------------
@@ -216,27 +217,48 @@ def _boundary_candidates(g: Graph, part: np.ndarray, a: int, b: int,
     return cand[:cap]
 
 
+def _level_cost_matrix(anc: np.ndarray, lams) -> np.ndarray:
+    """(k, k) per-edge cost under an ancestor table: 0 on the diagonal
+    (same block), ``lams[level]`` otherwise — the price the tree-aware
+    FM gains charge a cut edge by the LCA level of its block pair."""
+    anc = np.atleast_2d(np.asarray(anc))
+    lams = resolve_lams(lams, anc.shape[0] + 1)
+    lev = level_matrix(anc)
+    cost = np.asarray(lams, dtype=np.float64)[np.maximum(lev, 0)]
+    np.fill_diagonal(cost, 0.0)
+    return cost
+
+
 def fm_pair_refine(g: Graph, part: np.ndarray, a: int, b: int,
                    caps: np.ndarray, bfs_hops: int = 2,
                    max_moves: int | None = None,
                    pod_of: np.ndarray | None = None, lam: float = 1.0,
+                   anc: np.ndarray | None = None, lams=None,
                    vw: np.ndarray | None = None) -> float:
     """One FM pass between blocks a and b.  Mutates ``part``.
 
     Returns the achieved gain (>= 0; rolls back to the best prefix).
 
-    With ``pod_of`` (+ ``lam``) the gains are computed against the
-    *weighted two-level objective* (``metrics.two_level_objective``):
-    a cut edge costs 1 inside a pod and ``lam`` across pods, so moves
-    that pull an edge off the slow inter-pod links are worth lam-x more
-    — the hier runtime's link-cost model.  Without ``pod_of`` the gain
-    is the flat cut (every cut edge costs 1), bit-identical to the
-    pre-pod-aware behavior.
+    With ``anc`` (an (h-1, k) ancestor table, + ``lams``) the gains are
+    computed against the *weighted tree objective*
+    (``metrics.tree_objective``): a cut edge costs ``lams[level]`` at
+    the LCA level of its block pair, so moves that pull an edge down the
+    tree — off the slower links — are worth proportionally more.
+    ``pod_of`` (+ ``lam``) is the two-level sugar: exactly
+    ``anc=pod_of[None], lams=(1, lam)``, bit-identical to the PR 4 pod
+    path.  Without either, the gain is the flat cut (every cut edge
+    costs 1), bit-identical to the pre-pod-aware behavior.
 
     ``vw`` (n,) supplies per-vertex weights for the size/cap accounting
     (coarse-level supernodes in the multilevel pipeline); ``caps`` is
     then in weight units, not vertex counts.
     """
+    if pod_of is not None:
+        if anc is not None:
+            raise ValueError("pass either pod_of= (two-level) or anc= "
+                             "(tree), not both")
+        anc = np.asarray(pod_of)[None, :]
+        lams = (1.0, lam)
     cand = _boundary_candidates(g, part, a, b, bfs_hops)
     if len(cand) == 0:
         return 0.0
@@ -246,7 +268,7 @@ def fm_pair_refine(g: Graph, part: np.ndarray, a: int, b: int,
         vw = np.asarray(vw, dtype=np.float64)
         sizes = np.bincount(part, weights=vw, minlength=len(caps))
 
-    if pod_of is None:
+    if anc is None:
         def gain_of(v: int) -> float:
             nb = g.indices[g.indptr[v]:g.indptr[v + 1]]
             wv = g.weights[g.indptr[v]:g.indptr[v + 1]]
@@ -254,21 +276,14 @@ def fm_pair_refine(g: Graph, part: np.ndarray, a: int, b: int,
             return float(np.sum(wv * (part[nb] == other))
                          - np.sum(wv * (part[nb] == own)))
     else:
-        pod_of = np.asarray(pod_of)
-
-        def edge_cost(blk: np.ndarray, at: int) -> np.ndarray:
-            # per-neighbor cost of v living in block ``at``: 0 for
-            # same-block edges, 1 intra-pod, lam across pods
-            return np.where(blk == at, 0.0,
-                            np.where(pod_of[blk] == pod_of[at], 1.0, lam))
+        C = _level_cost_matrix(anc, lams)       # per-pair LCA-level price
 
         def gain_of(v: int) -> float:
             nb = g.indices[g.indptr[v]:g.indptr[v + 1]]
             wv = g.weights[g.indptr[v]:g.indptr[v + 1]]
             own, other = (a, b) if part[v] == a else (b, a)
             blk = part[nb]
-            return float(np.sum(wv * (edge_cost(blk, own)
-                                      - edge_cost(blk, other))))
+            return float(np.sum(wv * (C[blk, own] - C[blk, other])))
 
     heap = [(-gain_of(v), v) for v in cand]
     heapq.heapify(heap)
@@ -316,13 +331,15 @@ def refine_partition(g: Graph, part: np.ndarray, tw: np.ndarray,
                      mems: np.ndarray | None = None, eps: float = 0.03,
                      passes: int = 3, bfs_hops: int = 2,
                      pod_of: np.ndarray | None = None, lam: float = 1.0,
+                     anc: np.ndarray | None = None, lams=None,
                      vw: np.ndarray | None = None,
                      verbose: bool = False) -> np.ndarray:
     """geoRef: scheduled pairwise FM until no pass improves the objective.
 
-    ``pod_of``/``lam`` switch the FM gains to the weighted two-level
-    objective (inter-pod cut edges cost lam-x intra ones); ``vw`` makes
-    the size/cap accounting weight-aware (coarse multilevel levels —
+    ``anc``/``lams`` switch the FM gains to the weighted tree objective
+    (a cut edge costs ``lams[LCA level]``); ``pod_of``/``lam`` is the
+    two-level sugar (see :func:`fm_pair_refine`).  ``vw`` makes the
+    size/cap accounting weight-aware (coarse multilevel levels —
     ``tw``/``mems`` are then compared against summed vertex weights)."""
     part = np.asarray(part, dtype=np.int32).copy()
     k = len(tw)
@@ -339,7 +356,8 @@ def refine_partition(g: Graph, part: np.ndarray, tw: np.ndarray,
             for e in np.nonzero(colors == c)[0]:
                 gain += fm_pair_refine(g, part, int(pairs[e, 0]),
                                        int(pairs[e, 1]), caps, bfs_hops,
-                                       pod_of=pod_of, lam=lam, vw=vw)
+                                       pod_of=pod_of, lam=lam,
+                                       anc=anc, lams=lams, vw=vw)
         if verbose:
             print(f"  refine pass {p}: gain {gain:.0f} "
                   f"cut {edge_cut(g, part):.0f}")
@@ -348,15 +366,62 @@ def refine_partition(g: Graph, part: np.ndarray, tw: np.ndarray,
     return part
 
 
-# -- pod-level sweep on the block quotient graph -----------------------------
+# -- per-level sweeps on the block quotient graph ----------------------------
+
+def _quotient_weight_matrix(pairs: np.ndarray, weights: np.ndarray,
+                            k: int) -> np.ndarray:
+    """Symmetric (k, k) dense weight matrix from :func:`quotient_graph`
+    output (zero diagonal)."""
+    W = np.zeros((k, k), dtype=np.float64)
+    if len(pairs):
+        pairs = np.asarray(pairs, dtype=np.int64)
+        W[pairs[:, 0], pairs[:, 1]] = weights
+        W += W.T
+    return W
+
+
+def _kl_sweep(W: np.ndarray, grouping: np.ndarray, groups: np.ndarray,
+              max_swaps: int) -> tuple[np.ndarray, list[tuple[int, int]]]:
+    """One Kernighan–Lin swap sweep of ``grouping`` on the dense quotient
+    matrix ``W``: repeatedly apply the best block swap (across two
+    groups, same ``groups`` id) that reduces the crossing weight, until
+    none helps.  Returns ``(refined grouping, applied swaps in order)``
+    — the swap list lets callers mirror the swaps onto deeper ancestor
+    rows (:func:`refine_tree_assignment`'s whole-slot trades).
+    Deterministic: ties break on the smallest (x, y)."""
+    grouping = np.asarray(grouping, dtype=np.int64).copy()
+    k = len(grouping)
+    swaps: list[tuple[int, int]] = []
+    for _ in range(max_swaps):
+        best_gain, best = 1e-9, None
+        for x in range(k):
+            for y in range(x + 1, k):
+                if grouping[x] == grouping[y] or groups[x] != groups[y]:
+                    continue
+                mp = grouping == grouping[x]
+                mq = grouping == grouping[y]
+                # KL gain: D_x + D_y - 2 w(x,y); edges to third groups
+                # and the x-y edge itself stay crossing either way
+                d_x = W[x] @ mq - W[x] @ mp
+                d_y = W[y] @ mp - W[y] @ mq
+                gain = float(d_x + d_y - 2.0 * W[x, y])
+                if gain > best_gain:
+                    best_gain, best = gain, (x, y)
+        if best is None:
+            break
+        x, y = best
+        grouping[x], grouping[y] = grouping[y], grouping[x]
+        swaps.append((x, y))
+    return grouping, swaps
+
 
 def refine_pod_assignment(pairs: np.ndarray, weights: np.ndarray,
                           pod_of: np.ndarray,
                           groups: np.ndarray | None = None,
                           max_swaps: int | None = None) -> np.ndarray:
     """Kernighan–Lin sweep of the block->pod grouping on the block
-    quotient graph: repeatedly apply the best block swap (across two
-    pods) that reduces the inter-pod quotient weight, until none helps.
+    quotient graph — the single-level (``h == 2``) instance of
+    :func:`refine_tree_assignment`.
 
     ``pairs``/``weights`` are :func:`quotient_graph` output; ``pod_of``
     the starting (k,) assignment (e.g. ``Topology.pod_assignment`` —
@@ -374,34 +439,54 @@ def refine_pod_assignment(pairs: np.ndarray, weights: np.ndarray,
     pairs per applied swap with O(k) gain evaluation — the quotient
     graph has one vertex per PU, so this is host-trivial.
     """
-    pod_of = np.asarray(pod_of, dtype=np.int64).copy()
+    pod_of = np.asarray(pod_of, dtype=np.int64)
     k = len(pod_of)
-    W = np.zeros((k, k), dtype=np.float64)
-    if len(pairs):
-        pairs = np.asarray(pairs, dtype=np.int64)
-        W[pairs[:, 0], pairs[:, 1]] = weights
-        W += W.T
+    W = _quotient_weight_matrix(pairs, weights, k)
     groups = (np.zeros(k, dtype=np.int64) if groups is None
               else np.asarray(groups))
+    out, _ = _kl_sweep(W, pod_of, groups, k * k if max_swaps is None
+                       else max_swaps)
+    return out
+
+
+def refine_tree_assignment(pairs: np.ndarray, weights: np.ndarray,
+                           anc: np.ndarray,
+                           groups: np.ndarray | None = None,
+                           max_swaps: int | None = None) -> np.ndarray:
+    """Per-level Kernighan–Lin sweep of the block ancestor table on the
+    block quotient graph — the tree generalization of
+    :func:`refine_pod_assignment`.
+
+    Levels are swept top-down (coarsest grouping first — it prices the
+    most expensive links): at depth ``d`` the sweep trades whole *leaf
+    slots* between depth-``d`` groups, minimizing the weight crossing
+    that grouping; swaps are restricted to blocks with the same
+    ``groups`` id (PU spec class) *and* — below the top level — the same
+    depth-``d-1`` ancestor, so every swap keeps the table nested and all
+    coarser decisions intact.  Each applied swap exchanges the blocks'
+    entire remaining slot paths (``anc[d:, x] <-> anc[d:, y]``), which
+    is what makes the nesting invariant free.
+
+    Returns the refined (h-1, k) ancestor table, consumable by
+    ``sparse.distributed.build_plan_tree`` — per level, the crossing
+    quotient weight never increases versus the input table, pod/group
+    sizes are preserved, and the flat cut is untouched.
+    """
+    anc = np.atleast_2d(np.asarray(anc, dtype=np.int64)).copy()
+    h1, k = anc.shape
+    W = _quotient_weight_matrix(pairs, weights, k)
+    groups = (np.zeros(k, dtype=np.int64) if groups is None
+              else np.asarray(groups, dtype=np.int64))
     if max_swaps is None:
         max_swaps = k * k
-    for _ in range(max_swaps):
-        best_gain, best = 1e-9, None
-        for x in range(k):
-            for y in range(x + 1, k):
-                if pod_of[x] == pod_of[y] or groups[x] != groups[y]:
-                    continue
-                mp = pod_of == pod_of[x]
-                mq = pod_of == pod_of[y]
-                # KL gain: D_x + D_y - 2 w(x,y); edges to third pods and
-                # the x-y edge itself stay inter-pod either way
-                d_x = W[x] @ mq - W[x] @ mp
-                d_y = W[y] @ mp - W[y] @ mq
-                gain = float(d_x + d_y - 2.0 * W[x, y])
-                if gain > best_gain:
-                    best_gain, best = gain, (x, y)
-        if best is None:
-            break
-        x, y = best
-        pod_of[x], pod_of[y] = pod_of[y], pod_of[x]
-    return pod_of
+    for d in range(h1):
+        # below the top level, a trade must stay inside one parent group
+        if d == 0:
+            combo = groups
+        else:
+            parent = anc[d - 1]
+            combo = groups * (int(parent.max()) + 1) + parent
+        _, swaps = _kl_sweep(W, anc[d], combo, max_swaps)
+        for x, y in swaps:                     # whole-slot trades
+            anc[d:, [x, y]] = anc[d:, [y, x]]
+    return anc

@@ -79,6 +79,56 @@ class Topology:
         """A valid solution exists iff the load fits in total memory."""
         return n <= self.total_memory + 1e-12
 
+    # -- implicit-tree structure (Sec. II-B / V) ---------------------------
+    @property
+    def depth(self) -> int:
+        """h = len(fanouts): number of tree levels below the root.  A flat
+        system is depth 1; the two-level pod machine of PRs 3-4 is the
+        ``h == 2`` instance."""
+        return len(self.fanouts)
+
+    def ancestor_table(self, fanouts: Sequence[int] | None = None
+                       ) -> np.ndarray:
+        """Canonical (h-1, k) ancestor table of the implicit tree.
+
+        Row ``t`` gives, per leaf, the id of its ancestor at tree depth
+        ``t + 1`` (0 = the children of the root, coarsest): leaf ``i``
+        written in ``fanouts`` mixed radix has ancestor
+        ``i // prod(fanouts[t+1:])``.  For ``h == 2`` the single row is
+        exactly :meth:`pod_assignment`'s contiguous pod grouping.  The
+        table is the tree analogue of ``pod_of`` — the representation
+        the tree metrics, the per-level KL sweep, and
+        ``sparse.distributed.build_plan_tree`` all consume.
+        """
+        fanouts = tuple(fanouts) if fanouts is not None else self.fanouts
+        return canonical_ancestors(fanouts)
+
+    def level_of(self, i, j, fanouts: Sequence[int] | None = None):
+        """Tree-distance level of PU pair (i, j): 0 = the pair shares its
+        deepest internal node (fastest links), ``h - 1`` = only the root
+        is shared (slowest links); -1 for ``i == j``.  Vectorized over
+        array inputs.  This is the level whose ``LinkCosts`` entry a cut
+        edge between blocks i and j pays."""
+        fanouts = tuple(fanouts) if fanouts is not None else self.fanouts
+        i = np.asarray(i, dtype=np.int64)
+        j = np.asarray(j, dtype=np.int64)
+        h = len(fanouts)
+        shared = np.zeros(np.broadcast(i, j).shape, dtype=np.int64)
+        size = int(np.prod(fanouts))
+        for t in range(1, h):
+            size //= fanouts[t - 1]            # subtree size at depth t
+            shared += (i // size) == (j // size)
+        level = h - 1 - shared
+        level = np.where(i == j, -1, level)
+        return level if level.ndim else int(level)
+
+    def tree_aggregate(self, anc_row) -> "Topology":
+        """Aggregate topology with one PU per group of ``anc_row`` — the
+        per-level generalization of :meth:`pod_aggregate` (pass any row
+        of the ancestor table to aggregate the corresponding tree level;
+        the tree-aware Algorithm 1 water-fills these top-down)."""
+        return self.pod_aggregate(anc_row)
+
     def pod_assignment(self, pods: int) -> np.ndarray:
         """(k,) pod id per PU: contiguous equal-size grouping of the PU
         list (``sparse.distributed.build_plan_hier``'s default).
@@ -116,14 +166,28 @@ class Topology:
                               for p in range(n_pods)), (n_pods,))
 
     def link_costs(self, intra: float | None = None,
-                   inter: float | None = None) -> "LinkCosts":
-        """Per-cut-edge link-cost model for this topology's two-level
-        tree (``fanouts``): edges whose endpoints share a pod ride the
-        fast intra-pod links, pod-crossing edges pay the slow top-level
-        links.  Defaults come from the hier round latencies
-        (:data:`INTRA_LINK_COST` / :data:`INTER_LINK_COST`)."""
-        return LinkCosts(INTRA_LINK_COST if intra is None else intra,
-                         INTER_LINK_COST if inter is None else inter)
+                   inter: float | None = None,
+                   costs: Sequence[float] | None = None,
+                   levels: int | None = None) -> "LinkCosts":
+        """Per-cut-edge link-cost model for this topology's ``fanouts``
+        tree: a cut edge between PUs i and j pays ``costs[level_of(i, j)]``
+        — one unit for siblings, more per extra tree level the exchange
+        must climb.  ``costs`` supplies the per-level vector directly
+        (calibrate from measured round latencies); otherwise a geometric
+        ladder ``intra * (inter/intra)**level`` over ``levels`` levels
+        (default ``max(depth, 2)``) reproduces the two-level defaults
+        (:data:`INTRA_LINK_COST` / :data:`INTER_LINK_COST`) at depth 2."""
+        if costs is not None:
+            return LinkCosts(costs=costs)
+        intra = INTRA_LINK_COST if intra is None else intra
+        inter = INTER_LINK_COST if inter is None else inter
+        if levels is None:
+            levels = max(self.depth, 2)
+        if levels == 2:
+            return LinkCosts(intra, inter)
+        ratio = inter / intra
+        return LinkCosts(costs=tuple(intra * ratio ** l
+                                     for l in range(levels)))
 
     # -- constructors for the paper's simulated systems ---------------------
     @staticmethod
@@ -181,45 +245,97 @@ class Topology:
         return Topology(tuple(pus), fanouts=(nodes, cores_per_node))
 
 
-# -- link-cost model over the two-level topology tree -----------------------
+# -- link-cost model over the topology tree ---------------------------------
 #
-# The hier runtime (sparse/distributed.py, comm="hier") pays its two
-# ppermute classes at different latencies: intra-pod rounds ride the fast
-# per-pod axes and overlap the inter-pod exchange, while every inter-pod
-# round traverses the slow combined-axes links.  The per-cut-edge costs
-# below are the relative round latencies that schedule implies — one unit
-# for an intra-pod halo word, INTER_LINK_COST units for an inter-pod one
-# (the ~4x DCN-vs-ICI gap the hier benchmark models).  Their ratio is the
-# lambda of the weighted two-level objective (metrics.two_level_objective)
-# that the pod-aware refinement minimizes; override from measured round
-# latencies when calibrating a real machine.
+# The tree runtime (sparse/distributed.py, comm="hier") pays one ppermute
+# class per tree level at its own latency: level-0 rounds ride the fast
+# innermost axes and overlap every slower exchange, while each outer level
+# traverses progressively slower links (ICI < intra-node < DCN).  The
+# per-cut-edge costs below are the relative round latencies that schedule
+# implies — one unit for a sibling halo word, INTER_LINK_COST units per
+# pod-crossing one (the ~4x DCN-vs-ICI gap the hier benchmark models);
+# deeper trees default to the geometric ladder intra * (inter/intra)**lvl.
+# The normalized vector is the per-level lambda of the tree objective
+# (metrics.tree_objective) that the tree-aware refinement minimizes;
+# override from measured round latencies when calibrating a real machine.
 
 INTRA_LINK_COST = 1.0
 INTER_LINK_COST = 4.0
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, init=False)
 class LinkCosts:
-    """Intra-pod vs inter-pod per-edge communication cost."""
+    """Per-tree-level per-edge communication cost vector.
 
-    intra: float = INTRA_LINK_COST
-    inter: float = INTER_LINK_COST
+    ``costs[level]`` is the cost of one halo word between two PUs whose
+    LCA sits ``level`` tree edges above them (``Topology.level_of``):
+    ``costs[0]`` between siblings, ``costs[-1]`` across the root.  The
+    two-positional-argument form ``LinkCosts(intra, inter)`` builds the
+    ``h == 2`` instance of PR 4 (``intra``/``inter``/``lam`` keep their
+    two-level meaning as views of the vector).
+    """
 
-    def __post_init__(self):
-        if self.intra <= 0 or self.inter <= 0:
+    costs: tuple[float, ...]
+
+    def __init__(self, intra: float | None = None,
+                 inter: float | None = None, *,
+                 costs: Sequence[float] | None = None):
+        if costs is not None:
+            if intra is not None or inter is not None:
+                raise ValueError("pass either (intra, inter) or costs=, "
+                                 "not both")
+            costs = tuple(float(c) for c in costs)
+        else:
+            costs = (INTRA_LINK_COST if intra is None else float(intra),
+                     INTER_LINK_COST if inter is None else float(inter))
+        if not costs or any(c <= 0 for c in costs):
             raise ValueError("link costs must be positive")
+        object.__setattr__(self, "costs", costs)
+
+    @property
+    def levels(self) -> int:
+        return len(self.costs)
+
+    @property
+    def intra(self) -> float:
+        """Innermost (sibling) per-edge cost — the cost unit."""
+        return self.costs[0]
+
+    @property
+    def inter(self) -> float:
+        """Outermost (root-crossing) per-edge cost."""
+        return self.costs[-1]
 
     @property
     def lam(self) -> float:
         """lambda = inter/intra, the weight of the two-level objective."""
         return self.inter / self.intra
 
+    @property
+    def lams(self) -> tuple[float, ...]:
+        """Per-level objective weights, normalized so ``lams[0] == 1``:
+        the lambda vector of ``metrics.tree_objective``."""
+        return tuple(c / self.costs[0] for c in self.costs)
+
     def matrix(self, pod_of: np.ndarray) -> np.ndarray:
-        """(k, k) cost per block pair: 0 on the diagonal, ``intra`` for
-        same-pod pairs, ``inter`` for pod-crossing pairs."""
+        """(k, k) cost per block pair of the two-level instance: 0 on the
+        diagonal, ``intra`` for same-pod pairs, ``inter`` for
+        pod-crossing pairs."""
         pod_of = np.asarray(pod_of)
         same = pod_of[:, None] == pod_of[None, :]
         cost = np.where(same, self.intra, self.inter)
+        np.fill_diagonal(cost, 0.0)
+        return cost
+
+    def tree_matrix(self, anc: np.ndarray) -> np.ndarray:
+        """(k, k) cost per block pair under an (h-1, k) ancestor table:
+        0 on the diagonal, ``costs[level]`` elsewhere, level = tree
+        distance to the pair's LCA.  Needs ``levels >= h``."""
+        lev = level_matrix(anc)
+        if lev.max(initial=-1) >= self.levels:
+            raise ValueError(f"ancestor table implies depth "
+                             f"{lev.max() + 1} > {self.levels} cost levels")
+        cost = np.asarray(self.costs)[np.maximum(lev, 0)]
         np.fill_diagonal(cost, 0.0)
         return cost
 
@@ -251,6 +367,100 @@ def contiguous_pods(k: int, pods: int) -> np.ndarray:
     if pods <= 0 or k % pods:
         raise ValueError(f"pods={pods} must divide k={k}")
     return np.arange(k, dtype=np.int64) // (k // pods)
+
+
+def canonical_ancestors(fanouts: Sequence[int]) -> np.ndarray:
+    """Canonical (h-1, k) ancestor table of the ``fanouts`` implicit tree:
+    row ``t`` = ``leaf // prod(fanouts[t+1:])`` (contiguous nested
+    grouping).  Row 0 of a two-level tree is :func:`contiguous_pods`."""
+    fanouts = tuple(int(f) for f in fanouts)
+    if not fanouts or any(f <= 0 for f in fanouts):
+        raise ValueError(f"fanouts must be positive, got {fanouts}")
+    k = int(np.prod(fanouts))
+    leaves = np.arange(k, dtype=np.int64)
+    rows = []
+    size = k
+    for t in range(len(fanouts) - 1):
+        size //= fanouts[t]                    # subtree size at depth t+1
+        rows.append(leaves // size)
+    return (np.stack(rows) if rows
+            else np.zeros((0, k), dtype=np.int64))
+
+
+def level_matrix(anc: np.ndarray) -> np.ndarray:
+    """(k, k) tree-distance level per block pair from an (h-1, k)
+    ancestor table: 0 for pairs sharing every ancestor (siblings),
+    ``h - 1`` for pairs sharing only the root; -1 on the diagonal."""
+    anc = np.atleast_2d(np.asarray(anc, dtype=np.int64))
+    h = anc.shape[0] + 1
+    k = anc.shape[1]
+    eq_all = np.ones((k, k), dtype=bool)
+    shared = np.zeros((k, k), dtype=np.int64)
+    for row in anc:
+        eq_all &= row[:, None] == row[None, :]
+        shared += eq_all
+    lev = h - 1 - shared
+    np.fill_diagonal(lev, -1)
+    return lev
+
+
+def normalize_tree_of(tree, k: int,
+                      fanouts: Sequence[int] | None = None) -> np.ndarray:
+    """Ancestor-table analogue of :func:`normalize_pod_of`: returns a
+    validated (h-1, k) int64 table.
+
+    Accepted forms: ``None`` (canonical contiguous table from
+    ``fanouts``), a pod count or (k,) pod array (the two-level instance —
+    one row), or a full (h-1, k) table.  Validation: every row groups the
+    k blocks into equal-sized parts (the tree meshes are rectangular),
+    rows are *nested* (each depth-(t+1) group lies inside one depth-t
+    group), and — when ``fanouts`` is given — the group count of row t is
+    ``prod(fanouts[:t+1])``.
+    """
+    if tree is None:
+        if fanouts is None:
+            raise ValueError("need fanouts when no ancestor table given")
+        anc = canonical_ancestors(fanouts)
+        if anc.shape[1] != k:
+            raise ValueError(f"prod(fanouts)={anc.shape[1]} != k={k}")
+        return anc
+    arr = np.asarray(tree)
+    if arr.ndim <= 1:                          # pods count or (k,) pod array
+        anc = normalize_pod_of(tree, k)[None, :]
+    else:
+        anc = np.ascontiguousarray(arr, dtype=np.int64)
+    if anc.shape[1] != k:
+        raise ValueError(f"ancestor table has {anc.shape[1]} columns, "
+                         f"expected k={k}")
+    if fanouts is not None and anc.shape[0] != len(fanouts) - 1:
+        raise ValueError(f"ancestor table has {anc.shape[0]} rows, "
+                         f"fanouts {tuple(fanouts)} require "
+                         f"{len(fanouts) - 1}")
+    prev = np.zeros(k, dtype=np.int64)
+    groups = 1
+    for t, row in enumerate(anc):
+        if row.min(initial=0) < 0:
+            raise ValueError("ancestor ids must be >= 0")
+        counts = np.bincount(row, minlength=int(row.max(initial=0)) + 1)
+        if not (counts == counts[0]).all():
+            raise ValueError(
+                f"ancestor row {t} must group blocks equally for a "
+                f"rectangular mesh; got sizes {counts.tolist()}")
+        n_groups = len(counts)
+        if fanouts is not None:
+            groups *= int(fanouts[t])
+            if n_groups != groups:
+                raise ValueError(
+                    f"ancestor row {t} has {n_groups} groups, "
+                    f"fanouts {tuple(fanouts)} require {groups}")
+        # nested: a depth-(t+1) group never straddles depth-t groups
+        for gid in range(n_groups):
+            if len(np.unique(prev[row == gid])) > 1:
+                raise ValueError(
+                    f"ancestor row {t} group {gid} straddles row "
+                    f"{t - 1} groups — the table must be nested")
+        prev = row
+    return anc
 
 
 def scale_to_load(topo: Topology, n: float,

@@ -10,24 +10,60 @@ import jax
 import numpy as np
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+def tree_axis_names(h: int) -> tuple[str, ...]:
+    """Axis names for a depth-``h`` tree mesh, outermost first: the
+    two-level ``("pod", "pu")`` of PR 3, ``("pod", "host", "pu")`` at
+    depth 3 (the paper's chip < host < pod nesting), generic ``lv{i}``
+    prefixes beyond."""
+    if h == 1:
+        return ("pu",)
+    if h == 2:
+        return ("pod", "pu")
+    if h == 3:
+        return ("pod", "host", "pu")
+    return tuple(f"lv{i}" for i in range(h - 1)) + ("pu",)
+
+
+def make_production_mesh(*, multi_pod: bool = False, fanouts=None):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    ``fanouts=(k_1, ..., k_h)`` overrides the shape with an arbitrary-
+    depth tree mesh (one axis per tree level, outermost first) for the
+    ``comm='hier'`` tree plans; a 3-tuple keeps the multi-pod
+    ``("pod", "data", "model")`` axis names so existing specs map on."""
+    if fanouts is not None:
+        fanouts = tuple(int(f) for f in fanouts)
+        axes = (("pod", "data", "model") if len(fanouts) == 3
+                else tree_axis_names(len(fanouts)))
+        return jax.make_mesh(fanouts, axes)
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 
 
 def make_test_mesh(k: int = 8, axes: tuple[str, ...] = ("data",),
-                   pods: int | None = None):
+                   pods: int | None = None, fanouts=None):
     """Small mesh for subprocess tests (host platform devices).
 
     ``pods=p`` builds the two-level ``(p, k // p)`` mesh with axes
     ``("pod", "pu")`` — the test-scale analogue of
     ``make_production_mesh(multi_pod=True)``'s ``("pod", "data", "model")``
     — for the hierarchical SpMV/CG plans (``sparse.distributed.
-    build_plan_hier`` / backend ``dist_hier``).
+    build_plan_hier`` / backend ``dist_hier``).  ``fanouts=(k_1, ...,
+    k_h)`` builds the arbitrary-depth tree mesh (one axis per level,
+    outermost first — e.g. ``(2, 2, 2)`` is the depth-3
+    ``("pod", "host", "pu")`` mesh of ``build_plan_tree``).
     """
     devs = jax.devices()[:k]
+    if fanouts is not None:
+        if pods is not None or axes != ("data",):
+            raise ValueError("fanouts= fixes the axes to the tree levels; "
+                             f"drop pods={pods!r} / axes={axes!r}")
+        fanouts = tuple(int(f) for f in fanouts)
+        if int(np.prod(fanouts)) != k:
+            raise ValueError(f"prod(fanouts)={np.prod(fanouts)} != k={k}")
+        return jax.sharding.Mesh(np.array(devs).reshape(fanouts),
+                                 tree_axis_names(len(fanouts)))
     if pods is not None:
         if axes != ("data",):
             raise ValueError("pods= fixes the axes to ('pod', 'pu'); "

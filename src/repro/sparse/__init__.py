@@ -11,7 +11,8 @@ Public surface:
   * ``cg``         — the one CG solver all backends share.
 """
 from .cg import CGResult, cg_solve, jacobi_preconditioner
-from .distributed import (DistPlan, HierPlan, build_plan, build_plan_hier)
+from .distributed import (DistPlan, HierPlan, TreePlan, build_plan,
+                          build_plan_hier, build_plan_tree)
 from .operator import (BACKENDS, BlockEllOperator, CooOperator,
                        DistributedOperator, Operator, make_operator,
                        cg_solve_global)
@@ -19,4 +20,5 @@ from .operator import (BACKENDS, BlockEllOperator, CooOperator,
 __all__ = ["CGResult", "cg_solve", "jacobi_preconditioner", "BACKENDS",
            "Operator", "CooOperator", "BlockEllOperator",
            "DistributedOperator", "make_operator", "cg_solve_global",
-           "DistPlan", "HierPlan", "build_plan", "build_plan_hier"]
+           "DistPlan", "HierPlan", "TreePlan", "build_plan",
+           "build_plan_hier", "build_plan_tree"]

@@ -31,17 +31,21 @@ Four exchange strategies are provided:
   * ``allgather``  — all_gather of the whole padded vector, comm volume
                      = O(n); the baseline a partitioner-oblivious system
                      would use.
-  * ``hier``       — the two-level schedule for multi-pod meshes
-                     (:func:`build_plan_hier`): halo edges are split into
-                     *intra-pod* and *inter-pod* segments, each with its
-                     own Misra-Gries coloring over the corresponding
-                     quotient graph.  Three stages: the interior matvec is
-                     issued first; intra-pod rounds ppermute over the fast
-                     per-pod axis while inter-pod rounds ppermute over the
-                     combined (pod x pu) axes; the intra-pod boundary
-                     accumulation only needs the fast rounds, so it
-                     overlaps with the slow inter-pod exchange, and only
-                     the inter-pod boundary rows wait on the slow links.
+  * ``hier``       — the per-tree-level schedule for hierarchical meshes
+                     (:func:`build_plan_tree`; :func:`build_plan_hier` is
+                     the two-level instance): halo edges are split by the
+                     LCA level of their block pair, one segment per tree
+                     level, each with its own Misra-Gries coloring over
+                     that level's quotient graph.  The interior matvec is
+                     issued first; each level's rounds ppermute over its
+                     axis suffix (level 0 = the fast innermost axis,
+                     firing in every subtree at once; the outermost level
+                     = all axes combined), issued *outermost-level-first*
+                     so every slower exchange is in flight while all
+                     faster levels' rounds and accumulations run.  A
+                     boundary row's class is the highest level it reads,
+                     so only root-crossing rows wait on the slowest
+                     links.
 
 Orthogonally, ``local_format`` selects the interior matvec kernel:
 padded-COO scatter-add (``'coo'``) or the Pallas block-ELL kernel of
@@ -626,49 +630,154 @@ def build_plan_reference(indptr: np.ndarray, indices: np.ndarray,
 
 
 # --------------------------------------------------------------------------
-# hierarchical (two-level, multi-pod) plans
+# hierarchical (arbitrary-depth tree) plans
 # --------------------------------------------------------------------------
 
 @dataclasses.dataclass
-class HierPlan(DistPlan):
-    """Two-level plan for multi-pod meshes (:func:`build_plan_hier`).
+class TreePlan(DistPlan):
+    """Arbitrary-depth tree plan for hierarchical meshes
+    (:func:`build_plan_tree`; the two-level :func:`build_plan_hier` is
+    the ``h == 2`` instance).
 
-    Blocks are *pod-major*: device position = pod * k_local + local index,
-    matching a ``P((pod_axis, *intra_axes))`` sharding of the leading block
-    axis.  Halo edges are split into intra-pod segments (exchanged with
-    ppermute over the fast intra-pod axes — one shared schedule fires in
-    every pod at once, blocks without a given edge send masked zeros) and
-    inter-pod segments (ppermute over the combined pod x pu axes,
-    linearized device indices), each with its own Misra-Gries coloring.
+    Blocks are *tree-major*: device position = the leaf slot of the
+    ``fanouts`` mixed radix (outermost digit first), matching a
+    ``P((axis_1, ..., axis_h))`` sharding of the leading block axis.
+    Halo edges are split by the LCA level of their block pair (level 0 =
+    siblings, level h-1 = root-crossing), one segment per level, each
+    with its own Misra-Gries coloring over that level's quotient graph —
+    nodes are *suffix* indices (the last ``level + 1`` radix digits), so
+    one ppermute schedule over the level's axis suffix fires in every
+    subtree at once (blocks without a given edge send masked zeros);
+    the outermost level linearizes all axes, exactly PR 3's inter-pod
+    class.
 
-    The extended vector layout is ``[x_loc | intra slots | inter slots]``:
-    intra-boundary columns are < ``B + n_rounds_intra * S_intra``; only
-    inter-boundary rows read beyond that.  The base-class flat schedule
-    fields (``send_idx`` / ``send_mask`` / ``round_perms`` /
-    ``rows_bnd``...) are *not populated* — a HierPlan only runs under
-    ``comm='hier'`` (enforced by the matvec builder).
+    The extended vector layout is ``[x_loc | lvl-0 slots | ... |
+    lvl-(h-1) slots]``: a boundary row's class is the highest level it
+    reads, so each class's accumulation waits only on its own and faster
+    levels' exchanges.  The base-class flat schedule fields
+    (``send_idx`` / ``send_mask`` / ``round_perms`` / ``rows_bnd``...)
+    are *not populated* — a TreePlan only runs under ``comm='hier'``
+    (enforced by the matvec builder).  The two-level field names of the
+    PR 3-4 API (``S_intra`` / ``n_rounds_inter`` / ``send_idx_intra`` /
+    ``rows_bnd_inter`` / ``pods`` / ``k_local`` / ``pod_of``...) remain
+    available as read-only views of the level tuples.
     """
 
-    pods: int = 1
-    k_local: int = 1                    # blocks (= PUs) per pod
-    pod_of: np.ndarray = None           # (k,) pod of each pod-major block
+    fanouts: tuple = ()                 # (k_1, ..., k_h), prod == k
+    anc: np.ndarray = None              # (h-1, k) canonical table, tree-major
     block_map: np.ndarray = None        # (k,) original block id -> device pos
-    S_intra: int = 1
-    S_inter: int = 1
-    n_rounds_intra: int = 0
-    n_rounds_inter: int = 0
-    send_idx_intra: jnp.ndarray = None  # (k, R_a, S_a) int32
-    send_mask_intra: jnp.ndarray = None
-    send_idx_inter: jnp.ndarray = None  # (k, R_e, S_e) int32
-    send_mask_inter: jnp.ndarray = None
-    round_perms_intra: tuple = ()       # per round: (local_src, local_dst)
-    round_perms_inter: tuple = ()       # per round: linearized (src, dst)
-    rows_bnd_intra: jnp.ndarray = None  # rows reading intra slots only
-    cols_bnd_intra: jnp.ndarray = None  # < B + R_a*S_a
-    vals_bnd_intra: jnp.ndarray = None
-    rows_bnd_inter: jnp.ndarray = None  # rows reading >= 1 inter slot
-    cols_bnd_inter: jnp.ndarray = None  # < B + R_a*S_a + R_e*S_e
-    vals_bnd_inter: jnp.ndarray = None
+    S_lvl: tuple = ()                   # per-level halo slots per round
+    n_rounds_lvl: tuple = ()            # per-level colored round count
+    send_idx_lvl: tuple = ()            # per level: (k, R_l, S_l) int32
+    send_mask_lvl: tuple = ()           # per level: (k, R_l, S_l) f32
+    round_perms_lvl: tuple = ()         # per level, per round:
+    #                                     suffix-linearized (src, dst) pairs
+    rows_bnd_lvl: tuple = ()            # per level: rows whose highest
+    cols_bnd_lvl: tuple = ()            #   read is that level's slot range
+    vals_bnd_lvl: tuple = ()
+
+    # -- tree structure -----------------------------------------------------
+    @property
+    def h(self) -> int:
+        return len(self.fanouts)
+
+    def level_offsets(self) -> np.ndarray:
+        """(h+1,) slot-range boundaries of the extended vector: level l
+        slots live in ``[offs[l], offs[l+1])``; ``offs[0] == B``."""
+        sizes = [r * s for r, s in zip(self.n_rounds_lvl, self.S_lvl)]
+        return self.B + np.concatenate([[0], np.cumsum(sizes)]).astype(int)
+
+    # -- two-level views (the PR 3-4 HierPlan API) --------------------------
+    @property
+    def pods(self) -> int:
+        return self.fanouts[0] if self.h >= 2 else 1
+
+    @property
+    def k_local(self) -> int:
+        return self.k // self.pods
+
+    @property
+    def pod_of(self) -> np.ndarray:
+        """(k,) top-level group of each tree-major block."""
+        return np.arange(self.k, dtype=np.int64) // self.k_local
+
+    def _two_level(self, name: str, idx: int):
+        if self.h > 2:
+            raise AttributeError(
+                f"{name} is the two-level view; this plan is depth "
+                f"{self.h} — use the *_lvl tuples")
+        return idx
+
+    @property
+    def S_intra(self) -> int:
+        return self.S_lvl[self._two_level("S_intra", 0)]
+
+    @property
+    def S_inter(self) -> int:
+        self._two_level("S_inter", 1)
+        return self.S_lvl[1] if self.h >= 2 else 1
+
+    @property
+    def n_rounds_intra(self) -> int:
+        return self.n_rounds_lvl[self._two_level("n_rounds_intra", 0)]
+
+    @property
+    def n_rounds_inter(self) -> int:
+        self._two_level("n_rounds_inter", 1)
+        return self.n_rounds_lvl[1] if self.h >= 2 else 0
+
+    @property
+    def send_idx_intra(self):
+        return self.send_idx_lvl[self._two_level("send_idx_intra", 0)]
+
+    @property
+    def send_mask_intra(self):
+        return self.send_mask_lvl[self._two_level("send_mask_intra", 0)]
+
+    @property
+    def send_idx_inter(self):
+        return self.send_idx_lvl[self._two_level("send_idx_inter", 1)]
+
+    @property
+    def send_mask_inter(self):
+        return self.send_mask_lvl[self._two_level("send_mask_inter", 1)]
+
+    @property
+    def round_perms_intra(self) -> tuple:
+        return self.round_perms_lvl[self._two_level("round_perms_intra", 0)]
+
+    @property
+    def round_perms_inter(self) -> tuple:
+        return self.round_perms_lvl[self._two_level("round_perms_inter", 1)]
+
+    @property
+    def rows_bnd_intra(self):
+        return self.rows_bnd_lvl[self._two_level("rows_bnd_intra", 0)]
+
+    @property
+    def cols_bnd_intra(self):
+        return self.cols_bnd_lvl[self._two_level("cols_bnd_intra", 0)]
+
+    @property
+    def vals_bnd_intra(self):
+        return self.vals_bnd_lvl[self._two_level("vals_bnd_intra", 0)]
+
+    @property
+    def rows_bnd_inter(self):
+        return self.rows_bnd_lvl[self._two_level("rows_bnd_inter", 1)]
+
+    @property
+    def cols_bnd_inter(self):
+        return self.cols_bnd_lvl[self._two_level("cols_bnd_inter", 1)]
+
+    @property
+    def vals_bnd_inter(self):
+        return self.vals_bnd_lvl[self._two_level("vals_bnd_inter", 1)]
+
+
+# The two-level plan is the h == 2 TreePlan; the name is kept as the
+# PR 3-4 API (isinstance checks and imports continue to work).
+HierPlan = TreePlan
 
 
 def _class_schedule(t_pair: np.ndarray, t_v: np.ndarray, k: int,
@@ -733,44 +842,38 @@ def _class_schedule(t_pair: np.ndarray, t_v: np.ndarray, k: int,
             tuple(tuple(r) for r in round_pairs), slot)
 
 
-def _derive_hier_fields(rows_a: np.ndarray, cols_a: np.ndarray,
+def _derive_tree_fields(rows_a: np.ndarray, cols_a: np.ndarray,
                         vals_a: np.ndarray, per_blk: np.ndarray,
-                        B: int, intra_hi: int) -> dict:
-    """Three-way interior / intra-boundary / inter-boundary split.
+                        B: int, offs: np.ndarray) -> dict:
+    """(h+1)-way interior / per-level boundary split.
 
-    A row is *inter-boundary* iff any of its edges reads an inter-pod slot
-    (col >= ``intra_hi``), *intra-boundary* iff it reads intra slots but no
-    inter slots, *interior* otherwise.  Every edge of a row goes to the
-    row's segment, so the three segments exactly tile the true nnz set and
-    the PR 2 boundary set = intra + inter.  The interior criterion (no
-    halo reads at all) is identical to the flat plan's, so the interior
-    segment is bit-equal to :func:`build_plan`'s on the same partition.
+    A row's class is the *highest* slot level any of its edges reads
+    (``offs`` are the level-range boundaries, ``offs[0] == B``; reads
+    below B are local).  Every edge of a row goes to the row's segment,
+    so the h+1 segments exactly tile the true nnz set and the PR 2
+    boundary set is the union of the level segments.  The interior
+    criterion (no halo reads at all) is identical to the flat plan's, so
+    the interior segment is bit-equal to :func:`build_plan`'s on the
+    same partition; at ``h == 2`` the level segments are exactly PR 3's
+    intra-/inter-pod split.
     """
     k, nnz_pad = rows_a.shape
+    h = len(offs) - 1
     per_blk = np.asarray(per_blk, dtype=np.int64)
     valid = np.arange(nnz_pad)[None, :] < per_blk[:, None]
-    inter_edge = valid & (cols_a >= intra_hi)
-    halo_edge = valid & (cols_a >= B)
-
-    def rows_hit(sel):
-        hit = np.zeros((k, B), dtype=bool)
-        bi, ei = np.nonzero(sel)
-        hit[bi, rows_a[bi, ei]] = True
-        return hit
-
-    inter_row = rows_hit(inter_edge)
-    bnd_row = rows_hit(halo_edge)
-    intra_row = bnd_row & ~inter_row
+    # per-edge slot level: -1 local, l for cols in [offs[l], offs[l+1])
+    edge_lvl = np.searchsorted(np.asarray(offs), cols_a, side="right") - 1
+    edge_lvl = np.where(valid, edge_lvl, -1)
+    # per-row highest level read
+    row_lvl = np.full((k, B), -1, dtype=np.int64)
+    bi, ei = np.nonzero(valid)
+    np.maximum.at(row_lvl, (bi, rows_a[bi, ei]), edge_lvl[bi, ei])
 
     blk_col = np.arange(k)[:, None]
-    edge_inter = valid & inter_row[blk_col, rows_a]
-    edge_intra = valid & intra_row[blk_col, rows_a]
-    edge_int = valid & ~(edge_inter | edge_intra)
-
+    row_lvl_of_edge = row_lvl[blk_col, rows_a]
     pack = functools.partial(_pack_segment, rows_a, cols_a, vals_a)
-    rows_int, cols_int, vals_int = pack(edge_int)
-    rows_ia, cols_ia, vals_ia = pack(edge_intra)
-    rows_ie, cols_ie, vals_ie = pack(edge_inter)
+    rows_int, cols_int, vals_int = pack(valid & (row_lvl_of_edge == -1))
+    lvl_seg = [pack(valid & (row_lvl_of_edge == l)) for l in range(h)]
 
     diag = np.zeros((k, B), dtype=np.float32)
     on_diag = valid & (rows_a == cols_a)
@@ -779,62 +882,76 @@ def _derive_hier_fields(rows_a: np.ndarray, cols_a: np.ndarray,
     return dict(
         rows_int=jnp.asarray(rows_int), cols_int=jnp.asarray(cols_int),
         vals_int=jnp.asarray(vals_int),
-        rows_bnd_intra=jnp.asarray(rows_ia),
-        cols_bnd_intra=jnp.asarray(cols_ia),
-        vals_bnd_intra=jnp.asarray(vals_ia),
-        rows_bnd_inter=jnp.asarray(rows_ie),
-        cols_bnd_inter=jnp.asarray(cols_ie),
-        vals_bnd_inter=jnp.asarray(vals_ie),
+        rows_bnd_lvl=tuple(jnp.asarray(r) for r, _, _ in lvl_seg),
+        cols_bnd_lvl=tuple(jnp.asarray(c) for _, c, _ in lvl_seg),
+        vals_bnd_lvl=tuple(jnp.asarray(v) for _, _, v in lvl_seg),
         diag=jnp.asarray(diag), nnz_blk=per_blk.copy(),
-        _bnd_row=bnd_row,
+        _bnd_row=row_lvl >= 0,
     )
 
 
-def build_plan_hier(indptr: np.ndarray, indices: np.ndarray,
+def build_plan_tree(indptr: np.ndarray, indices: np.ndarray,
                     data: np.ndarray, part: np.ndarray,
-                    pods, k: int) -> HierPlan:
-    """Build the two-level distributed plan for a multi-pod mesh.
+                    tree, k: int, fanouts=None) -> TreePlan:
+    """Build the arbitrary-depth distributed plan for a tree mesh.
 
-    ``pods`` is either the pod count (blocks are grouped contiguously —
-    block b goes to pod ``b // (k // pods)``, matching
-    ``core.topology.Topology.pod_assignment``: Algorithm-1 orders fast PUs
-    first, so the fast PUs that share the heaviest cut land in one pod) or
-    an explicit (k,) pod id per block — e.g. the partition-derived
-    assignment of ``core.api.partition_hier`` / ``pod_assignment_for``
-    (generally non-contiguous after the pod-level sweep).  Pods must be
-    equal-sized (the mesh is rectangular).  Blocks are relabeled
-    pod-major; ``block_map`` maps the caller's block ids to device
-    positions (scatter/gather are unaffected — they go through ``perm``).
+    ``tree`` is anything ``core.topology.normalize_tree_of`` accepts: a
+    pod count or (k,) pod array (the two-level instance), an explicit
+    (h-1, k) ancestor table — e.g. the partition-derived table of
+    ``core.api.partition_tree`` / ``tree_assignment_for`` (generally
+    non-contiguous after the per-level sweeps) — or ``None`` with
+    ``fanouts`` for the canonical contiguous grouping.  Every level must
+    group blocks equally (the tree meshes are rectangular).  Blocks are
+    relabeled tree-major (lexicographic by ancestor path); ``block_map``
+    maps the caller's block ids to device positions (scatter/gather are
+    unaffected — they go through ``perm``).
 
-    Intra-pod and inter-pod halo edges get separate Misra-Gries colorings:
-    intra over the union of the pods' *local-index* quotient graphs (one
-    ppermute schedule over the fast axes fires in all pods at once), inter
-    over the global block quotient graph (ppermute over the combined
-    linearized axes).  Vectorized NumPy throughout; the only Python loops
-    are over quotient edges and chunks, as in :func:`build_plan`.
+    Each tree level gets its own Misra-Gries coloring of its quotient
+    graph over *suffix* indices (the last ``level + 1`` mixed-radix
+    digits), so one ppermute schedule over the level's axis suffix fires
+    in every subtree at once; the outermost level linearizes the full
+    axis tuple.  Vectorized NumPy throughout; the only Python loops are
+    over tree levels, quotient edges and chunks, as in
+    :func:`build_plan`.
     """
-    from ..core.topology import normalize_pod_of
+    from ..core.topology import normalize_tree_of
 
     n = len(indptr) - 1
     part = np.ascontiguousarray(part, dtype=np.int32)
     # one validation definition shared with the partitioner side
-    # (core.api.partition_hier produces what this consumes)
-    pod_of_block = normalize_pod_of(pods, k)
-    n_pods = int(pod_of_block.max()) + 1
-    k_local = k // n_pods
-    # pod-major relabeling: device position = pod * k_local + rank in pod
-    order_blocks = np.argsort(pod_of_block, kind="stable")
+    # (core.api.partition_tree produces what this consumes)
+    anc_in = normalize_tree_of(tree, k, fanouts)
+    h = anc_in.shape[0] + 1
+    # tree-major relabeling: device position = leaf slot of the mixed
+    # radix — stable lexicographic by ancestor path (top row primary),
+    # the depth-h generalization of build_plan_hier's pod-major argsort
+    order_blocks = (np.lexsort(tuple(anc_in[::-1])) if h > 1
+                    else np.arange(k, dtype=np.int64))
     block_map = np.empty(k, dtype=np.int64)
     block_map[order_blocks] = np.arange(k)
     part = block_map[part].astype(np.int32)
-    pod_of = np.arange(k, dtype=np.int64) // k_local
-    loc_of = np.arange(k, dtype=np.int64) % k_local
+    # canonical table / fanouts of the relabeled (device-position) blocks
+    counts = [int(anc_in[t].max()) + 1 for t in range(h - 1)] + [k]
+    fanouts_out, prev = [], 1
+    for c in counts:
+        fanouts_out.append(c // prev)
+        prev = c
+    fanouts_out = tuple(fanouts_out)
+    # suffix size of level l = prod(fanouts[h-1-l:]): the range its
+    # quotient nodes (and ppermute indices) live in
+    suffix = [1] * (h + 1)
+    for t in range(h - 1, -1, -1):
+        suffix[h - 1 - t + 1] = suffix[h - 1 - t] * fanouts_out[t]
+    dev = np.arange(k, dtype=np.int64)
+    anc_dev = np.stack([dev // suffix[h - 1 - t]
+                        for t in range(h - 1)]) if h > 1 else \
+        np.zeros((0, k), dtype=np.int64)
 
     dense = k * n <= DENSE_PLAN_LIMIT
     sizes, B, order, rank_in_block, perm, block_of = _block_layout(
         part, k, dense=dense)
 
-    # ---- halo triples, split by pod locality ----------------------------
+    # ---- halo triples, split by LCA level -------------------------------
     # same dense/vertex-sharded bitmap extraction as build_plan (one
     # definition, DENSE_PLAN_LIMIT respected), then triples ordered by
     # (directed pair, vertex) via the stable radix pass
@@ -850,20 +967,30 @@ def build_plan_hier(indptr: np.ndarray, indices: np.ndarray,
     t_pair_all = t_pair_pre[o2]
     t_v_all = t_v_pre[o2]
     flat_post = flat[o2]
-    is_intra = pod_of[t_pair_all // k] == pod_of[t_pair_all % k]
+    # LCA level per triple: highest level whose suffix indices differ
+    t_recv, t_own = t_pair_all // k, t_pair_all % k
+    t_lvl = np.zeros(len(t_pair_all), dtype=np.int64)
+    for l in range(h):
+        differ = (t_recv // suffix[l]) != (t_own // suffix[l])
+        t_lvl = np.where(differ, l, t_lvl)
 
-    S_a, R_a, send_idx_a, send_mask_a, perms_a, slot_a = _class_schedule(
-        t_pair_all[is_intra], t_v_all[is_intra], k, loc_of, k_local,
-        rank_in_block)
-    S_e, R_e, send_idx_e, send_mask_e, perms_e, slot_e = _class_schedule(
-        t_pair_all[~is_intra], t_v_all[~is_intra], k,
-        np.arange(k, dtype=np.int64), k, rank_in_block)
-    intra_hi = B + R_a * S_a
-
-    # absolute halo slot per triple: intra first, then the inter range
+    S_lvl, R_lvl, si_lvl, sm_lvl, perms_lvl = [], [], [], [], []
     slot_of_trip = np.empty(len(t_pair_all), dtype=np.int32)
-    slot_of_trip[is_intra] = B + slot_a
-    slot_of_trip[~is_intra] = intra_hi + slot_e
+    off = B
+    for l in range(h):
+        sel = t_lvl == l
+        sz = suffix[l + 1]
+        S_l, R_l, si, sm, perms, slot = _class_schedule(
+            t_pair_all[sel], t_v_all[sel], k, dev % sz, sz, rank_in_block)
+        slot_of_trip[sel] = off + slot
+        off += R_l * S_l
+        S_lvl.append(S_l)
+        R_lvl.append(R_l)
+        si_lvl.append(si)
+        sm_lvl.append(sm)
+        perms_lvl.append(perms)
+    offs = B + np.concatenate(
+        [[0], np.cumsum([r * s for r, s in zip(R_lvl, S_lvl)])]).astype(int)
 
     # ---- local matrix in padded-COO (same packing as build_plan) --------
     rows_l = rank_in_block[src]
@@ -877,27 +1004,48 @@ def build_plan_hier(indptr: np.ndarray, indices: np.ndarray,
 
     row_mask = (np.arange(B)[None, :] < sizes[:, None]).astype(np.float32)
 
-    split = _derive_hier_fields(rows_a, cols_a, vals_a, per_blk, B, intra_hi)
+    split = _derive_tree_fields(rows_a, cols_a, vals_a, per_blk, B, offs)
     bnd_row = split.pop("_bnd_row")
     interior_mask = row_mask * ~bnd_row
 
-    return HierPlan(
-        k=k, B=B, S=max(S_a, S_e), n_rounds=R_a + R_e, n=n, perm=perm,
+    return TreePlan(
+        k=k, B=B, S=max(S_lvl), n_rounds=sum(R_lvl), n=n, perm=perm,
         block_of=block_of, sizes=sizes,
         rows=jnp.asarray(rows_a), cols=jnp.asarray(cols_a),
         vals=jnp.asarray(vals_a), row_mask=jnp.asarray(row_mask),
         send_idx=None, send_mask=None, round_perms=(),
         interior_mask=jnp.asarray(interior_mask), **split,
-        pods=n_pods, k_local=k_local, pod_of=pod_of, block_map=block_map,
-        S_intra=S_a, S_inter=S_e,
-        n_rounds_intra=R_a, n_rounds_inter=R_e,
-        send_idx_intra=jnp.asarray(send_idx_a),
-        send_mask_intra=jnp.asarray(send_mask_a),
-        send_idx_inter=jnp.asarray(send_idx_e),
-        send_mask_inter=jnp.asarray(send_mask_e),
-        round_perms_intra=perms_a, round_perms_inter=perms_e,
+        fanouts=fanouts_out, anc=anc_dev, block_map=block_map,
+        S_lvl=tuple(S_lvl), n_rounds_lvl=tuple(R_lvl),
+        send_idx_lvl=tuple(jnp.asarray(a) for a in si_lvl),
+        send_mask_lvl=tuple(jnp.asarray(a) for a in sm_lvl),
+        round_perms_lvl=tuple(perms_lvl),
         _pack_blk=own, _pack_pos=pos_edge, _pack_dst=dst,
     )
+
+
+def build_plan_hier(indptr: np.ndarray, indices: np.ndarray,
+                    data: np.ndarray, part: np.ndarray,
+                    pods, k: int) -> TreePlan:
+    """Build the two-level distributed plan for a multi-pod mesh — the
+    ``h == 2`` instance of :func:`build_plan_tree` (kept as the PR 3-4
+    API).
+
+    ``pods`` is either the pod count (blocks are grouped contiguously —
+    block b goes to pod ``b // (k // pods)``, matching
+    ``core.topology.Topology.pod_assignment``: Algorithm-1 orders fast PUs
+    first, so the fast PUs that share the heaviest cut land in one pod) or
+    an explicit (k,) pod id per block — e.g. the partition-derived
+    assignment of ``core.api.partition_hier`` / ``pod_assignment_for``
+    (generally non-contiguous after the pod-level sweep).  Pods must be
+    equal-sized (the mesh is rectangular).
+    """
+    from ..core.topology import normalize_pod_of
+
+    # one validation definition shared with the partitioner side
+    pod_of_block = normalize_pod_of(pods, k)
+    return build_plan_tree(indptr, indices, data, part,
+                           pod_of_block[None, :], k)
 
 
 # --------------------------------------------------------------------------
@@ -943,6 +1091,33 @@ COMM_MODES = ("halo", "halo_seq", "allgather", "hier")
 LOCAL_FORMATS = ("coo", "bell")
 
 
+def _validate_tree_axes(plan: "TreePlan", mesh: Mesh, axis) -> None:
+    """Check that the mesh's trailing axes actually hold the plan's tree:
+    level ``l`` ppermutes over ``axes[h-1-l:]`` with suffix-linearized
+    indices, so the *product of those axis sizes* must equal the plan's
+    level-``l`` suffix size ``prod(fanouts[h-1-l:])`` — an axis tuple
+    that merely has enough entries but the wrong shape would deliver
+    halo words to the wrong devices silently."""
+    axes = tuple(axis)
+    sizes = dict(mesh.shape)
+    missing = [a for a in axes if a not in sizes]
+    if missing:
+        raise ValueError(f"axis names {missing} not in mesh axes "
+                         f"{tuple(mesh.axis_names)}")
+    h = plan.h
+    suffix = 1
+    for l in range(h):
+        suffix *= plan.fanouts[h - 1 - l]
+        mesh_suffix = int(np.prod([sizes[a] for a in axes[h - 1 - l:]]))
+        if mesh_suffix != suffix:
+            raise ValueError(
+                f"mesh axes {axes[h - 1 - l:]} have {mesh_suffix} devices "
+                f"but tree level {l} of the {plan.fanouts} plan spans "
+                f"{suffix} — the mesh shape must match the plan's "
+                f"fanouts suffix per level (extra leading axes fold into "
+                f"the outermost level only)")
+
+
 def _local_matvec_builder(plan: DistPlan, comm: str, axis: str,
                           local_format: str = "coo"):
     """Shared per-device matvec for every comm/format combination.
@@ -980,37 +1155,48 @@ def _local_matvec_builder(plan: DistPlan, comm: str, axis: str,
         raise ValueError("local_format='bell' requires comm='halo' or "
                          "'hier' (the interior/boundary split the kernel "
                          "is built from)")
-    if isinstance(plan, HierPlan) != (comm == "hier"):
+    if isinstance(plan, TreePlan) != (comm == "hier"):
         raise ValueError(
-            "comm='hier' requires a HierPlan (build_plan_hier) and a "
-            "HierPlan only runs under comm='hier' — its halo layout has "
-            "separate intra-/inter-pod slot ranges that the flat "
-            f"schedules cannot address (got comm={comm!r}, "
+            "comm='hier' requires a TreePlan (build_plan_tree / "
+            "build_plan_hier) and a TreePlan only runs under comm='hier' "
+            "— its halo layout has separate per-level slot ranges that "
+            f"the flat schedules cannot address (got comm={comm!r}, "
             f"plan={type(plan).__name__})")
     B = plan.B
 
     if comm == "hier":
-        if isinstance(axis, str) or len(tuple(axis)) < 2:
-            raise ValueError("comm='hier' needs axis=(pod_axis, "
-                             f"*intra_axes) with >= 2 mesh axes; got "
-                             f"{axis!r}")
+        h = plan.h
+        if isinstance(axis, str) or len(tuple(axis)) < max(h, 2):
+            raise ValueError(f"comm='hier' on a depth-{h} plan needs "
+                             f"axis=(outer_axis, ..., inner_axis) with "
+                             f">= {max(h, 2)} mesh axes; got {axis!r}")
         axes = tuple(axis)
-        intra_axes = axes[1] if len(axes) == 2 else axes[1:]
+
+        def level_axes(l: int):
+            # level l ppermutes over the axis suffix holding its
+            # mixed-radix digits; extra leading mesh axes fold into the
+            # outermost level (axes[0:] for l == h-1)
+            sub = axes[h - 1 - l:]
+            return sub[0] if len(sub) == 1 else sub
+
         if local_format == "bell":
             head = plan.bell_local()
         else:
             head = (plan.rows_int, plan.cols_int, plan.vals_int)
-        consts = head + (
-            plan.rows_bnd_intra, plan.cols_bnd_intra, plan.vals_bnd_intra,
-            plan.rows_bnd_inter, plan.cols_bnd_inter, plan.vals_bnd_inter,
-            plan.send_idx_intra, plan.send_mask_intra,
-            plan.send_idx_inter, plan.send_mask_inter, plan.row_mask)
+        consts = head
+        for l in range(h):
+            consts = consts + (plan.rows_bnd_lvl[l], plan.cols_bnd_lvl[l],
+                               plan.vals_bnd_lvl[l])
+        for l in range(h):
+            consts = consts + (plan.send_idx_lvl[l], plan.send_mask_lvl[l])
+        consts = consts + (plan.row_mask,)
 
         n_head = len(head)
 
         def fn(c, x):
-            (ra, ca, va, re, ce, ve,
-             sia, mia, sie, mie, row_mask) = c[n_head:]
+            bnd = c[n_head:n_head + 3 * h]
+            sends = c[n_head + 3 * h:n_head + 5 * h]
+            row_mask = c[-1]
             # stage 1: interior matvec — no halo dependence at all
             if local_format == "bell":
                 from ..kernels.spmv_bell import spmv_block_ell
@@ -1018,19 +1204,24 @@ def _local_matvec_builder(plan: DistPlan, comm: str, axis: str,
             else:
                 ri, ci, vi = c[:3]
                 y = jnp.zeros(B, jnp.float32).at[ri].add(vi * x[ci])
-            # stage 2: fast intra-pod rounds; stage 3 (inter-pod, slow
-            # links) is *issued* before the intra-boundary accumulation,
-            # so XLA overlaps that accumulation with the slow exchange
-            intra = _hier_exchange(plan, x, sia, mia, intra_axes,
-                                   plan.round_perms_intra,
-                                   plan.n_rounds_intra)
-            inter = _hier_exchange(plan, x, sie, mie, axes,
-                                   plan.round_perms_inter,
-                                   plan.n_rounds_inter)
-            x_intra = jnp.concatenate([x] + intra) if intra else x
-            y = y.at[ra].add(va * x_intra[ca])
-            x_full = jnp.concatenate([x_intra] + inter) if inter else x_intra
-            y = y.at[re].add(ve * x_full[ce])
+            # stage 2: issue every level's rounds, *outermost first* —
+            # each slower exchange is in flight while all faster levels'
+            # rounds and accumulations (and the interior matvec) run
+            bufs: list = [None] * h
+            for l in range(h - 1, -1, -1):
+                bufs[l] = _hier_exchange(plan, x, sends[2 * l],
+                                         sends[2 * l + 1], level_axes(l),
+                                         plan.round_perms_lvl[l],
+                                         plan.n_rounds_lvl[l])
+            # stage 3: accumulate innermost first — a level's rows read
+            # only its own and faster levels' slots, so each
+            # accumulation waits on nothing slower than itself
+            x_ext = x
+            for l in range(h):
+                if bufs[l]:
+                    x_ext = jnp.concatenate([x_ext] + bufs[l])
+                rl, cl, vl = bnd[3 * l:3 * l + 3]
+                y = y.at[rl].add(vl * x_ext[cl])
             return y * row_mask
 
         return consts, fn
@@ -1096,11 +1287,14 @@ def make_dist_spmv(plan: DistPlan, mesh: Mesh, axis: str = "pu",
     edge-colored ppermute rounds; ``comm='halo_seq'`` is the sequential
     reference schedule; ``comm='allgather'`` gathers the whole padded
     vector (the partitioner-oblivious baseline); ``comm='hier'`` is the
-    three-stage multi-pod schedule (needs a :class:`HierPlan` and
-    ``axis=(pod_axis, *intra_axes)``).  ``local_format='bell'`` runs the
-    interior matvec through the Pallas block-ELL kernel.
+    per-tree-level schedule (needs a :class:`TreePlan` and
+    ``axis=(outer_axis, ..., inner_axis)`` whose trailing-axis products
+    match the plan's fanouts suffixes).  ``local_format='bell'`` runs
+    the interior matvec through the Pallas block-ELL kernel.
     """
     consts, local_fn = _local_matvec_builder(plan, comm, axis, local_format)
+    if comm == "hier":
+        _validate_tree_axes(plan, mesh, axis)
 
     def prog(*args):
         *cs, x = args
@@ -1142,6 +1336,8 @@ def make_dist_cg(plan: DistPlan, mesh: Mesh, axis: str = "pu",
     if precondition not in (None, "jacobi", "block_jacobi"):
         raise ValueError(f"unknown precondition {precondition!r}")
     consts, local_fn = _local_matvec_builder(plan, comm, axis, local_format)
+    if comm == "hier":
+        _validate_tree_axes(plan, mesh, axis)
     prec_tail = ()
     if precondition == "jacobi":
         prec_tail = (plan.diag,)

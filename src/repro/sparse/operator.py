@@ -20,15 +20,20 @@ interface so that one ``cg_solve`` and one benchmark harness drive
                          matvec in the Pallas block-ELL kernel (ROADMAP's
                          third comm/format combination);
   * ``dist_allgather`` — shard_map, all_gather baseline;
-  * ``dist_hier``      — the two-level multi-pod schedule
-                         (``build_plan_hier``): interior matvec, then
-                         intra-pod ppermute rounds over the fast per-pod
-                         axes, then inter-pod rounds over the combined
-                         axes — intra-pod boundary accumulation overlaps
-                         the slow inter-pod exchange.  Needs ``pods=`` and
-                         a multi-axis mesh (``launch.mesh.make_test_mesh
-                         (k, pods=...)`` or
-                         ``make_production_mesh(multi_pod=True)``).
+  * ``dist_hier``      — the per-tree-level hierarchical schedule
+                         (``build_plan_tree``; two-level multi-pod is the
+                         ``h == 2`` instance): interior matvec, then one
+                         ppermute round class per tree level over that
+                         level's axis suffix, issued outermost-first so
+                         every slower exchange overlaps all faster-level
+                         work.  Needs ``pods=`` / ``fanouts=`` / ``tree=``
+                         and a hierarchical mesh
+                         (``launch.mesh.make_test_mesh(k, pods=...)`` /
+                         ``make_test_mesh(k, fanouts=...)`` or
+                         ``make_production_mesh(multi_pod=True)``);
+  * ``dist_hier_bell`` — the same tree schedule with the interior matvec
+                         in the Pallas block-ELL kernel (the hier
+                         counterpart of ``dist_bell``).
 
 Protocol
 --------
@@ -61,7 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .cg import CGResult, cg_solve
-from .distributed import (DistPlan, build_plan, build_plan_hier,
+from .distributed import (DistPlan, build_plan, build_plan_tree,
                           make_dist_cg, make_dist_spmv)
 from .spmv import csr_diagonal, csr_to_padded_coo, spmv_coo
 
@@ -203,23 +208,34 @@ class DistributedOperator:
     @classmethod
     def from_csr(cls, indptr, indices, data, part, k, mesh,
                  axis: str | tuple = "pu", comm: str = "halo",
-                 local_format: str = "coo", pods=None):
-        """``comm='hier'`` builds the two-level plan (``pods`` = pod count
-        or explicit (k,) pod-of-block array) and defaults ``axis`` to the
-        mesh's full axis tuple ``(pod_axis, *intra_axes)`` — e.g.
-        ``('pod', 'pu')`` on ``make_test_mesh(k, pods=...)`` and
-        ``('pod', 'data', 'model')`` on
+                 local_format: str = "coo", pods=None, fanouts=None,
+                 tree=None):
+        """``comm='hier'`` builds the hierarchical plan — ``pods`` (pod
+        count or explicit (k,) pod-of-block array) for the two-level
+        instance, ``fanouts``/``tree`` ((k_1, ..., k_h) tuple / explicit
+        (h-1, k) ancestor table) for arbitrary depth — and defaults
+        ``axis`` to the mesh's full axis tuple, outermost level first —
+        e.g. ``('pod', 'pu')`` on ``make_test_mesh(k, pods=...)``,
+        ``('pod', 'host', 'pu')`` on ``make_test_mesh(k,
+        fanouts=(2, 2, 2))`` and ``('pod', 'data', 'model')`` on
         ``make_production_mesh(multi_pod=True)``."""
         if comm == "hier":
-            if pods is None:
-                raise ValueError("comm='hier' needs pods= (pod count or "
-                                 "(k,) pod-of-block array)")
-            plan = build_plan_hier(indptr, indices, data, part, pods, k)
+            if pods is None and fanouts is None and tree is None:
+                raise ValueError(
+                    "comm='hier' needs pods= (pod count or (k,) "
+                    "pod-of-block array), fanouts= ((k_1, ..., k_h) "
+                    "tree shape) or tree= ((h-1, k) ancestor table)")
+            if pods is not None and tree is not None:
+                raise ValueError("pass either pods= or tree=, not both")
+            plan = build_plan_tree(indptr, indices, data, part,
+                                   pods if pods is not None else tree,
+                                   k, fanouts=fanouts)
             if axis == "pu":                    # default -> full mesh tuple
                 axis = tuple(mesh.axis_names)
         else:
-            if pods is not None:
-                raise ValueError("pods= only applies to comm='hier'")
+            if pods is not None or fanouts is not None or tree is not None:
+                raise ValueError("pods=/fanouts=/tree= only apply to "
+                                 "comm='hier'")
             plan = build_plan(indptr, indices, data, part, k)
         return cls(plan=plan, mesh=mesh, axis=axis, comm=comm,
                    local_format=local_format)
@@ -275,7 +291,7 @@ class DistributedOperator:
 # --------------------------------------------------------------------------
 
 BACKENDS = ("coo", "bell", "dist_halo", "dist_halo_seq", "dist_bell",
-            "dist_allgather", "dist_hier")
+            "dist_allgather", "dist_hier", "dist_hier_bell")
 
 _DIST_MODES = {
     "dist_halo": ("halo", "coo"),
@@ -283,7 +299,10 @@ _DIST_MODES = {
     "dist_bell": ("halo", "bell"),
     "dist_allgather": ("allgather", "coo"),
     "dist_hier": ("hier", "coo"),
+    "dist_hier_bell": ("hier", "bell"),
 }
+
+_HIER_BACKENDS = ("dist_hier", "dist_hier_bell")
 
 
 def make_operator(indptr, indices, data, backend: str = "coo", *,
@@ -291,24 +310,28 @@ def make_operator(indptr, indices, data, backend: str = "coo", *,
                   axis: str | tuple = "pu", **kw) -> Operator:
     """One factory for every SpMV backend (see BACKENDS).
 
-    ``dist_hier`` additionally needs ``pods=`` (pod count or explicit (k,)
-    pod-of-block array, e.g. ``core.topology.Topology.pod_assignment``)
-    and a multi-pod mesh; ``axis`` defaults to the mesh's full
-    ``(pod_axis, *intra_axes)`` tuple.
+    ``dist_hier`` / ``dist_hier_bell`` additionally need ``pods=`` (pod
+    count or explicit (k,) pod-of-block array, e.g.
+    ``core.topology.Topology.pod_assignment``), ``fanouts=`` or
+    ``tree=`` (the arbitrary-depth forms) and a hierarchical mesh;
+    ``axis`` defaults to the mesh's full axis tuple, outermost level
+    first.
 
-    ``part`` may also be a ``core.api.HierPartition`` (the pod-aware
+    ``part`` may also be a ``core.api.HierPartition`` (the tree-aware
     pipeline's output, duck-typed on ``.part``/``.pod_of``): the block
-    partition, ``k``, and — for ``dist_hier`` — the partition-derived
-    pod assignment are unpacked from it, so the partitioner output
-    drives the runtime directly."""
+    partition, ``k``, and — for the hier backends — the
+    partition-derived ancestor table are unpacked from it, so the
+    partitioner output drives the runtime directly."""
     if part is not None and hasattr(part, "part") and hasattr(part,
                                                               "pod_of"):
         hp = part
         part = np.asarray(hp.part)
         if k is None:
             k = hp.k
-        if backend == "dist_hier":
-            kw.setdefault("pods", np.asarray(hp.pod_of))
+        if backend in _HIER_BACKENDS and "pods" not in kw:
+            kw.setdefault("tree", np.asarray(hp.anc)
+                          if getattr(hp, "anc", None) is not None
+                          else np.asarray(hp.pod_of))
     if backend == "coo":
         return CooOperator.from_csr(indptr, indices, data, **kw)
     if backend == "bell":

@@ -1,59 +1,70 @@
-"""NumPy simulation of the hierarchical (two-level) device schedule.
+"""NumPy simulation of the hierarchical (arbitrary-depth tree) device
+schedule.
 
 Mirrors the ``comm='hier'`` shard_map program in
-``repro.sparse.distributed``: interior matvec from the local vector,
-intra-pod ppermute rounds (the shared local-index schedule fires in every
-pod), inter-pod rounds over linearized device indices, then the intra- and
-inter-boundary accumulations from the extended vector
-``[x_loc | intra slots | inter slots]``.  Shared by the deterministic and
-hypothesis hier-plan suites so hundreds of random plans are checked
-without devices.
+``repro.sparse.distributed``: interior matvec from the local vector, then
+one ppermute round class per tree level — level ``l``'s suffix-linearized
+schedule fires independently inside every depth-``(h-1-l)`` subtree (the
+shared schedule over the axis suffix), the outermost level over fully
+linearized device indices — and per-level boundary accumulations from the
+extended vector ``[x_loc | lvl-0 slots | ... | lvl-(h-1) slots]``.  The
+two-level (``pods=``) plans of PR 3-4 are the ``h == 2`` instance, so
+``hier_ext``/``hier_spmv_numpy`` keep their names and semantics.  Shared
+by the deterministic and hypothesis plan suites so hundreds of random
+plans are checked without devices.
 """
 import numpy as np
 
 
-def hier_ext(plan, xb):
-    """Run both round classes: (k, B) -> (k, B + Ra*Sa + Re*Se)."""
+def tree_ext(plan, xb):
+    """Run every level's round class: (k, B) -> (k, B + sum_l R_l*S_l)."""
     k, B = plan.k, plan.B
-    kl, pods = plan.k_local, plan.pods
-    Ra, Sa = plan.n_rounds_intra, plan.S_intra
-    Re, Se = plan.n_rounds_inter, plan.S_inter
-    sia = np.asarray(plan.send_idx_intra)
-    mia = np.asarray(plan.send_mask_intra)
-    sie = np.asarray(plan.send_idx_inter)
-    mie = np.asarray(plan.send_mask_inter)
-    ext = np.zeros((k, B + Ra * Sa + Re * Se))
+    h = plan.h
+    offs = plan.level_offsets()
+    ext = np.zeros((k, offs[-1]))
     ext[:, :B] = xb
     rows = np.arange(k)[:, None]
-    for c in range(Ra):
-        send = xb[rows, sia[:, c, :]] * mia[:, c, :]
-        recv = np.zeros_like(send)
-        for (a, b) in plan.round_perms_intra[c]:   # local pairs, every pod
-            for p in range(pods):
-                recv[p * kl + b] = send[p * kl + a]
-        ext[:, B + c * Sa:B + (c + 1) * Sa] = recv
-    off = B + Ra * Sa
-    for c in range(Re):
-        send = xb[rows, sie[:, c, :]] * mie[:, c, :]
-        recv = np.zeros_like(send)
-        for (s, d) in plan.round_perms_inter[c]:   # linearized device ids
-            recv[d] = send[s]
-        ext[:, off + c * Se:off + (c + 1) * Se] = recv
+    for l in range(h):
+        R_l, S_l = plan.n_rounds_lvl[l], plan.S_lvl[l]
+        si = np.asarray(plan.send_idx_lvl[l])
+        sm = np.asarray(plan.send_mask_lvl[l])
+        sz = plan.k // int(np.prod(plan.fanouts[:h - 1 - l]))
+        n_sub = k // sz                      # subtrees sharing the schedule
+        for c in range(R_l):
+            send = xb[rows, si[:, c, :]] * sm[:, c, :]
+            recv = np.zeros_like(send)
+            for (a, b) in plan.round_perms_lvl[l][c]:  # suffix indices
+                for p in range(n_sub):       # fires in every subtree
+                    recv[p * sz + b] = send[p * sz + a]
+            ext[:, offs[l] + c * S_l:offs[l] + (c + 1) * S_l] = recv
     return ext
+
+
+def tree_spmv_numpy(plan, x):
+    """Execute the full multi-stage tree schedule on a global (n,) x."""
+    xb = plan.scatter_vec(x)
+    ext = tree_ext(plan, xb)
+    y = np.zeros((plan.k, plan.B))
+    segs = [(plan.rows_int, plan.cols_int, plan.vals_int)]
+    segs += [(plan.rows_bnd_lvl[l], plan.cols_bnd_lvl[l],
+              plan.vals_bnd_lvl[l]) for l in range(plan.h)]
+    for seg in segs:
+        r, c, v = (np.asarray(a) for a in seg)
+        for b in range(plan.k):
+            np.add.at(y[b], r[b], v[b] * ext[b, c[b]])
+    return plan.gather_vec(y * np.asarray(plan.row_mask))
+
+
+# -- two-level names (the PR 3-4 API) ---------------------------------------
+
+def hier_ext(plan, xb):
+    """Run both round classes of an h == 2 plan (tree-general)."""
+    return tree_ext(plan, xb)
 
 
 def hier_spmv_numpy(plan, x):
     """Execute the full three-stage hier schedule on a global (n,) x."""
-    xb = plan.scatter_vec(x)
-    ext = hier_ext(plan, xb)
-    y = np.zeros((plan.k, plan.B))
-    for seg in (("rows_int", "cols_int", "vals_int"),
-                ("rows_bnd_intra", "cols_bnd_intra", "vals_bnd_intra"),
-                ("rows_bnd_inter", "cols_bnd_inter", "vals_bnd_inter")):
-        r, c, v = (np.asarray(getattr(plan, f)) for f in seg)
-        for b in range(plan.k):
-            np.add.at(y[b], r[b], v[b] * ext[b, c[b]])
-    return plan.gather_vec(y * np.asarray(plan.row_mask))
+    return tree_spmv_numpy(plan, x)
 
 
 def segment_triples(rows, cols, vals, count):

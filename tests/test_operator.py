@@ -114,14 +114,20 @@ def test_jacobi_requires_operator():
 
 # -- cross-backend agreement matrix (one subprocess, 8 host devices) -------
 # The dist_hier rows run on the two-level (pods=2, k=8) mesh from
-# make_test_mesh(8, pods=2) — the ISSUE acceptance configuration.
+# make_test_mesh(8, pods=2); the dist_tree3 rows on the depth-3
+# (2, 2, 2) ("pod", "host", "pu") mesh from make_test_mesh(8,
+# fanouts=(2, 2, 2)) — the ISSUE 5 acceptance configuration, run in
+# both CI matrix jobs (latest + JAX 0.4.37) so the compat shims see the
+# suffix-combined-axes ppermutes.
 
 CROSS_BACKENDS = ("coo", "coo+jacobi", "bell", "bell+jacobi",
                   "dist_halo", "dist_halo+jacobi",
                   "dist_halo+jacobi_fused", "dist_halo+block_jacobi",
                   "dist_halo_seq", "dist_bell",
                   "dist_allgather", "dist_hier", "dist_hier+jacobi",
-                  "dist_hier+block_jacobi_fused", "dist_hier_podaware")
+                  "dist_hier+block_jacobi_fused", "dist_hier_podaware",
+                  "dist_hier_bell", "dist_tree3", "dist_tree3_bell",
+                  "dist_tree3_aware", "dist_tree3+block_jacobi_fused")
 
 CROSS_SCRIPT = textwrap.dedent("""
     import os
@@ -139,13 +145,18 @@ CROSS_SCRIPT = textwrap.dedent("""
     part = np.random.default_rng(0).integers(0, 8, g.n)
     mesh = jax.sharding.Mesh(np.array(jax.devices()), ("pu",))
     mesh_hier = make_test_mesh(8, pods=2)    # ("pod", "pu") = (2, 4)
+    mesh_tree = make_test_mesh(8, fanouts=(2, 2, 2))   # depth 3
     b = np.random.default_rng(1).normal(size=g.n).astype(np.float32)
 
     # partition-derived (swept, generally non-contiguous) pod assignment
     # driving the hier runtime — the ISSUE 4 acceptance path
-    from repro.core import Topology, pod_assignment_for, scale_to_load
+    from repro.core import (Topology, partition_tree, pod_assignment_for,
+                            scale_to_load)
     topo8 = scale_to_load(Topology.homogeneous(8), g.n)
     pod_sw = pod_assignment_for(g, part, topo8, 2)
+    # tree-aware depth-3 partition driving the runtime (ISSUE 5)
+    topo_t = scale_to_load(Topology.homogeneous(8, fanouts=(2, 2, 2)), g.n)
+    res_tree = partition_tree(g, topo_t, "greedyRef", seed=0)
 
     sols = {}
     for name in %r:
@@ -154,9 +165,16 @@ CROSS_SCRIPT = textwrap.dedent("""
         if backend == "dist_hier_podaware":
             backend = "dist_hier"
             kw = dict(part=part, k=8, mesh=mesh_hier, pods=pod_sw)
+        elif backend == "dist_tree3_aware":
+            backend = "dist_hier"            # HierPartition unpack path
+            kw = dict(part=res_tree, mesh=mesh_tree)
+        elif backend.startswith("dist_tree3"):
+            backend = ("dist_hier_bell" if backend.endswith("bell")
+                       else "dist_hier")
+            kw = dict(part=part, k=8, mesh=mesh_tree, fanouts=(2, 2, 2))
         elif backend.startswith("dist"):
             kw = dict(part=part, k=8, mesh=mesh)
-            if backend == "dist_hier":
+            if backend in ("dist_hier", "dist_hier_bell"):
                 kw.update(mesh=mesh_hier, pods=2)
         op = make_operator(indptr, indices, data, backend, **kw)
         if variant.endswith("fused"):

@@ -1,0 +1,293 @@
+"""Tree-aware partitioning pipeline (ISSUE 5 acceptance) — NumPy-only.
+
+The tree runtime (``comm='hier'`` on a depth-h plan) pays each cut edge
+at the link latency of its LCA level; these tests lock down that the
+recursive pipeline (``partition_tree``) actually *reduces* the
+outermost-level component versus the pod-oblivious stripes baseline on
+the (2, 2, 2) acceptance mesh, that the per-level metrics/objective/FM
+are bit-identical to the PR 4 pod path at h == 2, and that the
+tree-aware Algorithm 1 (``tree_target_block_sizes`` / the recursion's
+water-fill) removes the stage-B rescale.
+"""
+import numpy as np
+import pytest
+
+from hier_sim import tree_spmv_numpy
+from repro.core import (HierPartition, Topology, canonical_ancestors,
+                        contiguous_pods, level_matrix, partition,
+                        partition_hier, partition_tree, scale_to_load,
+                        target_block_sizes, tree_assignment_for,
+                        tree_target_block_sizes, waterfill)
+from repro.core.metrics import (comm_volumes, edge_cut, tree_comm_volumes,
+                                tree_cut_split, tree_objective,
+                                two_level_objective, summarize_tree)
+from repro.core.refinement import (fm_pair_refine, quotient_graph,
+                                   refine_partition,
+                                   refine_pod_assignment,
+                                   refine_tree_assignment)
+from repro.core.topology import PU, normalize_tree_of
+from repro.sparse import make_operator
+from repro.sparse.distributed import build_plan_tree
+from repro.sparse.generators import grid, rdg
+from repro.sparse.graph import laplacian_csr
+
+
+@pytest.fixture(scope="module")
+def striped_grid():
+    """The acceptance configuration: a grid whose 8 stripes cross the
+    long axis, so every stripe boundary (and every canonical-tree
+    group boundary) costs a full 128-wide grid line."""
+    g = grid((16, 128))
+    indptr, indices, data = laplacian_csr(g, shift=1e-2)
+    part = ((np.arange(g.n) * 8) // g.n).astype(np.int32)
+    return g, (indptr, indices, data), part
+
+
+def test_level_splits_tile_flat_metrics():
+    """Per-level cut/volume splits exactly tile the flat metrics on a
+    depth-3 table (deterministic twin of the hypothesis suite)."""
+    g = rdg(800, seed=3)
+    rng = np.random.default_rng(0)
+    part = rng.integers(0, 8, g.n).astype(np.int32)
+    anc = canonical_ancestors((2, 2, 2))[:, rng.permutation(8)]
+    cuts = tree_cut_split(g, part, anc)
+    vols = tree_comm_volumes(g, part, 8, anc)
+    assert cuts.shape == (3,) and vols.shape == (3, 8)
+    assert cuts.sum() == pytest.approx(edge_cut(g, part))
+    np.testing.assert_array_equal(vols.sum(axis=0),
+                                  comm_volumes(g, part, 8))
+
+
+def test_tree_objective_h2_bit_identical_to_two_level():
+    g = rdg(700, seed=4)
+    rng = np.random.default_rng(1)
+    part = rng.integers(0, 8, g.n).astype(np.int32)
+    pod_of = contiguous_pods(8, 2)
+    for lam in (1.0, 4.0, 16.0):
+        assert tree_objective(g, part, pod_of[None, :], (1.0, lam)) == \
+            two_level_objective(g, part, pod_of, lam)
+
+
+def test_fm_gains_h2_bit_identical_to_pod_path():
+    """Acceptance: at h == 2 the tree FM gains are bit-identical to the
+    PR 4 pod gains — same moves, same partitions."""
+    g = rdg(900, seed=7)
+    rng = np.random.default_rng(0)
+    part = rng.integers(0, 8, g.n).astype(np.int32)
+    pod_of = contiguous_pods(8, 2)
+    tw = np.maximum(np.bincount(part, minlength=8), 1).astype(np.float64)
+    for lam in (2.0, 4.0):
+        out_pod = refine_partition(g, part, tw, eps=0.1,
+                                   pod_of=pod_of, lam=lam)
+        out_anc = refine_partition(g, part, tw, eps=0.1,
+                                   anc=pod_of[None, :], lams=(1.0, lam))
+        np.testing.assert_array_equal(out_pod, out_anc)
+    # single-pair FM: same gain, same mutation
+    pa, pb = part.copy(), part.copy()
+    caps = np.ceil(tw * 1.1)
+    g1 = fm_pair_refine(g, pa, 0, 5, caps, pod_of=pod_of, lam=4.0)
+    g2 = fm_pair_refine(g, pb, 0, 5, caps, anc=pod_of[None, :],
+                        lams=(1.0, 4.0))
+    assert g1 == g2
+    np.testing.assert_array_equal(pa, pb)
+    with pytest.raises(ValueError):
+        fm_pair_refine(g, pa, 0, 5, caps, pod_of=pod_of,
+                       anc=pod_of[None, :])
+
+
+def test_tree_sweep_h2_bit_identical_to_pod_sweep():
+    g = rdg(900, seed=8)
+    part = np.random.default_rng(2).integers(0, 8, g.n).astype(np.int32)
+    pairs, w = quotient_graph(g, part, 8)
+    pod_of = contiguous_pods(8, 2)
+    a = refine_pod_assignment(pairs, w, pod_of)
+    b = refine_tree_assignment(pairs, w, pod_of[None, :])
+    np.testing.assert_array_equal(a, b[0])
+
+
+def test_tree_sweep_per_level_invariants():
+    """The per-level sweep keeps the table nested with preserved group
+    sizes and never increases any level's crossing weight."""
+    g = rdg(1200, seed=9)
+    part = np.random.default_rng(3).integers(0, 8, g.n).astype(np.int32)
+    pairs, w = quotient_graph(g, part, 8)
+    anc0 = canonical_ancestors((2, 2, 2))
+    anc = refine_tree_assignment(pairs, w, anc0)
+    normalize_tree_of(anc, 8, (2, 2, 2))         # still nested/rectangular
+    W = np.zeros((8, 8))
+    W[pairs[:, 0], pairs[:, 1]] = w
+    W += W.T
+    lev0 = level_matrix(anc0)
+    lev1 = level_matrix(anc)
+    for l in (2, 1):                              # crossing at level >= l
+        assert W[lev1 >= l].sum() <= W[lev0 >= l].sum() + 1e-9
+
+
+def test_tree_aware_beats_oblivious_on_depth3_stripes(striped_grid):
+    """ISSUE acceptance: on the (2, 2, 2) mesh the tree-aware pipeline's
+    outermost-level comm volume is strictly below the pod-oblivious
+    stripes baseline's, at a lower tree objective."""
+    g, (indptr, indices, data), part_s = striped_grid
+    topo = scale_to_load(Topology.homogeneous(8, fanouts=(2, 2, 2)), g.n)
+    anc_c = canonical_ancestors((2, 2, 2))
+
+    res = partition_tree(g, topo, "geoRef")
+    assert isinstance(res, HierPartition)
+    assert res.h == 3 and res.fanouts == (2, 2, 2)
+    assert res.anc.shape == (2, 8)
+    assert res.lams == (1.0, 4.0, 16.0)          # link-cost ladder
+
+    vol_base = tree_comm_volumes(g, part_s, 8, anc_c)
+    vol_pa = tree_comm_volumes(g, res.part, 8, res.anc)
+    assert vol_pa[-1].sum() < vol_base[-1].sum()  # strictly lower outer
+    assert tree_objective(g, res.part, res.anc, res.lams) < \
+        tree_objective(g, part_s, anc_c, res.lams)
+
+
+def test_build_plan_tree_consumes_partition_table(striped_grid):
+    """Acceptance: the depth-3 plan consumes the partitioner's (swept,
+    non-contiguous) ancestor table without relabeling errors — the tree
+    schedule agrees with the coo backend to < 1e-5."""
+    g, (indptr, indices, data), _ = striped_grid
+    topo = scale_to_load(Topology.homogeneous(8, fanouts=(2, 2, 2)), g.n)
+    perm = np.array([0, 4, 1, 5, 2, 6, 3, 7])
+    part = perm[(np.arange(g.n) * 8) // g.n].astype(np.int32)
+    anc = tree_assignment_for(g, part, topo)
+    assert anc.shape == (2, 8)
+
+    plan = build_plan_tree(indptr, indices, data, part, anc, 8)
+    op = make_operator(indptr, indices, data, "coo")
+    x = np.random.default_rng(2).normal(size=g.n).astype(np.float32)
+    ref = op.gather(op.matvec(op.scatter(x)))
+    y = tree_spmv_numpy(plan, x)
+    assert np.abs(y - ref).max() / np.abs(ref).max() < 1e-5
+
+
+def test_make_operator_unpacks_depth3_hier_partition(striped_grid):
+    """make_operator unpacks a depth-3 HierPartition (part, k, ancestor
+    table) so the partitioner output drives the tree runtime directly
+    (mesh-free plan check through the NumPy simulator)."""
+    g, (indptr, indices, data), _ = striped_grid
+    topo = scale_to_load(Topology.homogeneous(8, fanouts=(2, 2, 2)), g.n)
+    res = partition_tree(g, topo, "sfc")
+    plan = build_plan_tree(indptr, indices, data, res.part, res.anc, res.k)
+    assert plan.h == 3
+    op = make_operator(indptr, indices, data, "coo")
+    x = np.random.default_rng(3).normal(size=g.n).astype(np.float32)
+    ref = op.gather(op.matvec(op.scatter(x)))
+    y = tree_spmv_numpy(plan, x)
+    assert np.abs(y - ref).max() / np.abs(ref).max() < 1e-5
+
+
+def test_partition_hier_routes_through_tree_pipeline():
+    """The two-level wrapper is the h == 2 instance of the recursion:
+    same partition through either entry point."""
+    g = rdg(600, seed=6)
+    topo = scale_to_load(Topology.homogeneous(4), g.n)
+    r2 = partition_hier(g, topo, "sfc", pods=2)
+    rt = partition_tree(g, topo, "sfc", tree=contiguous_pods(4, 2),
+                        lams=(1.0, topo.link_costs().lam))
+    np.testing.assert_array_equal(r2.part, rt.part)
+    np.testing.assert_array_equal(r2.anc, rt.anc)
+    # and partition() routes fanouts= the same way
+    p, tw = partition(g, topo, "sfc", fanouts=(2, 2))
+    rf = partition_tree(g, topo, "sfc", fanouts=(2, 2))
+    np.testing.assert_array_equal(p, rf.part)
+    np.testing.assert_array_equal(tw, rf.tw)
+
+
+def test_tree_targets_match_flat_when_unsaturated():
+    """Tree-aware Algorithm 1 == flat Algorithm 1 whenever no PU
+    saturates (proportional shares compose down the tree)."""
+    topo = scale_to_load(Topology.topo1(8, 2 / 8, 2.0, 3.2), 1000)
+    flat = target_block_sizes(1000, topo)
+    assert not np.isclose(flat, topo.memories).any()   # truly unsaturated
+    np.testing.assert_allclose(
+        tree_target_block_sizes(1000, topo, fanouts=(2, 2, 2)),
+        flat, rtol=1e-12)
+
+
+def test_tree_targets_absorb_saturation_within_subtree():
+    """A saturated member inside an unsaturated pod: the sibling absorbs
+    the overflow (no rescale), the per-pod sums equal the aggregate
+    water-fill, and memory caps hold exactly."""
+    topo = Topology(
+        (PU(4.0, 1.0), PU(1.0, 10.0), PU(1.0, 10.0), PU(1.0, 10.0)),
+        (2, 2))
+    tw = tree_target_block_sizes(14.0, topo)
+    assert (tw <= topo.memories + 1e-9).all()
+    assert tw.sum() == pytest.approx(14.0)
+    assert tw[0] == pytest.approx(1.0)           # saturated at its cap
+    agg = topo.pod_aggregate(2)
+    shares = waterfill(14.0, agg.speeds, agg.memories)
+    np.testing.assert_allclose([tw[:2].sum(), tw[2:].sum()], shares)
+    # the flat optimum spreads the overflow over *all* other PUs; the
+    # tree version keeps it inside the saturated member's pod
+    flat = target_block_sizes(14.0, topo)
+    assert tw[1] > flat[1]
+
+
+def test_partition_tree_respects_memory_on_saturated_topo():
+    """End to end: the recursion's water-fill keeps every realized block
+    within memory where the old rescale could overfill the saturated
+    member (stage-B rescale removal, ROADMAP satellite)."""
+    g = grid((20, 20))
+    topo = Topology(
+        (PU(8.0, 60.0), PU(1.0, 250.0), PU(1.0, 250.0), PU(1.0, 250.0)),
+        (2, 2))
+    res = partition_hier(g, topo, "greedyRef", pods=2, seed=1)
+    sizes = np.bincount(res.part, minlength=4)
+    slack = np.ceil(topo.memories * 1.03)
+    assert (sizes <= slack).all(), sizes
+
+
+def test_summarize_tree_reports_per_level():
+    g = grid((12, 12))
+    rng = np.random.default_rng(1)
+    part = rng.integers(0, 8, g.n).astype(np.int32)
+    topo = scale_to_load(Topology.homogeneous(8, fanouts=(2, 2, 2)), g.n)
+    tw = np.full(8, g.n / 8)
+    anc = canonical_ancestors((2, 2, 2))
+    s = summarize_tree(g, part, topo, tw, anc, lams=(1.0, 3.0, 9.0))
+    assert sum(s["cut_by_level"]) == pytest.approx(s["cut"])
+    assert sum(s["comm_volume_by_level"]) == s["total_comm_volume"]
+    expect = (s["cut_by_level"][0] + 3.0 * s["cut_by_level"][1]
+              + 9.0 * s["cut_by_level"][2])
+    assert s["tree_objective"] == pytest.approx(expect)
+
+
+def test_hier_partition_defaults_respect_table_depth():
+    """A manually built HierPartition with a depth-3 table infers a
+    depth-3 fanouts/lams, so (anc, lams) pairs feed the tree metrics
+    directly; the h == 2 defaults are unchanged."""
+    anc3 = canonical_ancestors((2, 2, 2))
+    hp = HierPartition(part=np.zeros(10, np.int32), tw=np.ones(8),
+                       pod_of=anc3[0], lam=16.0, anc=anc3)
+    assert hp.fanouts == (2, 2, 2) and hp.h == 3
+    assert hp.lams == pytest.approx((1.0, 4.0, 16.0))
+    g = grid((8, 8))
+    part = np.random.default_rng(0).integers(0, 8, g.n).astype(np.int32)
+    tree_objective(g, part, hp.anc, hp.lams)     # lengths consistent
+    hp2 = HierPartition(part=np.zeros(10, np.int32), tw=np.ones(8),
+                        pod_of=contiguous_pods(8, 2), lam=4.0)
+    assert hp2.fanouts == (2, 4) and hp2.lams == (1.0, 4.0)
+
+
+def test_linkcosts_ladder_and_tree_matrix():
+    topo = Topology.homogeneous(8, fanouts=(2, 2, 2))
+    lc = topo.link_costs()
+    assert lc.costs == (1.0, 4.0, 16.0)
+    assert lc.lams == (1.0, 4.0, 16.0)
+    assert lc.lam == 16.0                        # outer/inner ratio
+    C = lc.tree_matrix(topo.ancestor_table())
+    assert C[0, 1] == 1.0 and C[0, 2] == 4.0 and C[0, 4] == 16.0
+    assert C[3, 3] == 0.0
+    np.testing.assert_array_equal(C, C.T)
+    with pytest.raises(ValueError):              # table deeper than costs
+        Topology.homogeneous(8).link_costs(levels=2).tree_matrix(
+            topo.ancestor_table())
+    # level_of agrees with the matrix
+    assert topo.level_of(0, 1) == 0
+    assert topo.level_of(0, 2) == 1
+    assert topo.level_of(0, 7) == 2
+    assert topo.level_of(5, 5) == -1

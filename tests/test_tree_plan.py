@@ -1,0 +1,294 @@
+"""Deterministic tests for the arbitrary-depth tree plan
+(``build_plan_tree``) — the ISSUE 5 tentpole's runtime layer.
+
+Host-only (the per-level ppermute schedules are simulated in NumPy by
+``hier_sim.tree_spmv_numpy``); the device-level shard_map execution of
+the depth-3 ``comm='hier'`` schedule is covered by the 8-device
+subprocess matrix in tests/test_operator.py.
+"""
+import numpy as np
+import pytest
+
+from hier_sim import tree_spmv_numpy
+from repro.core.topology import canonical_ancestors
+from repro.sparse.distributed import (HierPlan, TreePlan, build_plan,
+                                      build_plan_hier, build_plan_tree,
+                                      _local_matvec_builder)
+from repro.sparse.generators import grid, rdg
+from repro.sparse.graph import laplacian_csr
+
+
+def dense_of(indptr, indices, data, n):
+    a = np.zeros((n, n), dtype=np.float64)
+    src = np.repeat(np.arange(n), np.diff(indptr))
+    np.add.at(a, (src, indices), data)
+    return a
+
+
+@pytest.fixture(scope="module")
+def lap():
+    g = rdg(600, seed=11)
+    indptr, indices, data = laplacian_csr(g, shift=1e-2)
+    return g, indptr, indices, data
+
+
+@pytest.mark.parametrize("fanouts", [(2, 2, 2), (2, 2, 3), (3, 2, 2),
+                                     (2, 3, 2), (2, 2, 2, 2)])
+def test_tree_spmv_matches_dense_oracle(lap, fanouts):
+    g, indptr, indices, data = lap
+    k = int(np.prod(fanouts))
+    part = np.random.default_rng(k + len(fanouts)).integers(0, k, g.n)
+    plan = build_plan_tree(indptr, indices, data, part, None, k,
+                           fanouts=fanouts)
+    assert isinstance(plan, TreePlan)
+    assert plan.h == len(fanouts) and plan.fanouts == fanouts
+    assert len(plan.n_rounds_lvl) == plan.h
+    A = dense_of(indptr, indices, data, g.n)
+    x = np.random.default_rng(2).normal(size=g.n)
+    np.testing.assert_allclose(tree_spmv_numpy(plan, x),
+                               A @ x.astype(np.float32),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_h2_tree_plan_bit_identical_to_pod_plan(lap):
+    """Acceptance: at h == 2 the tree path is bit-identical to the PR 3-4
+    pod path — same schedules, same slot layout, same segments."""
+    g, indptr, indices, data = lap
+    part = np.random.default_rng(0).integers(0, 8, g.n)
+    pod_of = np.array([0, 1, 0, 1, 1, 0, 1, 0])
+    hp = build_plan_hier(indptr, indices, data, part, pod_of, 8)
+    tp = build_plan_tree(indptr, indices, data, part, pod_of[None, :], 8)
+    assert isinstance(hp, HierPlan) and hp.h == 2
+    assert tp.fanouts == hp.fanouts == (2, 4)
+    assert tp.S_lvl == hp.S_lvl and tp.n_rounds_lvl == hp.n_rounds_lvl
+    assert tp.round_perms_lvl == hp.round_perms_lvl
+    for f in ("perm", "block_map", "rows", "cols", "vals", "rows_int",
+              "cols_int", "vals_int", "interior_mask", "diag"):
+        np.testing.assert_array_equal(np.asarray(getattr(tp, f)),
+                                      np.asarray(getattr(hp, f)), err_msg=f)
+    for l in range(2):
+        for fam in ("rows_bnd_lvl", "cols_bnd_lvl", "vals_bnd_lvl",
+                    "send_idx_lvl", "send_mask_lvl"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(tp, fam)[l]),
+                np.asarray(getattr(hp, fam)[l]), err_msg=f"{fam}[{l}]")
+    # the two-level property views expose the level tuples
+    assert hp.n_rounds_intra == hp.n_rounds_lvl[0]
+    assert hp.n_rounds_inter == hp.n_rounds_lvl[1]
+    np.testing.assert_array_equal(np.asarray(hp.rows_bnd_intra),
+                                  np.asarray(hp.rows_bnd_lvl[0]))
+    np.testing.assert_array_equal(np.asarray(hp.send_idx_inter),
+                                  np.asarray(hp.send_idx_lvl[1]))
+
+
+def test_depth3_interior_bit_equal_to_flat_plan(lap):
+    """The interior criterion (no halo reads) is partition-level, not
+    tree-level — the depth-3 interior segment must be bit-identical to
+    the flat plan's on the same partition."""
+    g, indptr, indices, data = lap
+    part = np.random.default_rng(1).integers(0, 8, g.n)
+    tp = build_plan_tree(indptr, indices, data, part, None, 8,
+                         fanouts=(2, 2, 2))
+    fp = build_plan(indptr, indices, data, part, 8)
+    for f in ("rows_int", "cols_int", "vals_int", "interior_mask", "diag",
+              "rows", "row_mask", "perm"):
+        np.testing.assert_array_equal(np.asarray(getattr(tp, f)),
+                                      np.asarray(getattr(fp, f)), err_msg=f)
+
+
+def test_depth3_level_segments_tile_flat_boundary(lap):
+    """The h per-level boundary segments exactly tile the PR 2 flat
+    boundary set, each level's columns stay inside its slot range, and
+    every level-l row reads at least one level-l slot."""
+    g, indptr, indices, data = lap
+    part = np.random.default_rng(3).integers(0, 8, g.n)
+    tp = build_plan_tree(indptr, indices, data, part, None, 8,
+                         fanouts=(2, 2, 2))
+    fp = build_plan(indptr, indices, data, part, 8)
+    offs = tp.level_offsets()
+    assert offs[0] == tp.B and len(offs) == tp.h + 1
+
+    def triples(rows, vals):
+        keep = np.asarray(vals) != 0
+        return sorted(zip(np.asarray(rows)[keep].tolist(),
+                          np.asarray(vals)[keep].tolist()))
+
+    for b in range(8):
+        flat_bnd = triples(fp.rows_bnd[b], fp.vals_bnd[b])
+        per_lvl = [triples(tp.rows_bnd_lvl[l][b], tp.vals_bnd_lvl[l][b])
+                   for l in range(tp.h)]
+        assert sorted(sum(per_lvl, [])) == flat_bnd
+        for l in range(tp.h):
+            cl = np.asarray(tp.cols_bnd_lvl[l][b])
+            vl = np.asarray(tp.vals_bnd_lvl[l][b])
+            rl = np.asarray(tp.rows_bnd_lvl[l][b])
+            # level-l reads never exceed level l's slot range
+            assert cl.size == 0 or cl[vl != 0].size == 0 or \
+                cl[vl != 0].max() < offs[l + 1]
+            # every level-l row has >= 1 read in level l's own range
+            for r in np.unique(rl[vl != 0]):
+                sel = (rl == r) & (vl != 0)
+                assert (cl[sel] >= offs[l]).any()
+
+
+def test_depth3_stripes_outer_rounds_below_flat():
+    """The ISSUE acceptance shape: on the stripes-grid partition spanning
+    a (2, 2, 2) mesh, the outermost-level round count is strictly below
+    the flat plan's total round count — only the root-crossing cut pays
+    the slowest links — and the schedule stays exact."""
+    g = grid((16, 128))
+    indptr, indices, data = laplacian_csr(g, shift=1e-2)
+    part = (np.arange(g.n) * 8) // g.n           # contiguous stripes
+    tp = build_plan_tree(indptr, indices, data, part, None, 8,
+                         fanouts=(2, 2, 2))
+    fp = build_plan(indptr, indices, data, part, 8)
+    assert tp.n_rounds_lvl[-1] >= 1
+    assert tp.n_rounds_lvl[-1] < fp.n_rounds
+    # middle level is also cheaper than the flat total
+    assert tp.n_rounds_lvl[1] < fp.n_rounds
+    A = dense_of(indptr, indices, data, g.n)
+    x = np.random.default_rng(3).normal(size=g.n)
+    np.testing.assert_allclose(tree_spmv_numpy(tp, x),
+                               A @ x.astype(np.float32),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_explicit_ancestor_table_relabels_tree_major(lap):
+    """A shuffled (non-contiguous) ancestor table must be relabeled
+    tree-major with a correct block_map and still produce an exact
+    plan."""
+    g, indptr, indices, data = lap
+    part = np.random.default_rng(5).integers(0, 8, g.n)
+    anc = canonical_ancestors((2, 2, 2))
+    perm = np.array([3, 6, 1, 4, 7, 0, 5, 2])
+    anc = anc[:, perm]                           # shuffle block columns
+    tp = build_plan_tree(indptr, indices, data, part, anc, 8)
+    assert tp.fanouts == (2, 2, 2)
+    # block_map sorts blocks lexicographically by ancestor path
+    order = np.lexsort(tuple(anc[::-1]))
+    np.testing.assert_array_equal(tp.block_map[order], np.arange(8))
+    # the canonical device-side table is contiguous
+    np.testing.assert_array_equal(tp.anc, canonical_ancestors((2, 2, 2)))
+    sizes = np.bincount(part, minlength=8)
+    np.testing.assert_array_equal(tp.sizes, sizes[order])
+    A = dense_of(indptr, indices, data, g.n)
+    x = np.random.default_rng(6).normal(size=g.n)
+    np.testing.assert_allclose(tree_spmv_numpy(tp, x),
+                               A @ x.astype(np.float32),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_degenerate_levels_have_empty_schedules(lap):
+    """fanout-1 levels and single-pod trees produce empty round classes,
+    not errors (the pods=1 behavior of PR 3)."""
+    g, indptr, indices, data = lap
+    part = np.random.default_rng(2).integers(0, 4, g.n)
+    tp = build_plan_tree(indptr, indices, data, part, None, 4,
+                         fanouts=(1, 2, 2))
+    assert tp.n_rounds_lvl[2] == 0               # no root-crossing pairs
+    assert not np.asarray(tp.vals_bnd_lvl[2]).any()
+    A = dense_of(indptr, indices, data, g.n)
+    x = np.random.default_rng(4).normal(size=g.n)
+    np.testing.assert_allclose(tree_spmv_numpy(tp, x),
+                               A @ x.astype(np.float32),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_tree_validation_errors(lap):
+    g, indptr, indices, data = lap
+    part = np.zeros(g.n, dtype=np.int64)
+    with pytest.raises(ValueError):              # prod(fanouts) != k
+        build_plan_tree(indptr, indices, data, part, None, 8,
+                        fanouts=(2, 2))
+    with pytest.raises(ValueError):              # non-nested table
+        build_plan_tree(indptr, indices, data, part,
+                        np.array([[0, 0, 1, 1], [0, 1, 0, 1]]), 4)
+    with pytest.raises(ValueError):              # unequal group sizes
+        build_plan_tree(indptr, indices, data, part,
+                        np.array([[0, 0, 0, 1]]), 4)
+    with pytest.raises(ValueError):              # neither tree nor fanouts
+        build_plan_tree(indptr, indices, data, part, None, 4)
+
+
+def test_depth3_matvec_builder_needs_three_axes(lap):
+    g, indptr, indices, data = lap
+    part = np.random.default_rng(7).integers(0, 8, g.n)
+    tp = build_plan_tree(indptr, indices, data, part, None, 8,
+                         fanouts=(2, 2, 2))
+    with pytest.raises(ValueError):              # two axes < depth 3
+        _local_matvec_builder(tp, "hier", ("pod", "pu"))
+    with pytest.raises(ValueError):              # flat comm on a TreePlan
+        _local_matvec_builder(tp, "halo", "pu")
+    # two-level views raise on a depth-3 plan instead of lying
+    with pytest.raises(AttributeError):
+        tp.n_rounds_intra
+    with pytest.raises(AttributeError):
+        tp.send_idx_inter
+
+
+def test_validate_tree_axes_catches_shape_mismatch(lap):
+    """Axis mapping is validated by *size*, not count: a mesh whose
+    trailing-axis products don't match the plan's fanouts suffixes must
+    raise instead of silently misrouting halo words (e.g. a depth-2
+    plan from a dropped trivial level on the original 3-axis mesh)."""
+    import types
+    from repro.sparse.distributed import _validate_tree_axes
+    g, indptr, indices, data = lap
+    part = np.random.default_rng(11).integers(0, 4, g.n)
+    tp = build_plan_tree(indptr, indices, data, part, None, 4,
+                         fanouts=(2, 2))
+
+    def mesh_of(shape: dict):
+        return types.SimpleNamespace(shape=shape,
+                                     axis_names=tuple(shape))
+
+    # matching 2-axis mesh passes; so does an extra mesh axis that
+    # subdivides the *innermost* level (the production (pod, data,
+    # model) shape of two-level plans)
+    _validate_tree_axes(tp, mesh_of({"pod": 2, "pu": 2}), ("pod", "pu"))
+    _validate_tree_axes(tp, mesh_of({"pod": 2, "a": 2, "b": 1}),
+                        ("pod", "a", "b"))
+    # the reproduced failure: (1, 2, 2) mesh — level 0 would ppermute
+    # over 4 devices while its schedule spans 2
+    with pytest.raises(ValueError):
+        _validate_tree_axes(tp, mesh_of({"pod": 1, "host": 2, "pu": 2}),
+                            ("pod", "host", "pu"))
+    with pytest.raises(ValueError):                  # unknown axis name
+        _validate_tree_axes(tp, mesh_of({"pod": 2, "pu": 2}),
+                            ("pod", "nope"))
+    # depth-3 plan: suffix sizes checked per level
+    tp3 = build_plan_tree(indptr, indices, data,
+                          np.random.default_rng(12).integers(0, 8, g.n),
+                          None, 8, fanouts=(2, 2, 2))
+    _validate_tree_axes(tp3, mesh_of({"pod": 2, "host": 2, "pu": 2}),
+                        ("pod", "host", "pu"))
+    with pytest.raises(ValueError):                  # transposed shape
+        _validate_tree_axes(tp3, mesh_of({"pod": 2, "host": 4, "pu": 1}),
+                            ("pod", "host", "pu"))
+
+
+@pytest.mark.parametrize("limit", [0, 777])
+def test_tree_sharded_bitmap_path_bit_identical(lap, limit, monkeypatch):
+    """build_plan_tree shares build_plan's dense/vertex-sharded bitmap
+    extraction: forcing the sharded path must give a bit-identical
+    plan at depth 3."""
+    import repro.sparse.distributed as dmod
+    g, indptr, indices, data = lap
+    part = np.random.default_rng(9).integers(0, 8, g.n)
+    ref = build_plan_tree(indptr, indices, data, part, None, 8,
+                          fanouts=(2, 2, 2))
+    monkeypatch.setattr(dmod, "DENSE_PLAN_LIMIT", limit)
+    p = dmod.build_plan_tree(indptr, indices, data, part, None, 8,
+                             fanouts=(2, 2, 2))
+    assert p.round_perms_lvl == ref.round_perms_lvl
+    for f in ("perm", "rows", "cols", "vals", "rows_int", "cols_int",
+              "vals_int", "interior_mask", "diag"):
+        np.testing.assert_array_equal(np.asarray(getattr(p, f)),
+                                      np.asarray(getattr(ref, f)),
+                                      err_msg=f)
+    for l in range(3):
+        for fam in ("rows_bnd_lvl", "cols_bnd_lvl", "vals_bnd_lvl",
+                    "send_idx_lvl", "send_mask_lvl"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(p, fam)[l]),
+                np.asarray(getattr(ref, fam)[l]), err_msg=f"{fam}[{l}]")
