@@ -4,7 +4,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test tier1 deps bench-cg bench bench-hier bench-pod bench-tree
+.PHONY: test tier1 deps lint verify-plans bench-cg bench bench-hier \
+        bench-pod bench-tree
 
 deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -16,6 +17,16 @@ test:
 # The ROADMAP tier-1 verify command (fail fast)
 tier1:
 	$(PYTHON) -m pytest -x -q
+
+# AST lint (REPRO001-004, see src/repro/analysis/lint.py): nonzero exit
+# with rule ID + file:line on any finding.  Pure ast — no JAX needed.
+lint:
+	$(PYTHON) -m repro.analysis lint src
+
+# Build flat + tree plans over the generator grid and run the structural
+# verifier + mesh/axis checker on each (exit = number of failing plans)
+verify-plans:
+	$(PYTHON) -m repro.analysis verify
 
 bench-cg:
 	$(PYTHON) -m benchmarks.run --only cg

@@ -29,6 +29,7 @@ import subprocess
 import sys
 import textwrap
 import time
+from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
@@ -296,6 +297,16 @@ TREE_SCRIPT = textwrap.dedent("""
 """)
 
 
+def _write_bench_json(name: str, payload: dict) -> None:
+    """``BENCH_<name>.json`` in the CWD — the machine-readable counterpart
+    of the CSV rows (rounds, comm volumes, agreement, wall time), so the
+    perf trajectory is diffable across PRs.  ``raw`` carries the full
+    subprocess record for anything the headline keys don't surface."""
+    path = Path(f"BENCH_{name}.json")
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {path}", file=sys.stderr, flush=True)
+
+
 def _bench_tree(rows: list[str]) -> None:
     """Depth-3 (2, 2, 2) tree schedule: per-level round/volume split,
     tree-aware vs oblivious partition (ISSUE 5).
@@ -308,13 +319,32 @@ def _bench_tree(rows: list[str]) -> None:
     distributed rows: local memcpy collectives show schedule overhead,
     not the per-level-latency win the splits quantify.
     """
+    t0 = time.perf_counter()
     proc = subprocess.run([sys.executable, "-c", TREE_SCRIPT],
                           capture_output=True, text=True, timeout=1200)
+    wall_s = time.perf_counter() - t0
     if proc.returncode != 0:
         rows.append(row("cg_tree__ERROR", 0,
                         proc.stderr[-200:].replace(",", ";")))
+        _write_bench_json("tree", {"bench": "tree", "wall_s": wall_s,
+                                   "error": proc.stderr[-2000:]})
         return
     out = json.loads(proc.stdout.strip().splitlines()[-1])
+    _write_bench_json("tree", {
+        "bench": "tree", "wall_s": wall_s,
+        "rounds": {name: out[name]["rounds_by_level"]
+                   for name in ("oblivious", "tree_aware")},
+        "rounds_flat": out["rounds_flat"],
+        "comm_volumes": {name: out[name]["volume_by_level"]
+                         for name in ("oblivious", "tree_aware")},
+        "cg_wall_us": {name: out[name]["cg_wall_us"]
+                       for name in ("oblivious", "tree_aware")},
+        "iters": {name: out[name]["iters"]
+                  for name in ("oblivious", "tree_aware")},
+        "agreement": {"max_rel_between": out["max_rel_between"],
+                      "pass_1e-5": bool(out["max_rel_between"] < 1e-5)},
+        "raw": out,
+    })
     for name in ("oblivious", "tree_aware"):
         r = out[name]
         lv = ";".join(f"lv{l}={c}" for l, c in
@@ -347,13 +377,34 @@ def _bench_pod(rows: list[str]) -> None:
     distributed rows: local memcpy collectives show schedule overhead,
     not the slow-link win the volumes quantify.
     """
+    t0 = time.perf_counter()
     proc = subprocess.run([sys.executable, "-c", POD_SCRIPT],
                           capture_output=True, text=True, timeout=1200)
+    wall_s = time.perf_counter() - t0
     if proc.returncode != 0:
         rows.append(row("cg_pod__ERROR", 0,
                         proc.stderr[-200:].replace(",", ";")))
+        _write_bench_json("pod", {"bench": "pod", "wall_s": wall_s,
+                                  "error": proc.stderr[-2000:]})
         return
     out = json.loads(proc.stdout.strip().splitlines()[-1])
+    _write_bench_json("pod", {
+        "bench": "pod", "wall_s": wall_s,
+        "rounds": {name: {"inter": out[name]["rounds_inter"],
+                          "intra": out[name]["rounds_intra"]}
+                   for name in ("oblivious", "pod_aware")},
+        "comm_volumes": {name: {
+            "inter": out[name]["inter_comm_volume"],
+            "max_inter": out[name]["max_inter_comm_volume"]}
+            for name in ("oblivious", "pod_aware")},
+        "cg_wall_us": {name: out[name]["cg_wall_us"]
+                       for name in ("oblivious", "pod_aware")},
+        "iters": {name: out[name]["iters"]
+                  for name in ("oblivious", "pod_aware")},
+        "agreement": {"max_rel_between": out["max_rel_between"],
+                      "pass_1e-5": bool(out["max_rel_between"] < 1e-5)},
+        "raw": out,
+    })
     for name in ("oblivious", "pod_aware"):
         r = out[name]
         rows.append(row(
@@ -382,13 +433,33 @@ def _bench_hier(rows: list[str]) -> None:
     forced-host-device caveat as the overlap rows: local memcpy collectives
     show the schedule's overhead, not its win.
     """
+    t0 = time.perf_counter()
     proc = subprocess.run([sys.executable, "-c", HIER_SCRIPT],
                           capture_output=True, text=True, timeout=1200)
+    wall_s = time.perf_counter() - t0
     if proc.returncode != 0:
         rows.append(row("cg_hier__ERROR", 0,
                         proc.stderr[-200:].replace(",", ";")))
+        _write_bench_json("hier", {"bench": "hier", "wall_s": wall_s,
+                                   "error": proc.stderr[-2000:]})
         return
     out = json.loads(proc.stdout.strip().splitlines()[-1])
+    _write_bench_json("hier", {
+        "bench": "hier", "wall_s": wall_s,
+        "rounds": {"inter": out["rounds_inter"],
+                   "intra": out["rounds_intra"],
+                   "flat_total": out["rounds_flat"]},
+        "cg_wall_us": {name: out[name]["wall_us"]
+                       for name in ("dist_halo", "dist_hier",
+                                    "dist_hier_bell",
+                                    "dist_hier+block_jacobi")},
+        "iters": {name: out[name]["iters"]
+                  for name in ("dist_halo", "dist_hier", "dist_hier_bell",
+                               "dist_hier+block_jacobi")},
+        "agreement": {"max_rel_vs_halo": out["max_rel_vs_halo"],
+                      "pass_1e-5": bool(out["max_rel_vs_halo"] < 1e-5)},
+        "raw": out,
+    })
     rows.append(row(
         "dist_hier_rounds", out["rounds_inter"],
         f"inter={out['rounds_inter']};intra={out['rounds_intra']};"

@@ -1,0 +1,33 @@
+"""Static analysis for the distributed-plan pipeline.
+
+Three passes, all runnable without devices (NumPy + ``ast`` only at
+verification time; no mesh, no jit):
+
+  * ``verify``      — structural verifier over ``DistPlan`` / ``TreePlan``
+                      invariants (proper colorings, permutation rounds,
+                      slot routing, interior/boundary tiling, and an
+                      abstract replay of the round schedule that proves
+                      every halo slot is written exactly once before any
+                      boundary row reads it);
+  * ``verify.check_mesh_axes`` — plan-vs-mesh shape checking for the
+                      ``comm='hier'`` axis folding plus the per-level
+                      ppermute partner table, without real devices;
+  * ``lint``        — custom AST lint (rule ids REPRO001+) for the
+                      API-drift / determinism / host-sync bug classes
+                      that produced earlier PRs' bugfixes.
+
+``python -m repro.analysis`` is the CLI (``lint`` / ``verify`` /
+``partners`` subcommands); ``make lint`` and ``make verify-plans`` wrap
+it.  Plan builders run the verifier at build time under
+``REPRO_VALIDATE=1`` (on by default in the test suite via conftest).
+"""
+from .diagnostics import Diagnostic, PlanVerificationError, Report
+from .lint import LINT_RULES, lint_paths
+from .verify import (check_mesh_axes, partner_table, verify_partition,
+                     verify_plan)
+
+__all__ = [
+    "Diagnostic", "PlanVerificationError", "Report",
+    "verify_plan", "verify_partition", "check_mesh_axes", "partner_table",
+    "lint_paths", "LINT_RULES",
+]

@@ -1,0 +1,134 @@
+"""CLI for the static-analysis passes.
+
+  python -m repro.analysis lint src            # AST lint (REPRO0xx)
+  python -m repro.analysis verify              # plan verifier sweep
+  python -m repro.analysis verify --fanouts 2,2,2 --generator rgg_2d
+  python -m repro.analysis partners --fanouts 2,2   # ppermute table
+
+``verify`` builds real plans (flat, pod, and tree at each requested
+fanouts) over paper-family generators with a seeded random partition and
+runs every PLAN0xx/MESH0xx pass on them — no devices are touched; plan
+construction and verification are host-side NumPy.  Exit status is the
+number of violating subjects (0 = clean), so Make/CI can gate on it.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+
+def _parse_fanouts(s: str) -> tuple[int, ...]:
+    return tuple(int(x) for x in s.replace("x", ",").split(",") if x)
+
+
+def _build_subjects(gen_names, n, fanouts_list, seed):
+    """Yield (label, plan, mesh_sizes, axes) over the verify matrix."""
+    from repro.core.topology import canonical_ancestors
+    from repro.launch.mesh import tree_axis_names
+    from repro.sparse.distributed import build_plan, build_plan_tree
+    from repro.sparse.generators import GENERATORS
+
+    rng = np.random.default_rng(seed)
+    for gname in gen_names:
+        g = GENERATORS[gname](n, seed=seed)
+        nv = len(g.indptr) - 1
+        data = np.asarray(g.weights, dtype=np.float32)
+        for fanouts in fanouts_list:
+            k = int(np.prod(fanouts))
+            part = rng.integers(0, k, size=nv).astype(np.int64)
+            flat = build_plan(g.indptr, g.indices, data, part, k)
+            yield (f"{gname}/flat k={k}", flat, {"data": k}, ("data",))
+            if len(fanouts) > 1:
+                anc = canonical_ancestors(fanouts)
+                tree = build_plan_tree(g.indptr, g.indices, data, part,
+                                       anc, k)
+                axes = tree_axis_names(len(fanouts))
+                sizes = dict(zip(axes, fanouts))
+                yield (f"{gname}/tree {fanouts}", tree, sizes, axes)
+
+
+def _cmd_verify(args) -> int:
+    from . import check_mesh_axes, verify_plan
+
+    fanouts_list = ([_parse_fanouts(s) for s in args.fanouts]
+                    or [(4,), (2, 2), (2, 2, 2)])
+    failures = 0
+    for label, plan, sizes, axes in _build_subjects(
+            args.generator, args.n, fanouts_list, args.seed):
+        rep = verify_plan(plan)
+        mesh_rep = check_mesh_axes(plan, sizes, axes)
+        ok = rep.ok and mesh_rep.ok
+        failures += not ok
+        status = "OK" if ok else "FAIL"
+        print(f"[{status}] {label}: {rep.subject}")
+        for d in rep.diagnostics + mesh_rep.diagnostics:
+            print(f"    {d}")
+    print(f"verify: {failures} failing subject(s)")
+    return failures
+
+
+def _cmd_partners(args) -> int:
+    from . import partner_table
+    subjects = _build_subjects(args.generator[:1], args.n,
+                               [_parse_fanouts(args.fanouts)], args.seed)
+    for label, plan, _, _ in subjects:
+        table = partner_table(plan)
+        print(f"{label}:")
+        for lvl, rounds in table.items():
+            for c, pairs in enumerate(rounds):
+                print(f"  level {lvl} round {c}: "
+                      + " ".join(f"{a}->{b}" for a, b in pairs))
+    return 0
+
+
+def _cmd_lint(args) -> int:
+    from .lint import lint_paths
+    rep = lint_paths(args.paths)
+    for d in rep.diagnostics:
+        print(d)
+    print(f"lint: {len(rep.diagnostics)} finding(s) in "
+          f"{rep.info.get('files', 0)} file(s)")
+    return 1 if rep.diagnostics else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p_lint = sub.add_parser("lint", help="AST lint (REPRO0xx rules)")
+    p_lint.add_argument("paths", nargs="+",
+                        help="files or directories to lint")
+    p_lint.set_defaults(fn=_cmd_lint)
+
+    p_ver = sub.add_parser("verify",
+                           help="build + verify plans (PLAN/MESH0xx)")
+    p_ver.add_argument("--generator", action="append", default=None,
+                       help="generator name(s); default grid_2d + rgg_2d")
+    p_ver.add_argument("--n", type=int, default=196,
+                       help="approximate vertex count (default 196)")
+    p_ver.add_argument("--fanouts", action="append", default=[],
+                       help="fanouts like 2,2,2 (repeatable); default "
+                            "4 / 2,2 / 2,2,2")
+    p_ver.add_argument("--seed", type=int, default=0)
+    p_ver.set_defaults(fn=_cmd_verify)
+
+    p_par = sub.add_parser("partners",
+                           help="print the per-level ppermute partner "
+                                "table of a built plan")
+    p_par.add_argument("--generator", action="append", default=None)
+    p_par.add_argument("--n", type=int, default=64)
+    p_par.add_argument("--fanouts", default="2,2")
+    p_par.add_argument("--seed", type=int, default=0)
+    p_par.set_defaults(fn=_cmd_partners)
+
+    args = ap.parse_args(argv)
+    if getattr(args, "generator", None) is None and args.cmd != "lint":
+        args.generator = ["grid_2d", "rgg_2d"]
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,80 @@
+"""Structured diagnostics shared by the analysis passes.
+
+Every check emits :class:`Diagnostic` records (a stable ``code``, a
+human-readable message, and a machine-readable ``details`` dict) into a
+:class:`Report` instead of raising at the first failure, so one verifier
+run over a corrupted plan names *every* violated invariant — the mutation
+suite asserts on codes, the CLI prints them, and the build-time
+``validate=`` hook raises :class:`PlanVerificationError` carrying the
+whole report.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One violated invariant (or lint finding).
+
+    ``code`` is the stable identifier (``PLAN0xx`` for the plan verifier,
+    ``MESH0xx`` for the mesh/axis checker, ``REPRO0xx`` for the lint);
+    ``where`` locates it (a plan context like ``level 1 round 2`` or a
+    ``path:line`` for lint findings); ``details`` carries whatever small
+    arrays/scalars made the check fail, for programmatic consumers.
+    """
+
+    code: str
+    message: str
+    where: str = ""
+    details: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __str__(self) -> str:
+        loc = f" [{self.where}]" if self.where else ""
+        return f"{self.code}{loc}: {self.message}"
+
+
+@dataclasses.dataclass
+class Report:
+    """Outcome of one analysis pass over one subject."""
+
+    subject: str
+    diagnostics: list[Diagnostic] = dataclasses.field(default_factory=list)
+    # side-channel results (e.g. the per-level ppermute partner table)
+    info: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return not self.diagnostics
+
+    def add(self, code: str, message: str, where: str = "",
+            **details: Any) -> None:
+        self.diagnostics.append(Diagnostic(code=code, message=message,
+                                           where=where, details=details))
+
+    def codes(self) -> set[str]:
+        return {d.code for d in self.diagnostics}
+
+    def raise_for_errors(self) -> None:
+        if self.diagnostics:
+            raise PlanVerificationError(self)
+
+    def __str__(self) -> str:
+        if self.ok:
+            return f"{self.subject}: OK"
+        lines = [f"{self.subject}: {len(self.diagnostics)} violation(s)"]
+        lines += [f"  {d}" for d in self.diagnostics]
+        return "\n".join(lines)
+
+
+class PlanVerificationError(ValueError):
+    """A plan (or partition) failed structural verification.
+
+    Subclasses ``ValueError`` so existing callers treating bad plan inputs
+    as value errors keep working; ``.report`` carries the diagnostics.
+    """
+
+    def __init__(self, report: Report):
+        self.report = report
+        super().__init__(str(report))

@@ -21,6 +21,11 @@ the moving pieces directly.  Rules for new code:
      directly — use :func:`shard_map`.
   3. Never call ``jax.sharding.get_abstract_mesh`` directly — use
      :func:`get_ambient_mesh` (returns ``None`` when no mesh is ambient).
+  4. Never import from ``jax.sharding`` at all outside this module — the
+     stable names (``Mesh``, ``PartitionSpec``/``P``, ``NamedSharding``)
+     are re-exported here so every sharding symbol has one import path.
+     Lint rule REPRO001 (``repro.analysis.lint``) enforces this; this
+     module is the single allowlisted file.
 
 The shims are resolved once at import time; there is no per-call overhead
 beyond one extra Python frame.
@@ -35,6 +40,14 @@ import jax
 
 JAX_VERSION: tuple[int, ...] = tuple(
     int(p) for p in jax.__version__.split(".")[:3] if p.isdigit())
+
+# Stable re-exports: these classes have kept their names across the
+# supported versions, but importing them from one place keeps the rest of
+# the tree free of `jax.sharding` (REPRO001) so the next rename lands here.
+Mesh = jax.sharding.Mesh
+PartitionSpec = jax.sharding.PartitionSpec
+P = PartitionSpec
+NamedSharding = jax.sharding.NamedSharding
 
 # Partial-manual shard_map (manual over a subset of mesh axes) only works
 # where it is a first-class API (jax.shard_map with axis_names); the 0.4.x
@@ -216,5 +229,6 @@ def get_ambient_mesh() -> Any | None:
     return mesh
 
 
-__all__ = ["JAX_VERSION", "shard_map", "use_mesh", "get_ambient_mesh",
+__all__ = ["JAX_VERSION", "Mesh", "PartitionSpec", "P", "NamedSharding",
+           "shard_map", "use_mesh", "get_ambient_mesh",
            "manual_axis_names", "constrain_to_mesh"]

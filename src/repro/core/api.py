@@ -36,6 +36,7 @@ ancestor table the tree runtime consumes directly
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 
 import numpy as np
@@ -270,10 +271,24 @@ def _infer_fanouts(anc: np.ndarray, k: int) -> tuple[int, ...]:
     return tuple(fanouts)
 
 
+def _maybe_verify_partition(res: "HierPartition", n: int,
+                            validate: bool | None) -> "HierPartition":
+    """Structural verification of a partition result (``repro.analysis``
+    PART0xx).  ``validate=None`` defers to ``REPRO_VALIDATE`` (on by
+    default in the test suite via conftest)."""
+    if validate is None:
+        validate = os.environ.get("REPRO_VALIDATE", "0") not in ("", "0")
+    if validate:
+        from ..analysis import verify_partition  # lazy: keep import acyclic
+        verify_partition(res, n).raise_for_errors()
+    return res
+
+
 def partition_tree(g: Graph, topo: Topology, method: str = "geoRef",
                    fanouts=None, tree=None, tw: np.ndarray | None = None,
                    seed: int = 0, eps: float = 0.03, lams=None,
-                   refine: bool = True, **kw) -> HierPartition:
+                   refine: bool = True, validate: bool | None = None,
+                   **kw) -> HierPartition:
     """Tree-aware recursive pipeline (the tentpole of the tree runtime):
 
       A. the load is water-filled over the current level's subtree
@@ -338,10 +353,12 @@ def partition_tree(g: Graph, topo: Topology, method: str = "geoRef",
             tw = target_block_sizes(g.n, topo)
         part = _dispatch(g, method, tw, topo.memories, topo.fanouts, seed,
                          eps, **kw)
-        return HierPartition(part=part, tw=tw,
-                             pod_of=np.zeros(topo.k, dtype=np.int64),
-                             lam=lam, anc=np.zeros((0, topo.k), np.int64),
-                             lams=(lams[0],), fanouts=(topo.k,))
+        return _maybe_verify_partition(
+            HierPartition(part=part, tw=tw,
+                          pod_of=np.zeros(topo.k, dtype=np.int64),
+                          lam=lam, anc=np.zeros((0, topo.k), np.int64),
+                          lams=(lams[0],), fanouts=(topo.k,)),
+            g.n, validate)
 
     # A/B. recurse down the tree: water-fill the level's aggregates, then
     # partition at that granularity and descend into each subtree
@@ -390,8 +407,9 @@ def partition_tree(g: Graph, topo: Topology, method: str = "geoRef",
         # D. vertex-level FM against the weighted tree objective
         part = refine_partition(g, part, tw, mems=mems, eps=eps,
                                 anc=anc, lams=lams)
-    return HierPartition(part=part, tw=tw, pod_of=anc[0], lam=lam,
-                         anc=anc, lams=lams, fanouts=fanouts)
+    return _maybe_verify_partition(
+        HierPartition(part=part, tw=tw, pod_of=anc[0], lam=lam,
+                      anc=anc, lams=lams, fanouts=fanouts), g.n, validate)
 
 
 def partition_hier(g: Graph, topo: Topology, method: str = "geoRef",

@@ -27,9 +27,7 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from ..compat import use_mesh
+from ..compat import NamedSharding, P, use_mesh
 from ..configs.registry import ARCHS, get_config
 from ..configs.shapes import SHAPES, applicable
 from ..models import encdec, transformer
@@ -351,7 +349,16 @@ def main():
         try:
             rec = lower_cell(arch, shape, multi_pod=args.multi_pod,
                              skip_cost=args.skip_cost)
-        except Exception:
+        # what lower_cell can actually raise: bad arch/shape config keys
+        # (KeyError/ValueError), spec/rank mismatches in the model code
+        # (TypeError/ValueError), partial-manual shard_map gaps on old JAX
+        # (NotImplementedError), and XLA lowering/compile failures
+        # (XlaRuntimeError subclasses RuntimeError on all supported
+        # versions).  Anything else — MemoryError, KeyboardInterrupt,
+        # genuine bugs — should crash the sweep, not be recorded as a
+        # per-cell failure (REPRO002).
+        except (KeyError, ValueError, TypeError, NotImplementedError,
+                RuntimeError):
             failures += 1
             rec = {"arch": arch, "shape": shape,
                    "error": traceback.format_exc()}

@@ -9,6 +9,8 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from ..compat import Mesh
+
 
 def tree_axis_names(h: int) -> tuple[str, ...]:
     """Axis names for a depth-``h`` tree mesh, outermost first: the
@@ -62,7 +64,7 @@ def make_test_mesh(k: int = 8, axes: tuple[str, ...] = ("data",),
         fanouts = tuple(int(f) for f in fanouts)
         if int(np.prod(fanouts)) != k:
             raise ValueError(f"prod(fanouts)={np.prod(fanouts)} != k={k}")
-        return jax.sharding.Mesh(np.array(devs).reshape(fanouts),
+        return Mesh(np.array(devs).reshape(fanouts),
                                  tree_axis_names(len(fanouts)))
     if pods is not None:
         if axes != ("data",):
@@ -70,10 +72,10 @@ def make_test_mesh(k: int = 8, axes: tuple[str, ...] = ("data",),
                              f"drop axes={axes!r}")
         if pods <= 0 or k % pods:
             raise ValueError(f"pods={pods} must divide k={k}")
-        return jax.sharding.Mesh(np.array(devs).reshape(pods, k // pods),
+        return Mesh(np.array(devs).reshape(pods, k // pods),
                                  ("pod", "pu"))
     shape = (k,) if len(axes) == 1 else None
-    return jax.sharding.Mesh(np.array(devs).reshape(
+    return Mesh(np.array(devs).reshape(
         shape or (k // 2, 2)), axes)
 
 

@@ -15,7 +15,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
+from ..compat import P
 
 # -- logical axis rules ------------------------------------------------------
 # mesh axes: ("pod",) "data", "model".  FSDP shards the embed/d_model axis of

@@ -9,9 +9,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from ..compat import get_ambient_mesh, shard_map
+from ..compat import P, get_ambient_mesh, shard_map
 from .common import ParamCollector, maybe_constrain
 
 

@@ -17,8 +17,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
-
+from ..compat import P
 from . import costmode
 from .attention import (attn_decode, attn_forward, attn_prefill,
                         init_attention)

@@ -65,14 +65,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
-
-from ..compat import shard_map
+from ..compat import Mesh, P, shard_map
 from ..core.refinement import vizing_edge_coloring
 from .cg import cg_solve, jacobi_preconditioner
 
@@ -417,12 +416,31 @@ def _halo_recv_v_pairs(part: np.ndarray, psrc: np.ndarray, dst: np.ndarray,
     return flat[np.argsort(flat // n, kind="stable")], ext_keys
 
 
+def _maybe_verify(plan, validate):
+    """Run the structural verifier on a freshly built plan.
+
+    ``validate=None`` defers to the ``REPRO_VALIDATE`` env var (the test
+    suite turns it on via conftest; production builds skip the pass unless
+    asked).  Raises ``analysis.PlanVerificationError`` (a ``ValueError``)
+    with every violated invariant when the plan is corrupt.
+    """
+    if validate is None:
+        validate = os.environ.get("REPRO_VALIDATE", "0") not in ("", "0")
+    if validate:
+        from ..analysis import verify_plan      # lazy: keep import acyclic
+        verify_plan(plan).raise_for_errors()
+    return plan
+
+
 def build_plan(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
-               part: np.ndarray, k: int) -> DistPlan:
+               part: np.ndarray, k: int,
+               validate: bool | None = None) -> DistPlan:
     """Build the distributed plan for matrix (CSR) + partition — vectorized.
 
     O(nnz log nnz) in NumPy kernels (the log from sorts); no Python
-    iteration over vertices, edges, or halo slots.
+    iteration over vertices, edges, or halo slots.  ``validate=`` runs the
+    ``repro.analysis`` structural verifier on the result (default: the
+    ``REPRO_VALIDATE`` env var).
     """
     n = len(indptr) - 1
     part = np.ascontiguousarray(part, dtype=np.int32)
@@ -514,7 +532,7 @@ def build_plan(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
     bnd_row = split.pop("_bnd_row")
     interior_mask = row_mask * ~bnd_row
 
-    return DistPlan(
+    return _maybe_verify(DistPlan(
         k=k, B=B, S=S, n_rounds=n_rounds, n=n, perm=perm, block_of=block_of,
         sizes=sizes,
         rows=jnp.asarray(rows_a), cols=jnp.asarray(cols_a),
@@ -523,7 +541,7 @@ def build_plan(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
         round_perms=tuple(tuple(r) for r in round_perms),
         interior_mask=jnp.asarray(interior_mask), **split,
         _pack_blk=own, _pack_pos=pos_edge, _pack_dst=dst,
-    )
+    ), validate)
 
 
 def build_plan_reference(indptr: np.ndarray, indices: np.ndarray,
@@ -892,7 +910,8 @@ def _derive_tree_fields(rows_a: np.ndarray, cols_a: np.ndarray,
 
 def build_plan_tree(indptr: np.ndarray, indices: np.ndarray,
                     data: np.ndarray, part: np.ndarray,
-                    tree, k: int, fanouts=None) -> TreePlan:
+                    tree, k: int, fanouts=None,
+                    validate: bool | None = None) -> TreePlan:
     """Build the arbitrary-depth distributed plan for a tree mesh.
 
     ``tree`` is anything ``core.topology.normalize_tree_of`` accepts: a
@@ -1008,7 +1027,7 @@ def build_plan_tree(indptr: np.ndarray, indices: np.ndarray,
     bnd_row = split.pop("_bnd_row")
     interior_mask = row_mask * ~bnd_row
 
-    return TreePlan(
+    return _maybe_verify(TreePlan(
         k=k, B=B, S=max(S_lvl), n_rounds=sum(R_lvl), n=n, perm=perm,
         block_of=block_of, sizes=sizes,
         rows=jnp.asarray(rows_a), cols=jnp.asarray(cols_a),
@@ -1021,12 +1040,12 @@ def build_plan_tree(indptr: np.ndarray, indices: np.ndarray,
         send_mask_lvl=tuple(jnp.asarray(a) for a in sm_lvl),
         round_perms_lvl=tuple(perms_lvl),
         _pack_blk=own, _pack_pos=pos_edge, _pack_dst=dst,
-    )
+    ), validate)
 
 
 def build_plan_hier(indptr: np.ndarray, indices: np.ndarray,
                     data: np.ndarray, part: np.ndarray,
-                    pods, k: int) -> TreePlan:
+                    pods, k: int, validate: bool | None = None) -> TreePlan:
     """Build the two-level distributed plan for a multi-pod mesh — the
     ``h == 2`` instance of :func:`build_plan_tree` (kept as the PR 3-4
     API).
@@ -1045,7 +1064,7 @@ def build_plan_hier(indptr: np.ndarray, indices: np.ndarray,
     # one validation definition shared with the partitioner side
     pod_of_block = normalize_pod_of(pods, k)
     return build_plan_tree(indptr, indices, data, part,
-                           pod_of_block[None, :], k)
+                           pod_of_block[None, :], k, validate=validate)
 
 
 # --------------------------------------------------------------------------
@@ -1097,25 +1116,14 @@ def _validate_tree_axes(plan: "TreePlan", mesh: Mesh, axis) -> None:
     indices, so the *product of those axis sizes* must equal the plan's
     level-``l`` suffix size ``prod(fanouts[h-1-l:])`` — an axis tuple
     that merely has enough entries but the wrong shape would deliver
-    halo words to the wrong devices silently."""
-    axes = tuple(axis)
-    sizes = dict(mesh.shape)
-    missing = [a for a in axes if a not in sizes]
-    if missing:
-        raise ValueError(f"axis names {missing} not in mesh axes "
-                         f"{tuple(mesh.axis_names)}")
-    h = plan.h
-    suffix = 1
-    for l in range(h):
-        suffix *= plan.fanouts[h - 1 - l]
-        mesh_suffix = int(np.prod([sizes[a] for a in axes[h - 1 - l:]]))
-        if mesh_suffix != suffix:
-            raise ValueError(
-                f"mesh axes {axes[h - 1 - l:]} have {mesh_suffix} devices "
-                f"but tree level {l} of the {plan.fanouts} plan spans "
-                f"{suffix} — the mesh shape must match the plan's "
-                f"fanouts suffix per level (extra leading axes fold into "
-                f"the outermost level only)")
+    halo words to the wrong devices silently.
+
+    Delegates to the reusable ``repro.analysis.check_mesh_axes`` pass
+    (MESH0xx diagnostics) and raises ``ValueError`` on any violation, the
+    historical contract of this hook.
+    """
+    from ..analysis import check_mesh_axes      # lazy: keep import acyclic
+    check_mesh_axes(plan, mesh, tuple(axis)).raise_for_errors()
 
 
 def _local_matvec_builder(plan: DistPlan, comm: str, axis: str,

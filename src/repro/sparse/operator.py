@@ -209,7 +209,7 @@ class DistributedOperator:
     def from_csr(cls, indptr, indices, data, part, k, mesh,
                  axis: str | tuple = "pu", comm: str = "halo",
                  local_format: str = "coo", pods=None, fanouts=None,
-                 tree=None):
+                 tree=None, validate: bool | None = None):
         """``comm='hier'`` builds the hierarchical plan — ``pods`` (pod
         count or explicit (k,) pod-of-block array) for the two-level
         instance, ``fanouts``/``tree`` ((k_1, ..., k_h) tuple / explicit
@@ -229,14 +229,15 @@ class DistributedOperator:
                 raise ValueError("pass either pods= or tree=, not both")
             plan = build_plan_tree(indptr, indices, data, part,
                                    pods if pods is not None else tree,
-                                   k, fanouts=fanouts)
+                                   k, fanouts=fanouts, validate=validate)
             if axis == "pu":                    # default -> full mesh tuple
                 axis = tuple(mesh.axis_names)
         else:
             if pods is not None or fanouts is not None or tree is not None:
                 raise ValueError("pods=/fanouts=/tree= only apply to "
                                  "comm='hier'")
-            plan = build_plan(indptr, indices, data, part, k)
+            plan = build_plan(indptr, indices, data, part, k,
+                              validate=validate)
         return cls(plan=plan, mesh=mesh, axis=axis, comm=comm,
                    local_format=local_format)
 

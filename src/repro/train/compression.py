@@ -48,7 +48,7 @@ def podwise_value_and_grad(loss_fn, mesh, batch_specs, *,
     batch_specs: dict of PartitionSpecs for the batch *restricted to the
     pod axis* (other axes are auto).  Params are replicated across pods.
     """
-    from jax.sharding import PartitionSpec as P
+    from ..compat import P
 
     def pod_spec(spec):
         # keep only the 'pod' component of each dim spec

@@ -9,12 +9,19 @@ to run the property-based suites too.
 On CI (``CI`` set, as GitHub Actions does) the escape hatch is a hard
 error instead: the property-based modules must actually execute there,
 never silently skip.
+
+The whole suite also runs with build-time plan verification on
+(``REPRO_VALIDATE=1`` unless the caller already set it): every plan any
+test builds goes through the ``repro.analysis`` structural verifier, so
+the existing test matrix doubles as the verifier's clean corpus.
 """
 import importlib.util
 import os
 import pathlib
 import re
 import warnings
+
+os.environ.setdefault("REPRO_VALIDATE", "1")
 
 collect_ignore = []
 

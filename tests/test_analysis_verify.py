@@ -1,0 +1,312 @@
+"""Deterministic mutation suite for the ``repro.analysis`` plan verifier.
+
+Every corruption class from the ISSUE acceptance list gets a seeded
+instance: a valid plan is built, one field is corrupted, and the verifier
+must name the violated invariant (by diagnostic code).  Clean plans of
+every builder must verify with zero diagnostics — the suite-wide
+``REPRO_VALIDATE=1`` (conftest) already re-checks every other test's
+plans at build time.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.analysis import (PlanVerificationError, check_mesh_axes,
+                            partner_table, verify_partition, verify_plan)
+from repro.sparse.distributed import (build_plan, build_plan_hier,
+                                      build_plan_reference, build_plan_tree)
+from repro.sparse.generators import grid
+from repro.sparse.graph import laplacian_csr
+
+
+@pytest.fixture(scope="module")
+def system():
+    g = grid((12, 12))
+    indptr, indices, data = laplacian_csr(g, shift=1e-2)
+    part = np.random.default_rng(3).integers(0, 8, g.n).astype(np.int64)
+    return indptr, indices, data, part
+
+
+@pytest.fixture(scope="module")
+def tree_plan(system):
+    indptr, indices, data, part = system
+    return build_plan_tree(indptr, indices, data, part, None, 8,
+                           fanouts=(2, 2, 2), validate=False)
+
+
+@pytest.fixture(scope="module")
+def flat_plan(system):
+    indptr, indices, data, part = system
+    return build_plan(indptr, indices, data, part, 8, validate=False)
+
+
+def test_clean_plans_verify(system, tree_plan, flat_plan):
+    indptr, indices, data, part = system
+    for plan in (flat_plan, tree_plan,
+                 build_plan_reference(indptr, indices, data, part, 8),
+                 build_plan_hier(indptr, indices, data, part, 2, 8,
+                                 validate=False)):
+        rep = verify_plan(plan)
+        assert rep.ok, str(rep)
+
+
+def test_raise_for_errors_carries_report(flat_plan):
+    bad = dataclasses.replace(flat_plan, n=flat_plan.n + 1)
+    rep = verify_plan(bad)
+    assert "PLAN001" in rep.codes()
+    with pytest.raises(PlanVerificationError) as ei:
+        rep.raise_for_errors()
+    assert ei.value.report is rep
+    assert isinstance(ei.value, ValueError)      # historical contract
+
+
+def test_perm_corruption_is_plan001(flat_plan):
+    perm = np.asarray(flat_plan.perm).copy()
+    perm[0] = perm[1]                            # no longer injective
+    rep = verify_plan(dataclasses.replace(flat_plan, perm=perm))
+    assert "PLAN001" in rep.codes()
+
+
+def test_dropped_level_is_plan002(tree_plan):
+    rep = verify_plan(dataclasses.replace(tree_plan,
+                                          S_lvl=tree_plan.S_lvl[:-1]))
+    assert "PLAN002" in rep.codes()
+
+
+def test_grown_slot_width_is_plan002(tree_plan):
+    s = list(tree_plan.S_lvl)
+    s[-1] += 1                                   # arrays no longer match
+    rep = verify_plan(dataclasses.replace(tree_plan, S_lvl=tuple(s)))
+    assert "PLAN002" in rep.codes()
+
+
+def _level_with_rounds(plan, r_min=2):
+    for l in range(plan.h):
+        if plan.n_rounds_lvl[l] >= r_min:
+            return l
+    pytest.skip(f"no level with >= {r_min} rounds in this instance")
+
+
+def test_merged_colors_are_plan003_or_plan004(tree_plan):
+    l = _level_with_rounds(tree_plan)
+    perms = [list(r) for r in tree_plan.round_perms_lvl[l]]
+    # put round 1's pairs into round 0: some node now talks twice in one
+    # round — flagged as an improper coloring (PLAN003) or, equivalently,
+    # as a broken permutation (PLAN004: the node is a duplicate src/dst)
+    merged = perms[0] + perms[1]
+    nodes = [p for pr in perms[0] for p in pr]
+    assert any(p in nodes for pr in perms[1] for p in pr)
+    new_lvl = list(tree_plan.round_perms_lvl)
+    new_lvl[l] = tuple([tuple(merged)] + [tuple(r) for r in perms[1:]])
+    rep = verify_plan(dataclasses.replace(
+        tree_plan, round_perms_lvl=tuple(new_lvl)))
+    assert rep.codes() & {"PLAN003", "PLAN004"}
+
+
+def test_cycle_round_is_plan003(flat_plan):
+    # a directed 3-cycle is a true permutation (each node one src, one
+    # dst) but NOT a matching: only the proper-coloring check catches it
+    perms = [list(r) for r in flat_plan.round_perms]
+    c = next(i for i, r in enumerate(perms) if r)
+    perms[c] = [(0, 1), (1, 2), (2, 0)]
+    rep = verify_plan(dataclasses.replace(
+        flat_plan, round_perms=tuple(tuple(r) for r in perms)))
+    assert "PLAN003" in rep.codes()
+
+
+def test_one_directional_pair_is_plan003(flat_plan):
+    perms = [list(r) for r in flat_plan.round_perms]
+    c = next(i for i, r in enumerate(perms) if r)
+    perms[c] = perms[c][:-1]                     # drop one direction
+    rep = verify_plan(dataclasses.replace(
+        flat_plan, round_perms=tuple(tuple(r) for r in perms)))
+    assert "PLAN003" in rep.codes()
+
+
+def test_duplicate_destination_is_plan004_and_races_plan006(flat_plan):
+    perms = [list(r) for r in flat_plan.round_perms]
+    c = next(i for i, r in enumerate(perms) if r)
+    a, b = perms[c][0]
+    perms[c] = perms[c] + [(a, b)]               # same src AND same dst
+    rep = verify_plan(dataclasses.replace(
+        flat_plan, round_perms=tuple(tuple(r) for r in perms)))
+    assert "PLAN004" in rep.codes()
+
+
+def test_permuted_rounds_are_plan009(flat_plan):
+    # swap two round permutations while keeping the send schedule: every
+    # slot is still written exactly once, but holds the wrong vertex
+    perms = [list(r) for r in flat_plan.round_perms]
+    full = [i for i, r in enumerate(perms) if r]
+    assert len(full) >= 2
+    i, j = full[0], full[1]
+    assert set(perms[i]) != set(perms[j])
+    perms[i], perms[j] = perms[j], perms[i]
+    rep = verify_plan(dataclasses.replace(
+        flat_plan, round_perms=tuple(tuple(r) for r in perms)))
+    assert not rep.ok
+    assert rep.codes() & {"PLAN009", "PLAN006", "PLAN007"}
+
+
+def test_ghost_row_send_is_plan005(tree_plan):
+    sizes = np.asarray(tree_plan.sizes)
+    for l in range(tree_plan.h):
+        mask = np.asarray(tree_plan.send_mask_lvl[l])
+        live = np.argwhere(mask > 0)
+        if len(live):
+            b, c, s = live[0]
+            idx = np.asarray(tree_plan.send_idx_lvl[l]).copy()
+            idx[b, c, s] = sizes[b]              # first ghost row
+            si = list(tree_plan.send_idx_lvl)
+            si[l] = idx
+            rep = verify_plan(dataclasses.replace(
+                tree_plan, send_idx_lvl=tuple(si)))
+            assert "PLAN005" in rep.codes()
+            return
+    pytest.skip("no live send entries")
+
+
+def test_aliased_slot_is_plan009(flat_plan):
+    cols = np.asarray(flat_plan.cols).copy()
+    nnz = np.asarray(flat_plan.nnz_blk)
+    B = flat_plan.B
+    for b in range(flat_plan.k):
+        ext = np.flatnonzero(cols[b, :nnz[b]] >= B)
+        two = np.unique(cols[b, ext])
+        if len(two) >= 2:
+            # point one boundary edge at another (written) slot
+            e = ext[cols[b, ext] == two[0]][0]
+            cols[b, e] = two[1]
+            rep = verify_plan(dataclasses.replace(flat_plan, cols=cols))
+            assert "PLAN009" in rep.codes()
+            return
+    pytest.skip("no block reads two distinct halo slots")
+
+
+def test_unwritten_slot_read_is_plan007(flat_plan):
+    cols = np.asarray(flat_plan.cols).copy()
+    nnz = np.asarray(flat_plan.nnz_blk)
+    ext_len = flat_plan.B + flat_plan.n_rounds * flat_plan.S
+    b = int(np.argmax(nnz))
+    cols[b, 0] = ext_len - 1                     # last slot of last round
+    # ensure it's genuinely unwritten for this block: pad rounds exist
+    # whenever some pair has fewer halo words than S
+    from repro.analysis.verify import _level_offsets, _levels_of, _replay
+    from repro.analysis.diagnostics import Report
+    r = Report(subject="probe")
+    levels = _levels_of(flat_plan, r)
+    _, writes = _replay(flat_plan, levels, _level_offsets(flat_plan, levels),
+                        r)
+    if writes[b, ext_len - 1] != 0:
+        pytest.skip("every slot of this block is written")
+    rep = verify_plan(dataclasses.replace(flat_plan, cols=cols))
+    assert "PLAN007" in rep.codes()
+
+
+def test_segment_ordering_violation_is_plan007(tree_plan):
+    offs = tree_plan.level_offsets()
+    vals0 = np.asarray(tree_plan.vals_bnd_lvl[0])
+    live = np.argwhere(vals0 != 0)
+    if not len(live):
+        pytest.skip("level 0 has no boundary edges")
+    b, e = live[0]
+    cols0 = np.asarray(tree_plan.cols_bnd_lvl[0]).copy()
+    cols0[b, e] = offs[-1] - 1                   # slower level's slot range
+    cb = list(tree_plan.cols_bnd_lvl)
+    cb[0] = cols0
+    rep = verify_plan(dataclasses.replace(tree_plan,
+                                          cols_bnd_lvl=tuple(cb)))
+    assert "PLAN007" in rep.codes()
+
+
+def test_segment_multiset_mismatch_is_plan008(tree_plan):
+    for l in range(tree_plan.h):
+        vals = np.asarray(tree_plan.vals_bnd_lvl[l])
+        live = np.argwhere(vals != 0)
+        if len(live):
+            b, e = live[0]
+            v = vals.copy()
+            v[b, e] += 1.0                       # value no longer matches
+            vb = list(tree_plan.vals_bnd_lvl)
+            vb[l] = v
+            rep = verify_plan(dataclasses.replace(
+                tree_plan, vals_bnd_lvl=tuple(vb)))
+            assert "PLAN008" in rep.codes()
+            return
+    pytest.skip("no boundary edges at any level")
+
+
+def test_interior_mask_corruption_is_plan008(flat_plan):
+    m = np.asarray(flat_plan.interior_mask).copy()
+    m[0, 0] = 1.0 - m[0, 0]
+    rep = verify_plan(dataclasses.replace(flat_plan, interior_mask=m))
+    assert "PLAN008" in rep.codes()
+
+
+# ---- mesh/axis checker ----------------------------------------------------
+
+def test_mesh_axes_clean_and_partner_table(tree_plan):
+    rep = check_mesh_axes(tree_plan, {"pod": 2, "host": 2, "pu": 2},
+                          ("pod", "host", "pu"))
+    assert rep.ok, str(rep)
+    table = rep.info["partner_table"]
+    assert set(table) == set(range(tree_plan.h))
+    k = tree_plan.k
+    for l, rounds in table.items():
+        assert len(rounds) == tree_plan.n_rounds_lvl[l]
+        for pairs in rounds:
+            assert all(0 <= a < k and 0 <= b < k for a, b in pairs)
+            # device-level delivery is still a permutation
+            dsts = [b for _, b in pairs]
+            assert len(set(dsts)) == len(dsts)
+
+
+def test_mesh_axes_shape_mismatch_is_mesh002(tree_plan):
+    rep = check_mesh_axes(tree_plan, {"pod": 1, "host": 2, "pu": 4},
+                          ("pod", "host", "pu"))
+    assert "MESH002" in rep.codes()
+
+
+def test_mesh_axes_unknown_axis_is_mesh001(tree_plan):
+    rep = check_mesh_axes(tree_plan, {"pod": 2, "pu": 2}, ("pod", "nope"))
+    assert "MESH001" in rep.codes()
+
+
+def test_mesh_axes_flat_span_is_mesh003(flat_plan):
+    assert check_mesh_axes(flat_plan, {"data": 8}, ("data",)).ok
+    rep = check_mesh_axes(flat_plan, {"data": 4}, ("data",))
+    assert "MESH003" in rep.codes()
+
+
+def test_mesh_axes_too_few_axes_is_mesh004(tree_plan):
+    rep = check_mesh_axes(tree_plan, {"pod": 2, "pu": 4}, ("pod", "pu"))
+    assert rep.codes() <= {"MESH002", "MESH004"} and not rep.ok
+
+
+def test_partner_table_flat_matches_round_perms(flat_plan):
+    table = partner_table(flat_plan)
+    assert set(table) == {0}
+    for c, pairs in enumerate(table[0]):
+        assert sorted(pairs) == sorted(flat_plan.round_perms[c])
+
+
+# ---- partition verifier ---------------------------------------------------
+
+def test_partition_verifies_clean_and_catches_broken_nesting():
+    from repro.core.api import partition_tree
+    from repro.core.topology import Topology
+    g = grid((12, 12))
+    topo = Topology.homogeneous(8, memory=2.0 * g.n / 8,
+                                fanouts=(2, 2, 2))
+    res = partition_tree(g, topo, fanouts=(2, 2, 2), validate=True)
+    assert verify_partition(res, g.n).ok
+    bad_anc = res.anc.copy()
+    bad_anc[0, 0] = 1 - bad_anc[0, 0]            # unequal / broken nesting
+    bad = dataclasses.replace(res, anc=bad_anc)
+    rep = verify_partition(bad, g.n)
+    assert "PART002" in rep.codes()
+    part = res.part.copy()
+    part[0] = 8                                  # out of range
+    rep = verify_partition(dataclasses.replace(res, part=part), g.n)
+    assert "PART001" in rep.codes()
