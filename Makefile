@@ -5,7 +5,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test tier1 deps lint verify-plans bench-cg bench bench-hier \
-        bench-pod bench-tree
+        bench-pod bench-tree bench-serve
 
 deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -45,6 +45,12 @@ bench-pod:
 # tree-aware vs oblivious partitions of the same mesh (ISSUE 5)
 bench-tree:
 	$(PYTHON) -m benchmarks.bench_cg --tree
+
+# Solver serving: cold vs cache-hit latency, solves/sec, batched-vs-
+# sequential agreement across coo/dist_halo/dist_hier (ISSUE 7); writes
+# the tracked benchmarks/baselines/BENCH_serve.json
+bench-serve:
+	$(PYTHON) -m benchmarks.bench_serve
 
 bench:
 	$(PYTHON) -m benchmarks.run

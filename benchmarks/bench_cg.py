@@ -29,7 +29,6 @@ import subprocess
 import sys
 import textwrap
 import time
-from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
@@ -43,7 +42,7 @@ from repro.sparse.generators import grid, rdg
 from repro.sparse.graph import laplacian_csr
 from repro.sparse.spmv import csr_to_padded_coo, spmv_coo
 
-from .common import row
+from .common import row, write_bench_json as _write_bench_json
 
 DIST_SCRIPT = textwrap.dedent("""
     import os
@@ -295,16 +294,6 @@ TREE_SCRIPT = textwrap.dedent("""
         np.abs(xa - xb_).max() / np.abs(xa).max())
     print(json.dumps(out))
 """)
-
-
-def _write_bench_json(name: str, payload: dict) -> None:
-    """``BENCH_<name>.json`` in the CWD — the machine-readable counterpart
-    of the CSV rows (rounds, comm volumes, agreement, wall time), so the
-    perf trajectory is diffable across PRs.  ``raw`` carries the full
-    subprocess record for anything the headline keys don't surface."""
-    path = Path(f"BENCH_{name}.json")
-    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
-    print(f"# wrote {path}", file=sys.stderr, flush=True)
 
 
 def _bench_tree(rows: list[str]) -> None:

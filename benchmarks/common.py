@@ -1,8 +1,25 @@
-"""Shared benchmark utilities — timing + CSV row emission."""
+"""Shared benchmark utilities — timing, CSV row emission, and the tracked
+JSON baseline writer."""
 from __future__ import annotations
 
+import json
+import sys
 import time
+from pathlib import Path
 from typing import Callable
+
+BASELINES = Path(__file__).resolve().parent / "baselines"
+
+
+def write_bench_json(name: str, payload: dict) -> None:
+    """``benchmarks/baselines/BENCH_<name>.json`` — the machine-readable
+    counterpart of the CSV rows, committed per PR so the perf trajectory
+    is diffable across the git history (the repo root's ``BENCH_*.json``
+    scratch outputs stay ignored)."""
+    BASELINES.mkdir(exist_ok=True)
+    path = BASELINES / f"BENCH_{name}.json"
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {path}", file=sys.stderr, flush=True)
 
 
 def time_us(fn: Callable, *args, reps: int = 5, warmup: int = 1) -> float:

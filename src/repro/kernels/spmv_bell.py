@@ -39,13 +39,17 @@ def csr_to_block_ell(indptr: np.ndarray, indices: np.ndarray,
     """Convert CSR to block-ELL.
 
     Returns (blocks, cols, meta) where
-      blocks: (S, NNZB, BM, BK) float32 — dense blocks per stripe
+      blocks: (S, NNZB, BM, BK) — dense blocks per stripe, in the dtype
+              of ``data`` (float dtypes preserved, else float32)
       cols:   (S, NNZB) int32 — column-panel index of each block
       meta:   dict(n=n, bm=bm, bk=bk, fill=fraction of nonzero cells kept)
     If nnzb is None it is set to the max #panels touched by any stripe
     (lossless).  Smaller nnzb drops the sparsest panels (lossy — for
     preconditioner-style use; tests use lossless).
     """
+    data = np.asarray(data)
+    vdt = data.dtype if np.issubdtype(data.dtype, np.floating) \
+        else np.float32
     S = -(-n // bm)
     P = -(-n // bk)
     per_stripe: list[dict[int, np.ndarray]] = [dict() for _ in range(S)]
@@ -56,13 +60,13 @@ def csr_to_block_ell(indptr: np.ndarray, indices: np.ndarray,
             p = int(j) // bk
             blk = per_stripe[s].get(p)
             if blk is None:
-                blk = np.zeros((bm, bk), dtype=np.float32)
+                blk = np.zeros((bm, bk), dtype=vdt)
                 per_stripe[s][p] = blk
             blk[i % bm, int(j) % bk] += v
     max_panels = max((len(d) for d in per_stripe), default=1) or 1
     if nnzb is None:
         nnzb = max_panels
-    blocks = np.zeros((S, nnzb, bm, bk), dtype=np.float32)
+    blocks = np.zeros((S, nnzb, bm, bk), dtype=vdt)
     cols = np.zeros((S, nnzb), dtype=np.int32)
     kept = total = 0
     for s, panels in enumerate(per_stripe):
@@ -98,7 +102,9 @@ def padded_coo_to_block_ell(rows: np.ndarray, cols: np.ndarray,
     """
     rows = np.asarray(rows).ravel()
     cols = np.asarray(cols).ravel()
-    vals = np.asarray(vals, dtype=np.float32).ravel()
+    vals = np.asarray(vals).ravel()
+    if not np.issubdtype(vals.dtype, np.floating):
+        vals = vals.astype(np.float32)
     live = vals != 0
     rows, cols, vals = rows[live], cols[live], vals[live]
     S = max(-(-n // bm), 1)
@@ -117,7 +123,7 @@ def padded_coo_to_block_ell(rows: np.ndarray, cols: np.ndarray,
     # by (stripe, panel), so the slot is the rank inside the stripe group
     grp_start = np.repeat(np.cumsum(per_stripe) - per_stripe, per_stripe)
     slot = (np.arange(len(uniq)) - grp_start).astype(np.int64)
-    blocks = np.zeros((S, nnzb, bm, bk), dtype=np.float32)
+    blocks = np.zeros((S, nnzb, bm, bk), dtype=vals.dtype)
     colsb = np.zeros((S, nnzb), dtype=np.int32)
     u_keep = slot < nnzb
     colsb[u_stripe[u_keep], slot[u_keep]] = u_panel[u_keep]
@@ -148,7 +154,9 @@ def default_interpret() -> bool:
 
 def spmv_block_ell(blocks: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
                    interpret: bool | None = None) -> jnp.ndarray:
-    """y = A @ x with A in block-ELL.  x: (n,) f32; returns (n,) f32.
+    """y = A @ x with A in block-ELL.  x: (n,); returns (n,) in the
+    blocks' dtype (the kernel computes in the blocks' dtype — float64
+    blocks keep float64 accumulation under the interpreter/CPU path).
 
     ``interpret=None`` resolves via :func:`default_interpret` — compiled
     Mosaic on TPU, interpreter elsewhere."""
@@ -161,10 +169,11 @@ def spmv_block_ell(blocks: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
 def _spmv_block_ell(blocks: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
                     interpret: bool) -> jnp.ndarray:
     S, NNZB, BM, BK = blocks.shape
+    dt = blocks.dtype
     n = x.shape[0]
     P = -(-n // BK)
-    xp = jnp.zeros((P, BK), jnp.float32).at[
-        jnp.arange(n) // BK, jnp.arange(n) % BK].set(x.astype(jnp.float32))
+    xp = jnp.zeros((P, BK), dt).at[
+        jnp.arange(n) // BK, jnp.arange(n) % BK].set(x.astype(dt))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -187,12 +196,12 @@ def _spmv_block_ell(blocks: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
         xv = x_ref[...]                       # (1, BK)
         y_ref[...] += jax.lax.dot_general(
             xv, a, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)  # (1, BM)
+            preferred_element_type=dt)        # (1, BM)
 
     y = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((S, BM), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((S, BM), dt),
         interpret=interpret,
     )(cols, blocks, xp)
     return y.reshape(-1)[:n]

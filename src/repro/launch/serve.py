@@ -1,4 +1,30 @@
-"""Serving launcher: batched prefill + decode loop with a KV/state cache.
+"""Serving launcher: solver-as-a-service for sparse systems, plus the
+token-serving scaffold (batched prefill + decode with a KV/state cache).
+
+Solver serving (the paper's workload at traffic scale — many small/medium
+CG solves against a pool of matrices, ROADMAP's solver-as-a-service item):
+
+  PYTHONPATH=src python -m repro.launch.serve --solver --requests 64
+
+:class:`SolverService` is the serving layer the bench and tests drive:
+
+  * **operator cache** — LRU keyed by :func:`matrix_fingerprint` (shape +
+    nnz + a blake2b content hash of indptr/indices/data), so repeat
+    traffic skips ``build_plan`` / ``build_plan_tree`` / format
+    conversion entirely and lands on the cached operator's jitted solve
+    (the ``DistributedOperator._fused`` per-``(tol, max_iters,
+    precondition)`` trace cache compounds with this: cache-hit requests
+    re-enter an already-compiled program).
+  * **bucketed admission** — each request's RHS batch is padded up to a
+    size class from ``buckets`` (the MaxText ``offline_inference``
+    pattern), so one compiled multi-RHS program per (matrix, class)
+    serves every batch width in the class.  Padding columns are
+    all-zero, and a zero column is *free* under the masked batched CG:
+    ``||b||^2 = 0`` keeps it inactive from iteration 0.
+  * **counters** — :class:`ServeStats` tracks operator/bucket hits and
+    misses, evictions, and real vs padded columns (padding waste).
+
+Token serving (unchanged scaffold):
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
       --batch 4 --prompt-len 32 --gen 32
@@ -6,33 +32,238 @@
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import hashlib
 import time
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.registry import ARCHS, get_config
-from ..models import encdec, transformer
-from ..models.steps import make_decode_step, make_prefill
+from ..sparse import cg_solve, make_operator
+from ..sparse.cg import CGResult
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCHS, default="qwen1.5-0.5b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.8)
-    args = ap.parse_args()
+# --------------------------------------------------------------------------
+# Solver serving
+# --------------------------------------------------------------------------
+
+def matrix_fingerprint(indptr, indices, data) -> str:
+    """Cache key for a CSR matrix: ``<n>:<nnz>:<blake2b>`` over the dtype,
+    shape and bytes of all three arrays.  Content-hashed — two structurally
+    identical matrices with different values never collide."""
+    h = hashlib.blake2b(digest_size=16)
+    for a in (indptr, indices, data):
+        a = np.ascontiguousarray(a)
+        h.update(str(a.dtype).encode())
+        h.update(np.int64(a.size).tobytes())
+        h.update(a.tobytes())
+    return f"{len(indptr) - 1}:{len(indices)}:{h.hexdigest()}"
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Admission/cache counters, reported by the bench and asserted in
+    tests.  ``padding_waste`` is the fraction of solved columns that were
+    admission padding (cheap — padded columns converge in 0 iterations —
+    but still traced/allocated work worth watching)."""
+
+    operator_hits: int = 0
+    operator_misses: int = 0
+    operator_evictions: int = 0
+    bucket_hits: int = 0            # (matrix, size-class) already warmed
+    bucket_misses: int = 0          # first solve of the class: traces
+    real_cols: int = 0
+    padded_cols: int = 0
+    solves: int = 0
+
+    @property
+    def padding_waste(self) -> float:
+        total = self.real_cols + self.padded_cols
+        return self.padded_cols / total if total else 0.0
+
+
+@dataclasses.dataclass
+class SolveResponse:
+    """One served solve: gathered solution plus per-column convergence
+    info (padding columns already stripped)."""
+
+    x: np.ndarray                   # (n,) or (n, nb)
+    iters: np.ndarray               # () or (nb,) int
+    residual: np.ndarray            # () or (nb,)
+    fingerprint: str = ""
+    bucket: int = 0
+    cache_hit: bool = False         # operator came from the cache
+    warm: bool = False              # (matrix, bucket) class already traced
+
+
+class SolverService:
+    """Multi-RHS CG serving over a pool of matrices (see module docstring).
+
+    ``backend`` / ``op_kw`` go to :func:`repro.sparse.make_operator`
+    verbatim (e.g. ``backend='dist_hier', part=..., k=8, mesh=...,
+    pods=2``), so one service class fronts every SpMV backend; the
+    solver parameters are fixed per service (one compiled program per
+    matrix x size class).  ``capacity`` bounds the operator cache
+    (least-recently-used eviction drops the operator *and all its
+    compiled solves*)."""
+
+    def __init__(self, backend: str = "coo",
+                 buckets: tuple[int, ...] = (1, 2, 4, 8, 16),
+                 capacity: int = 8, tol: float = 1e-6,
+                 max_iters: int = 500, precondition: str | None = None,
+                 **op_kw):
+        if not buckets or list(buckets) != sorted(set(buckets)):
+            raise ValueError(f"buckets must be sorted unique size classes; "
+                             f"got {buckets!r}")
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.backend = backend
+        self.buckets = tuple(int(b) for b in buckets)
+        self.capacity = capacity
+        self.tol = tol
+        self.max_iters = max_iters
+        self.precondition = precondition
+        self.op_kw = op_kw
+        self.stats = ServeStats()
+        self._ops: OrderedDict[str, object] = OrderedDict()
+        self._warm: set[tuple[str, int]] = set()
+        # fingerprint -> jitted batched cg_solve for operators without a
+        # fused .solve (the single-device backends): without this every
+        # warm request would re-trace the while_loop body, and the cache
+        # hit would only skip format conversion, not compilation
+        self._jit: dict[str, object] = {}
+
+    def bucket_for(self, nb: int) -> int:
+        """Smallest admission class holding ``nb`` columns; oversize
+        requests become their own exact-width class (served, but each
+        distinct width traces its own program)."""
+        for b in self.buckets:
+            if nb <= b:
+                return b
+        return nb
+
+    def operator_for(self, indptr, indices, data,
+                     fingerprint: str | None = None):
+        """``(fingerprint, operator, hit)`` with LRU admission: a cached
+        matrix skips plan construction / format conversion entirely."""
+        fp = fingerprint or matrix_fingerprint(indptr, indices, data)
+        op = self._ops.get(fp)
+        if op is not None:
+            self._ops.move_to_end(fp)
+            self.stats.operator_hits += 1
+            return fp, op, True
+        self.stats.operator_misses += 1
+        op = make_operator(indptr, indices, data, self.backend,
+                           **self.op_kw)
+        self._ops[fp] = op
+        while len(self._ops) > self.capacity:
+            old_fp, _ = self._ops.popitem(last=False)
+            self._warm = {w for w in self._warm if w[0] != old_fp}
+            self._jit.pop(old_fp, None)
+            self.stats.operator_evictions += 1
+        return fp, op, False
+
+    def solve(self, indptr, indices, data, b,
+              fingerprint: str | None = None) -> SolveResponse:
+        """Serve one request: admit ``b`` ((n,) or (n, nb)) into its size
+        class, resolve the operator through the cache, run the batched
+        masked CG, strip the padding columns."""
+        b = np.asarray(b)
+        single = b.ndim == 1
+        bcols = b[:, None] if single else b
+        nb = bcols.shape[1]
+        bucket = self.bucket_for(nb)
+        fp, op, hit = self.operator_for(indptr, indices, data, fingerprint)
+        warm = (fp, bucket) in self._warm
+        if warm:
+            self.stats.bucket_hits += 1
+        else:
+            self.stats.bucket_misses += 1
+            self._warm.add((fp, bucket))
+        self.stats.real_cols += nb
+        self.stats.padded_cols += bucket - nb
+        self.stats.solves += 1
+        if bucket > nb:
+            pad = np.zeros((bcols.shape[0], bucket - nb), bcols.dtype)
+            bcols = np.concatenate([bcols, pad], axis=1)
+        res = self._run(fp, op, bcols)
+        x = op.gather(res.x)[:, :nb]
+        iters = np.asarray(res.iters)[:nb]
+        residual = np.asarray(res.residual)[:nb]
+        if single:
+            x, iters, residual = x[:, 0], iters[0], residual[0]
+        return SolveResponse(x=x, iters=iters, residual=residual,
+                             fingerprint=fp, bucket=bucket, cache_hit=hit,
+                             warm=warm)
+
+    def _run(self, fp, op, bcols) -> CGResult:
+        if hasattr(op, "solve"):        # fused distributed program (its
+            # own per-(tol, max_iters, precondition) trace cache)
+            return op.solve(bcols, tol=self.tol, max_iters=self.max_iters,
+                            precondition=self.precondition)
+        fn = self._jit.get(fp)
+        if fn is None:
+            fn = jax.jit(lambda b: cg_solve(
+                op, b, tol=self.tol, max_iters=self.max_iters,
+                precondition=self.precondition, batched=True))
+            self._jit[fp] = fn          # retraces once per size class
+        return fn(op.scatter(bcols))
+
+
+def _solver_traffic(args) -> None:
+    """Synthetic traffic mix against a SolverService: a small pool of
+    Laplacian systems, Zipf-ish repeat pattern, random batch widths.
+    Prints solves/sec, latency percentiles and the cache counters."""
+    from ..sparse.generators import grid
+    from ..sparse.graph import laplacian_csr
+
+    rng = np.random.default_rng(0)
+    pool = []
+    for i, side in enumerate((12, 16, 20, 24)[:args.pool]):
+        g = grid((side, side))
+        pool.append(laplacian_csr(g, shift=0.05 * (i + 1)))
+    svc = SolverService(backend="coo", capacity=args.capacity,
+                        tol=1e-6, max_iters=500)
+    lat = []
+    t_all = time.perf_counter()
+    for r in range(args.requests):
+        indptr, indices, data = pool[int(rng.zipf(1.5)) % len(pool)]
+        nb = int(rng.integers(1, 9))
+        b = rng.normal(size=(len(indptr) - 1, nb)).astype(np.float32)
+        t0 = time.perf_counter()
+        resp = svc.solve(indptr, indices, data, b)
+        np.asarray(resp.x)
+        lat.append(time.perf_counter() - t0)
+    wall = time.perf_counter() - t_all
+    lat_ms = np.sort(np.array(lat)) * 1e3
+    s = svc.stats
+    print(f"requests={args.requests} solves/sec={args.requests / wall:.1f}")
+    print(f"latency ms: p50={np.percentile(lat_ms, 50):.2f} "
+          f"p95={np.percentile(lat_ms, 95):.2f} "
+          f"max={lat_ms[-1]:.2f}")
+    print(f"operator cache: hits={s.operator_hits} "
+          f"misses={s.operator_misses} evictions={s.operator_evictions}")
+    print(f"buckets: hits={s.bucket_hits} misses={s.bucket_misses} "
+          f"padding_waste={s.padding_waste:.1%}")
+
+
+# --------------------------------------------------------------------------
+# Token serving (scaffold)
+# --------------------------------------------------------------------------
+
+def _token_serving(args) -> None:
+    from ..configs.registry import get_config
+    from ..models import encdec, transformer
+    from ..models.steps import make_decode_step
 
     cfg = get_config(args.arch, smoke=args.smoke)
     mod = encdec if cfg.family == "audio" else transformer
     params, _ = mod.init_model(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
     B = args.batch
-    cache_len = args.prompt_len + args.gen
+    cache_len = args.prompt_len + max(args.gen, 1)
     prompts = rng.integers(0, cfg.vocab, size=(B, args.prompt_len),
                            dtype=np.int32)
 
@@ -63,7 +294,6 @@ def main():
 
     key = jax.random.PRNGKey(1)
     out = [prompts]
-    tok = None
     t0 = time.perf_counter()
     for t in range(args.gen):
         key, sub = jax.random.split(key)
@@ -79,10 +309,40 @@ def main():
     gen = np.concatenate(out, axis=1)
     print(f"arch={cfg.name} batch={B} prompt={args.prompt_len} "
           f"gen={args.gen}")
-    print(f"prefill {t_prefill*1e3:.1f} ms; decode "
-          f"{t_decode/args.gen*1e3:.2f} ms/token "
-          f"({B*args.gen/t_decode:.1f} tok/s)")
-    print("sample token ids:", gen[0, :args.prompt_len + 8].tolist())
+    if args.gen:        # --gen 0 is prefill-only: no per-token rate exists
+        print(f"prefill {t_prefill*1e3:.1f} ms; decode "
+              f"{t_decode/args.gen*1e3:.2f} ms/token "
+              f"({B*args.gen/t_decode:.1f} tok/s)")
+    else:
+        print(f"prefill {t_prefill*1e3:.1f} ms; decode skipped (--gen 0)")
+    print("sample token ids:",
+          gen[0, :args.prompt_len + min(args.gen, 8)].tolist())
+
+
+def main():
+    from ..configs.registry import ARCHS
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--solver", action="store_true",
+                    help="serve CG solves (synthetic traffic) instead of "
+                         "tokens")
+    ap.add_argument("--requests", type=int, default=32,
+                    help="solver mode: synthetic requests to serve")
+    ap.add_argument("--pool", type=int, default=3,
+                    help="solver mode: distinct matrices in the pool")
+    ap.add_argument("--capacity", type=int, default=8,
+                    help="solver mode: operator-cache capacity")
+    ap.add_argument("--arch", choices=ARCHS, default="qwen1.5-0.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+    if args.solver:
+        _solver_traffic(args)
+    else:
+        _token_serving(args)
 
 
 if __name__ == "__main__":

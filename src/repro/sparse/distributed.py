@@ -135,13 +135,17 @@ class DistPlan:
         return self._cols_global
 
     def scatter_vec(self, x: np.ndarray) -> np.ndarray:
-        """(n,) global vector -> (k, B) padded block-major layout."""
-        out = np.zeros((self.k, self.B), dtype=np.float32)
+        """(n,) global vector -> (k, B) padded block-major layout.  An
+        (n, nb) RHS batch scatters to (k, B, nb) — trailing axes ride
+        along; padding rows stay zero in every column."""
+        x = np.asarray(x)
+        dt = x.dtype if np.issubdtype(x.dtype, np.floating) else np.float32
+        out = np.zeros((self.k, self.B) + x.shape[1:], dtype=dt)
         out[self.perm // self.B, self.perm % self.B] = x
         return out
 
     def gather_vec(self, xb: np.ndarray) -> np.ndarray:
-        """(k, B) -> (n,) global order."""
+        """(k, B[, nb]) -> (n[, nb]) global order."""
         return np.asarray(xb)[self.perm // self.B, self.perm % self.B]
 
     def bell_local(self, bm: int = 8, bk: int = 128):
@@ -1070,12 +1074,29 @@ def build_plan_hier(indptr: np.ndarray, indices: np.ndarray,
 # --------------------------------------------------------------------------
 # shard_map programs
 # --------------------------------------------------------------------------
+#
+# Every per-device function below is *rank-polymorphic* over a trailing
+# RHS-batch axis: x_loc may be (B,) or (B, nb) and the same gather /
+# scatter-add / ppermute schedule carries the extra axis through (vmap
+# cannot cross the ppermute rounds on every supported JAX, so the batch
+# axis is threaded natively instead).  Per-row weights ((S,) send masks,
+# (nnz,) values, (B,) row masks) are aligned with a batched operand via
+# :func:`_bcol`.
+
+
+def _bcol(m, x):
+    """Align a per-row weight/mask with ``x``'s trailing RHS-batch axes:
+    (s,) against (s, nb) -> (s, 1) so NumPy broadcasting applies the
+    weight to every column."""
+    return m.reshape(m.shape + (1,) * (x.ndim - m.ndim))
+
 
 def _halo_exchange(plan: DistPlan, x_loc, send_idx, send_mask, axis: str):
-    """x_loc: (B,).  Returns (B + R*S,) extended vector."""
+    """x_loc: (B,) or (B, nb).  Returns the (B + R*S[, nb]) extended
+    vector."""
     bufs = []
     for c in range(plan.n_rounds):
-        buf = x_loc[send_idx[c]] * send_mask[c]            # (S,)
+        buf = x_loc[send_idx[c]] * _bcol(send_mask[c], x_loc)  # (S[, nb])
         perm = plan.round_perms[c]
         if perm:
             buf = jax.lax.ppermute(buf, axis, perm)
@@ -1087,7 +1108,7 @@ def _halo_exchange(plan: DistPlan, x_loc, send_idx, send_mask, axis: str):
 
 def _hier_exchange(plan: HierPlan, x_loc, send_idx, send_mask, axes,
                    perms, n_rounds):
-    """One class of hier rounds: returns the per-round (S,) buffers.
+    """One class of hier rounds: returns the per-round (S[, nb]) buffers.
 
     ``axes`` is the ppermute axis spec — the intra-pod axes (fast links;
     the shared local-index schedule fires in every pod, masked zeros where
@@ -1096,7 +1117,7 @@ def _hier_exchange(plan: HierPlan, x_loc, send_idx, send_mask, axes,
     """
     bufs = []
     for c in range(n_rounds):
-        buf = x_loc[send_idx[c]] * send_mask[c]
+        buf = x_loc[send_idx[c]] * _bcol(send_mask[c], x_loc)
         perm = perms[c]
         if perm:
             buf = jax.lax.ppermute(buf, axes, perm)
@@ -1207,11 +1228,17 @@ def _local_matvec_builder(plan: DistPlan, comm: str, axis: str,
             row_mask = c[-1]
             # stage 1: interior matvec — no halo dependence at all
             if local_format == "bell":
+                if x.ndim > 1:
+                    raise ValueError(
+                        "local_format='bell' is single-RHS (the Pallas "
+                        "block-ELL kernel is a vector kernel); use "
+                        "local_format='coo' for batched solves")
                 from ..kernels.spmv_bell import spmv_block_ell
                 y = spmv_block_ell(c[0], c[1], x)
             else:
                 ri, ci, vi = c[:3]
-                y = jnp.zeros(B, jnp.float32).at[ri].add(vi * x[ci])
+                y = jnp.zeros((B,) + x.shape[1:], x.dtype).at[ri].add(
+                    _bcol(vi, x) * x[ci])
             # stage 2: issue every level's rounds, *outermost first* —
             # each slower exchange is in flight while all faster levels'
             # rounds and accumulations (and the interior matvec) run
@@ -1229,8 +1256,8 @@ def _local_matvec_builder(plan: DistPlan, comm: str, axis: str,
                 if bufs[l]:
                     x_ext = jnp.concatenate([x_ext] + bufs[l])
                 rl, cl, vl = bnd[3 * l:3 * l + 3]
-                y = y.at[rl].add(vl * x_ext[cl])
-            return y * row_mask
+                y = y.at[rl].add(_bcol(vl, x) * x_ext[cl])
+            return y * _bcol(row_mask, y)
 
         return consts, fn
 
@@ -1239,9 +1266,11 @@ def _local_matvec_builder(plan: DistPlan, comm: str, axis: str,
 
         def fn(c, x):
             rows, cols, vals, row_mask = c
-            x_all = jax.lax.all_gather(x, axis).reshape(-1)   # (k*B,)
-            y = jnp.zeros(B, jnp.float32).at[rows].add(vals * x_all[cols])
-            return y * row_mask
+            x_all = jax.lax.all_gather(x, axis)               # (k, B[, nb])
+            x_all = x_all.reshape((-1,) + x.shape[1:])        # (k*B[, nb])
+            y = jnp.zeros((B,) + x.shape[1:], x.dtype).at[rows].add(
+                _bcol(vals, x) * x_all[cols])
+            return y * _bcol(row_mask, y)
 
         return consts, fn
 
@@ -1252,8 +1281,9 @@ def _local_matvec_builder(plan: DistPlan, comm: str, axis: str,
         def fn(c, x):
             rows, cols, vals, send_idx, send_mask, row_mask = c
             x_ext = _halo_exchange(plan, x, send_idx, send_mask, axis)
-            y = jnp.zeros(B, jnp.float32).at[rows].add(vals * x_ext[cols])
-            return y * row_mask
+            y = jnp.zeros((B,) + x.shape[1:], x.dtype).at[rows].add(
+                _bcol(vals, x) * x_ext[cols])
+            return y * _bcol(row_mask, y)
 
         return consts, fn
 
@@ -1266,10 +1296,11 @@ def _local_matvec_builder(plan: DistPlan, comm: str, axis: str,
         def fn(c, x):
             ri, ci, vi, rb, cb, vb, send_idx, send_mask, row_mask = c
             # interior first: no halo dependence, overlaps the ppermutes
-            y = jnp.zeros(B, jnp.float32).at[ri].add(vi * x[ci])
+            y = jnp.zeros((B,) + x.shape[1:], x.dtype).at[ri].add(
+                _bcol(vi, x) * x[ci])
             x_ext = _halo_exchange(plan, x, send_idx, send_mask, axis)
-            y = y.at[rb].add(vb * x_ext[cb])
-            return y * row_mask
+            y = y.at[rb].add(_bcol(vb, x) * x_ext[cb])
+            return y * _bcol(row_mask, y)
 
         return consts, fn
 
@@ -1277,6 +1308,11 @@ def _local_matvec_builder(plan: DistPlan, comm: str, axis: str,
 
     def fn(c, x):
         from ..kernels.spmv_bell import spmv_block_ell
+        if x.ndim > 1:
+            raise ValueError(
+                "local_format='bell' is single-RHS (the Pallas block-ELL "
+                "kernel is a vector kernel); use local_format='coo' for "
+                "batched solves")
         blk, bc, rb, cb, vb, send_idx, send_mask, row_mask = c
         y = spmv_block_ell(blk, bc, x)                     # interior rows
         x_ext = _halo_exchange(plan, x, send_idx, send_mask, axis)
@@ -1356,7 +1392,11 @@ def make_dist_cg(plan: DistPlan, mesh: Mesh, axis: str = "pu",
     def cg_local(*args):
         # one CG implementation for every program shape: the generic
         # cg.cg_solve is pure lax, so tracing it here (with a psum dot and
-        # the local matvec) yields the fused whole-CG SPMD program
+        # the local matvec) yields the fused whole-CG SPMD program.  A 2-D
+        # per-device b carries the trailing RHS-batch axis — the local
+        # matvec is batch-native (rank-polymorphic schedule), the psum dot
+        # stays single-column (cg_solve vmaps it over columns), and the
+        # whole multi-RHS masked loop runs inside this one shard_map body.
         *cs, b = args
         cs = tuple(c[0] for c in cs)
         b = b[0]
@@ -1373,8 +1413,11 @@ def make_dist_cg(plan: DistPlan, mesh: Mesh, axis: str = "pu",
         def dot(u, v):
             return jax.lax.psum(jnp.vdot(u * row_mask, v), axis)
 
-        res = cg_solve(lambda x: local_fn(cs, x), b, tol=tol,
-                       max_iters=max_iters, dot=dot, precondition=prec)
+        mv = lambda x: local_fn(cs, x)
+        mv.batch_native = True
+        res = cg_solve(mv, b, tol=tol,
+                       max_iters=max_iters, dot=dot, precondition=prec,
+                       batched=b.ndim == 2)
         return res.x[None], res.residual[None], res.iters[None]
 
     spec = P(axis if isinstance(axis, str) else tuple(axis))

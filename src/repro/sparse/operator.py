@@ -94,12 +94,17 @@ class Operator(Protocol):
 
 @dataclasses.dataclass
 class CooOperator:
-    """Padded-COO segment-sum SpMV (any backend, any sparsity)."""
+    """Padded-COO segment-sum SpMV (any backend, any sparsity).
+
+    ``batch_native``: the scatter-add matvec carries a trailing RHS-batch
+    axis through natively, so the batched CG path needs no vmap."""
 
     n: int
     rows: jnp.ndarray
     cols: jnp.ndarray
     vals: jnp.ndarray
+
+    batch_native = True
 
     @classmethod
     def from_csr(cls, indptr, indices, data, nnz_pad: int | None = None):
@@ -117,13 +122,23 @@ class CooOperator:
     def diag(self):
         """On-device diagonal extraction from the padded-COO triples."""
         on_diag = jnp.where(self.rows == self.cols, self.vals, 0.0)
-        return jnp.zeros(self.n, jnp.float32).at[self.rows].add(on_diag)
+        return jnp.zeros(self.n, self.vals.dtype).at[self.rows].add(on_diag)
 
     def scatter(self, x):
-        return jnp.asarray(np.asarray(x, dtype=np.float32))
+        return jnp.asarray(_as_float(x))
 
     def gather(self, y):
         return np.asarray(y)
+
+
+def _as_float(x):
+    """Host vector -> float ndarray, preserving float dtypes (float64
+    systems stay float64 under JAX_ENABLE_X64; the old hard-coded
+    ``astype(np.float32)`` silently downcast them)."""
+    x = np.asarray(x)
+    if not np.issubdtype(x.dtype, np.floating):
+        x = x.astype(np.float32)
+    return x
 
 
 @dataclasses.dataclass
@@ -162,7 +177,7 @@ class BlockEllOperator:
         return self.diag_
 
     def scatter(self, x):
-        return jnp.asarray(np.asarray(x, dtype=np.float32))
+        return jnp.asarray(_as_float(x))
 
     def gather(self, y):
         return np.asarray(y)
@@ -190,6 +205,12 @@ class DistributedOperator:
     next to the composable ``cg_solve(op, ...)`` path (one dispatch per
     matvec) — both converge identically; the fused one is faster when
     dispatch overhead dominates.
+
+    ``batch_native``: the halo/hier exchange schedules carry a trailing
+    RHS-batch axis through natively (vmap cannot cross their ppermute
+    rounds on every supported JAX), so batched CG hands them the full
+    (k, B, nb) operand.  ``local_format='bell'`` stays single-RHS (the
+    Pallas kernel is a vector kernel) and raises on a batched operand.
     """
 
     plan: DistPlan
@@ -197,6 +218,8 @@ class DistributedOperator:
     axis: str | tuple = "pu"
     comm: str = "halo"
     local_format: str = "coo"
+
+    batch_native = True
 
     def __post_init__(self):
         self.n = self.plan.n
@@ -273,9 +296,13 @@ class DistributedOperator:
 
     def solve(self, b, tol: float = 1e-6, max_iters: int = 500,
               precondition: str | None = None) -> CGResult:
-        """Fused distributed CG on a (n,) global right-hand side.  The
-        traced program is cached per (tol, max_iters, precondition) —
-        repeated solves with new right-hand sides pay no re-trace."""
+        """Fused distributed CG on a (n,) global right-hand side — or an
+        (n, nb) RHS batch, which runs the multi-RHS masked loop inside the
+        same shard_map program and returns per-column iters/residual.  The
+        traced program is cached per (tol, max_iters, precondition);
+        ``jax.jit`` retraces per operand shape under one cache entry, so
+        repeated solves with new right-hand sides (same batch width) pay
+        no re-trace."""
         key = (tol, max_iters, precondition)
         fused = self._fused.get(key)
         if fused is None:
@@ -351,7 +378,18 @@ def cg_solve_global(op: Operator, b: np.ndarray, tol: float = 1e-6,
              max_iters: int = 500,
              precondition: str | None = None) -> tuple[np.ndarray, int,
                                                        float]:
-    """Scatter -> generic CG -> gather.  Returns (x_global, iters, res)."""
+    """Scatter -> generic CG -> gather.  Returns (x_global, iters, res).
+
+    A 2-D ``b`` of shape (n, nb) is an RHS batch: the multi-RHS masked
+    loop runs all columns in one program and the returned iters/res are
+    (nb,) arrays (the global vector is unambiguously 1-D, so the batch
+    is inferred from ndim here — operator space needs the explicit
+    ``batched=`` flag because a distributed single-RHS operand is
+    already 2-D)."""
+    batched = np.ndim(b) == 2
     res = cg_solve(op, op.scatter(b), tol=tol, max_iters=max_iters,
-                   precondition=precondition)
+                   precondition=precondition, batched=batched)
+    if batched:
+        return (op.gather(res.x), np.asarray(res.iters),
+                np.asarray(res.residual))
     return op.gather(res.x), int(res.iters), float(res.residual)

@@ -4,6 +4,13 @@ Formats:
   * padded-COO  — (rows, cols, vals) each (nnz_pad,); padding rows point at a
     scratch row.  segment_sum based; works for any sparsity.
   * block-ELL   — see kernels/spmv_bell.py (the Pallas TPU kernel).
+
+All converters preserve the input dtype (a float64 CSR yields float64
+padded-COO/diagonal arrays — the old hard-coded ``float32`` silently
+downcast float64 systems); ``spmv_coo`` additionally carries a trailing
+RHS-batch axis through natively (``x`` of shape ``(n, nb)`` yields
+``(n, nb)``), which is the single-device half of the multi-RHS batched
+CG path.
 """
 from __future__ import annotations
 
@@ -16,14 +23,19 @@ import numpy as np
 
 def csr_to_padded_coo(indptr: np.ndarray, indices: np.ndarray,
                       data: np.ndarray, nnz_pad: int | None = None):
-    """CSR -> padded COO (rows, cols, vals); padded entries have val 0."""
+    """CSR -> padded COO (rows, cols, vals); padded entries have val 0.
+    ``vals`` keeps the dtype of ``data`` (float dtypes pass through;
+    anything non-float is promoted to float32)."""
     n = len(indptr) - 1
     nnz = len(indices)
     nnz_pad = nnz_pad or nnz
+    data = np.asarray(data)
+    vdt = data.dtype if np.issubdtype(data.dtype, np.floating) \
+        else np.float32
     rows = np.repeat(np.arange(n, dtype=np.int32), np.diff(indptr))
     out_r = np.zeros(nnz_pad, dtype=np.int32)
     out_c = np.zeros(nnz_pad, dtype=np.int32)
-    out_v = np.zeros(nnz_pad, dtype=np.float32)
+    out_v = np.zeros(nnz_pad, dtype=vdt)
     out_r[:nnz], out_c[:nnz], out_v[:nnz] = rows, indices, data
     return out_r, out_c, out_v
 
@@ -33,20 +45,26 @@ def spmv_coo(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
              x: jnp.ndarray, n: int | None = None) -> jnp.ndarray:
     """y = A @ x for padded COO.  ``n`` (the output size) must be static:
     it shapes the segment-sum target, so it is a ``static_argnames`` entry
-    rather than a traced operand."""
+    rather than a traced operand.  ``x`` may carry a trailing RHS-batch
+    axis (``(n, nb)``); the scatter-add batches natively."""
     n = n if n is not None else x.shape[0]
-    return jnp.zeros(n, vals.dtype).at[rows].add(vals * x[cols])
+    contrib = vals.reshape(vals.shape + (1,) * (x.ndim - 1)) * x[cols]
+    return jnp.zeros((n,) + x.shape[1:], vals.dtype).at[rows].add(contrib)
 
 
 def csr_diagonal(indptr: np.ndarray, indices: np.ndarray,
                  data: np.ndarray) -> np.ndarray:
-    """(n,) f32 diagonal of a CSR matrix (duplicates summed) — feeds the
-    Jacobi preconditioner of ``cg.cg_solve``.  Vectorized NumPy."""
+    """(n,) diagonal of a CSR matrix (duplicates summed) — feeds the
+    Jacobi preconditioner of ``cg.cg_solve``.  Keeps the dtype of
+    ``data``.  Vectorized NumPy."""
     n = len(indptr) - 1
+    data = np.asarray(data)
+    vdt = data.dtype if np.issubdtype(data.dtype, np.floating) \
+        else np.float32
     src = np.repeat(np.arange(n), np.diff(indptr))
     on_diag = src == np.asarray(indices)
-    d = np.zeros(n, dtype=np.float32)
-    np.add.at(d, src[on_diag], np.asarray(data)[on_diag])
+    d = np.zeros(n, dtype=vdt)
+    np.add.at(d, src[on_diag], data[on_diag])
     return d
 
 

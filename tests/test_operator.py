@@ -127,7 +127,8 @@ CROSS_BACKENDS = ("coo", "coo+jacobi", "bell", "bell+jacobi",
                   "dist_allgather", "dist_hier", "dist_hier+jacobi",
                   "dist_hier+block_jacobi_fused", "dist_hier_podaware",
                   "dist_hier_bell", "dist_tree3", "dist_tree3_bell",
-                  "dist_tree3_aware", "dist_tree3+block_jacobi_fused")
+                  "dist_tree3_aware", "dist_tree3+block_jacobi_fused",
+                  "dist_hier_batched")
 
 CROSS_SCRIPT = textwrap.dedent("""
     import os
@@ -159,9 +160,34 @@ CROSS_SCRIPT = textwrap.dedent("""
     res_tree = partition_tree(g, topo_t, "greedyRef", seed=0)
 
     sols = {}
+    extra = {}
     for name in %r:
         backend, _, variant = name.partition("+")
         kw = {}
+        if backend == "dist_hier_batched":
+            # fused multi-RHS masked CG on the two-level mesh: column 0 is
+            # the shared b (feeds the agreement matrix); the whole batch
+            # must match per-column sequential fused solves, with
+            # per-column iteration counts equal to the sequential ones
+            op = make_operator(indptr, indices, data, "dist_hier",
+                               part=part, k=8, mesh=mesh_hier, pods=2)
+            rngb = np.random.default_rng(7)
+            bb = np.stack(
+                [b, rngb.normal(size=g.n).astype(np.float32),
+                 0.01 * b + rngb.normal(
+                     scale=0.1, size=g.n).astype(np.float32)], axis=1)
+            resb = op.solve(bb, tol=1e-7, max_iters=2000)
+            xb = op.gather(resb.x)
+            sols[name] = xb[:, 0]
+            seq = [op.solve(bb[:, j], tol=1e-7, max_iters=2000)
+                   for j in range(3)]
+            extra["batched_vs_seq"] = max(
+                float(np.abs(xb[:, j] - op.gather(seq[j].x)).max())
+                / max(float(np.abs(op.gather(seq[j].x)).max()), 1e-30)
+                for j in range(3))
+            extra["batched_iters"] = np.asarray(resb.iters).tolist()
+            extra["seq_iters"] = [int(s.iters) for s in seq]
+            continue
         if backend == "dist_hier_podaware":
             backend = "dist_hier"
             kw = dict(part=part, k=8, mesh=mesh_hier, pods=pod_sw)
@@ -187,8 +213,10 @@ CROSS_SCRIPT = textwrap.dedent("""
             sols[name] = x
     ref = sols["coo"]
     scale = float(np.abs(ref).max())
-    print(json.dumps({name: float(np.abs(x - ref).max()) / scale
-                      for name, x in sols.items()}))
+    rel = {name: float(np.abs(x - ref).max()) / scale
+           for name, x in sols.items()}
+    rel.update({"_" + key: v for key, v in extra.items()})
+    print(json.dumps(rel))
 """) % (CROSS_BACKENDS,)
 
 
@@ -203,6 +231,25 @@ def cross_backend_rel():
 @pytest.mark.parametrize("name", CROSS_BACKENDS)
 def test_cross_backend_agreement_2d_grid(cross_backend_rel, name):
     assert cross_backend_rel[name] < 1e-5, (name, cross_backend_rel)
+
+
+def test_batched_dist_hier_matches_sequential(cross_backend_rel):
+    """Fused multi-RHS CG on the two-level mesh: every column of the
+    batched solve matches its per-column sequential fused solve."""
+    assert cross_backend_rel["_batched_vs_seq"] < 1e-5, cross_backend_rel
+
+
+def test_batched_dist_hier_per_column_iters(cross_backend_rel):
+    """Per-column convergence masks do per-column work: each column's
+    iteration count tracks its sequential solve (the masked loop freezes
+    converged columns instead of running everyone to the max), and total
+    work never exceeds nb * max(iters)."""
+    batched = cross_backend_rel["_batched_iters"]
+    seq = cross_backend_rel["_seq_iters"]
+    assert len(batched) == len(seq) == 3
+    for bi, si in zip(batched, seq):
+        assert abs(bi - si) <= 2, (batched, seq)
+    assert sum(batched) <= len(batched) * max(batched)
 
 
 def test_spmv_coo_accepts_explicit_static_n():
