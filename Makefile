@@ -4,8 +4,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test tier1 deps lint verify-plans bench-cg bench bench-hier \
-        bench-pod bench-tree bench-serve
+.PHONY: test tier1 deps lint verify-plans trace-audit bench-cg bench \
+        bench-hier bench-pod bench-tree bench-serve
 
 deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -27,6 +27,15 @@ lint:
 # verifier + mesh/axis checker on each (exit = number of failing plans)
 verify-plans:
 	$(PYTHON) -m repro.analysis verify
+
+# Jaxpr trace audit (TRACE001-005, see src/repro/analysis/trace.py):
+# stage every solver backend's matvec + fused CG on an abstract mesh —
+# no devices — and cross-check collectives/dtypes against the plan while
+# counting the static per-iteration cost.  Writes the JSON report CI
+# uploads as an artifact; nonzero exit on any diagnostic.
+trace-audit:
+	$(PYTHON) -m repro.analysis trace --fanouts 2,2 --fanouts 2,2,2 \
+	    --out trace_audit.json
 
 bench-cg:
 	$(PYTHON) -m benchmarks.run --only cg

@@ -14,15 +14,26 @@ verification time; no mesh, no jit):
                       ppermute partner table, without real devices;
   * ``lint``        — custom AST lint (rule ids REPRO001+) for the
                       API-drift / determinism / host-sync bug classes
-                      that produced earlier PRs' bugfixes.
+                      that produced earlier PRs' bugfixes;
+  * ``trace``       — jaxpr-level auditor (rule ids TRACE001+): every
+                      solver program is traced abstractly (no devices,
+                      ``compat.abstract_mesh``) and its staged
+                      collectives/dtypes are cross-checked against the
+                      plan schedule, plus a static per-CG-iteration
+                      cost model (:class:`~.trace.TraceCost`) consumed
+                      by ``launch.roofline.static_roofline``.
 
 ``python -m repro.analysis`` is the CLI (``lint`` / ``verify`` /
-``partners`` subcommands); ``make lint`` and ``make verify-plans`` wrap
-it.  Plan builders run the verifier at build time under
-``REPRO_VALIDATE=1`` (on by default in the test suite via conftest).
+``partners`` / ``trace`` subcommands, ``--format=json|github`` for
+machine-readable output); ``make lint``, ``make verify-plans`` and
+``make trace-audit`` wrap it.  Plan builders run the verifier at build
+time under ``REPRO_VALIDATE=1`` (on by default in the test suite via
+conftest).
 """
 from .diagnostics import Diagnostic, PlanVerificationError, Report
 from .lint import LINT_RULES, lint_paths
+from .trace import (TRACE_RULES, TraceCost, audit_backend, audit_jaxpr,
+                    audit_operator)
 from .verify import (check_mesh_axes, partner_table, verify_partition,
                      verify_plan)
 
@@ -30,4 +41,6 @@ __all__ = [
     "Diagnostic", "PlanVerificationError", "Report",
     "verify_plan", "verify_partition", "check_mesh_axes", "partner_table",
     "lint_paths", "LINT_RULES",
+    "audit_jaxpr", "audit_operator", "audit_backend",
+    "TRACE_RULES", "TraceCost",
 ]

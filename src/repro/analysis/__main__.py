@@ -4,19 +4,35 @@
   python -m repro.analysis verify              # plan verifier sweep
   python -m repro.analysis verify --fanouts 2,2,2 --generator rgg_2d
   python -m repro.analysis partners --fanouts 2,2   # ppermute table
+  python -m repro.analysis trace               # jaxpr audit (TRACE0xx)
+  python -m repro.analysis trace --backend dist_hier --fanouts 2,2,2
 
 ``verify`` builds real plans (flat, pod, and tree at each requested
 fanouts) over paper-family generators with a seeded random partition and
 runs every PLAN0xx/MESH0xx pass on them — no devices are touched; plan
-construction and verification are host-side NumPy.  Exit status is the
-number of violating subjects (0 = clean), so Make/CI can gate on it.
+construction and verification are host-side NumPy.  ``trace`` goes one
+layer deeper: it stages each solver backend's matvec + fused CG on an
+*abstract* mesh (still no devices), walks the jaxpr, and cross-checks
+the staged collectives/dtypes against the plan (TRACE0xx) while counting
+the static per-iteration cost consumed by ``launch.roofline``.
+
+Every subcommand exits 0 iff no pass reported a diagnostic and 1
+otherwise, so Make/CI gate uniformly.  ``--format=json`` dumps the full
+report list; ``--format=github`` emits GitHub Actions ``::error``
+annotations (inline on the PR for lint findings, which carry file:line).
+``trace --out FILE`` additionally writes the JSON report to a file — the
+CI artifact — independent of the console format.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import re
 import sys
 
 import numpy as np
+
+from .diagnostics import Report
 
 
 def _parse_fanouts(s: str) -> tuple[int, ...]:
@@ -49,48 +65,115 @@ def _build_subjects(gen_names, n, fanouts_list, seed):
                 yield (f"{gname}/tree {fanouts}", tree, sizes, axes)
 
 
-def _cmd_verify(args) -> int:
+def _cmd_verify(args) -> list[Report]:
     from . import check_mesh_axes, verify_plan
 
     fanouts_list = ([_parse_fanouts(s) for s in args.fanouts]
                     or [(4,), (2, 2), (2, 2, 2)])
-    failures = 0
+    reports = []
     for label, plan, sizes, axes in _build_subjects(
             args.generator, args.n, fanouts_list, args.seed):
         rep = verify_plan(plan)
         mesh_rep = check_mesh_axes(plan, sizes, axes)
-        ok = rep.ok and mesh_rep.ok
-        failures += not ok
-        status = "OK" if ok else "FAIL"
-        print(f"[{status}] {label}: {rep.subject}")
-        for d in rep.diagnostics + mesh_rep.diagnostics:
-            print(f"    {d}")
-    print(f"verify: {failures} failing subject(s)")
-    return failures
+        merged = Report(subject=f"{label}: {rep.subject}",
+                        diagnostics=rep.diagnostics + mesh_rep.diagnostics,
+                        info={**rep.info, **mesh_rep.info})
+        reports.append(merged)
+    return reports
 
 
-def _cmd_partners(args) -> int:
+def _cmd_partners(args) -> list[Report]:
     from . import partner_table
-    subjects = _build_subjects(args.generator[:1], args.n,
-                               [_parse_fanouts(args.fanouts)], args.seed)
-    for label, plan, _, _ in subjects:
-        table = partner_table(plan)
-        print(f"{label}:")
-        for lvl, rounds in table.items():
-            for c, pairs in enumerate(rounds):
-                print(f"  level {lvl} round {c}: "
-                      + " ".join(f"{a}->{b}" for a, b in pairs))
-    return 0
+    reports = []
+    for label, plan, _, _ in _build_subjects(
+            args.generator[:1], args.n,
+            [_parse_fanouts(args.fanouts)], args.seed):
+        reports.append(Report(subject=label,
+                              info={"partners": partner_table(plan)}))
+    return reports
 
 
-def _cmd_lint(args) -> int:
+def _cmd_lint(args) -> list[Report]:
     from .lint import lint_paths
-    rep = lint_paths(args.paths)
-    for d in rep.diagnostics:
-        print(d)
-    print(f"lint: {len(rep.diagnostics)} finding(s) in "
-          f"{rep.info.get('files', 0)} file(s)")
-    return 1 if rep.diagnostics else 0
+    return [lint_paths(args.paths)]
+
+
+def _cmd_trace(args) -> list[Report]:
+    from .trace import audit_backend
+    from repro.sparse.operator import _HIER_BACKENDS, BACKENDS
+
+    backends = args.backend or list(BACKENDS)
+    fanouts_list = ([_parse_fanouts(s) for s in args.fanouts]
+                    or [(2, 2)])
+    reports = []
+    for fanouts in fanouts_list:
+        for backend in backends:
+            if backend in _HIER_BACKENDS and len(fanouts) < 2:
+                continue
+            if backend not in _HIER_BACKENDS and fanouts != fanouts_list[0]:
+                continue        # flat backends only vary with k, not shape
+            reports.append(audit_backend(
+                backend, n=args.n, fanouts=fanouts,
+                generator=args.generator[0], seed=args.seed, nb=args.nb))
+    return reports
+
+
+# --------------------------------------------------------------------------
+# output formatting
+# --------------------------------------------------------------------------
+
+def _print_text(reports: list[Report]) -> None:
+    for rep in reports:
+        status = "OK" if rep.ok else "FAIL"
+        print(f"[{status}] {rep.subject}")
+        for d in rep.diagnostics:
+            print(f"    {d}")
+        for tag in ("cost_matvec", "cost_cg"):
+            cost = rep.info.get(tag)
+            if cost is None:
+                continue
+            lvl = " ".join(
+                f"L{i}:{int(w)}B/{int(p)}B live"
+                for i, (w, p) in enumerate(
+                    zip(cost.comm_wire_bytes_lvl,
+                        cost.comm_payload_bytes_lvl)))
+            print(f"    {tag[5:]}: {cost.flops_per_iter:.3g} flop/it "
+                  f"{cost.hbm_bytes_per_iter:.3g} B/it"
+                  + (f"  comm {lvl}" if lvl else ""))
+        partners = rep.info.get("partners")
+        if partners is not None:
+            for lvl, rounds in partners.items():
+                for c, pairs in enumerate(rounds):
+                    print(f"    level {lvl} round {c}: "
+                          + " ".join(f"{a}->{b}" for a, b in pairs))
+    bad = sum(not r.ok for r in reports)
+    print(f"{len(reports)} subject(s), {bad} failing")
+
+
+_WHERE_RE = re.compile(r"^(?:\w+: )?([\w./-]+\.py):(\d+)$")
+
+
+def _print_github(reports: list[Report]) -> None:
+    """GitHub Actions annotations: findings that carry a file:line (the
+    lint) annotate inline on the PR; everything else is a plain error."""
+    for rep in reports:
+        for d in rep.diagnostics:
+            msg = f"{d.code}: {d.message}"
+            m = _WHERE_RE.match(d.where)
+            if m:
+                print(f"::error file={m.group(1)},line={m.group(2)}::{msg}")
+            else:
+                loc = f" [{d.where}]" if d.where else ""
+                print(f"::error::{rep.subject}{loc}: {msg}")
+
+
+def _emit(reports: list[Report], fmt: str) -> None:
+    if fmt == "json":
+        print(json.dumps([r.to_dict() for r in reports], indent=1))
+    elif fmt == "github":
+        _print_github(reports)
+    else:
+        _print_text(reports)
 
 
 def main(argv=None) -> int:
@@ -98,9 +181,16 @@ def main(argv=None) -> int:
                                  description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
 
+    def _common(p):
+        p.add_argument("--format", choices=("text", "json", "github"),
+                       default="text",
+                       help="console output: human text, a JSON report "
+                            "list, or GitHub Actions ::error annotations")
+
     p_lint = sub.add_parser("lint", help="AST lint (REPRO0xx rules)")
     p_lint.add_argument("paths", nargs="+",
                         help="files or directories to lint")
+    _common(p_lint)
     p_lint.set_defaults(fn=_cmd_lint)
 
     p_ver = sub.add_parser("verify",
@@ -113,6 +203,7 @@ def main(argv=None) -> int:
                        help="fanouts like 2,2,2 (repeatable); default "
                             "4 / 2,2 / 2,2,2")
     p_ver.add_argument("--seed", type=int, default=0)
+    _common(p_ver)
     p_ver.set_defaults(fn=_cmd_verify)
 
     p_par = sub.add_parser("partners",
@@ -122,12 +213,41 @@ def main(argv=None) -> int:
     p_par.add_argument("--n", type=int, default=64)
     p_par.add_argument("--fanouts", default="2,2")
     p_par.add_argument("--seed", type=int, default=0)
+    _common(p_par)
     p_par.set_defaults(fn=_cmd_partners)
+
+    p_tr = sub.add_parser("trace",
+                          help="jaxpr trace audit (TRACE0xx) + static "
+                               "cost model, on an abstract mesh")
+    p_tr.add_argument("--backend", action="append", default=None,
+                      help="backend name(s) (operator.BACKENDS); "
+                           "default: all")
+    p_tr.add_argument("--generator", action="append", default=None)
+    p_tr.add_argument("--n", type=int, default=144,
+                      help="approximate vertex count (default 144)")
+    p_tr.add_argument("--fanouts", action="append", default=[],
+                      help="tree shapes like 2,2 (repeatable; hier "
+                           "backends re-audit per shape); default 2,2")
+    p_tr.add_argument("--nb", type=int, default=None,
+                      help="trace the batched (multi-RHS) programs")
+    p_tr.add_argument("--seed", type=int, default=0)
+    p_tr.add_argument("--out", default=None,
+                      help="also write the JSON report list to this file "
+                           "(the CI artifact), regardless of --format")
+    _common(p_tr)
+    p_tr.set_defaults(fn=_cmd_trace)
 
     args = ap.parse_args(argv)
     if getattr(args, "generator", None) is None and args.cmd != "lint":
-        args.generator = ["grid_2d", "rgg_2d"]
-    return args.fn(args)
+        args.generator = (["grid_2d"] if args.cmd == "trace"
+                          else ["grid_2d", "rgg_2d"])
+    reports = args.fn(args)
+    if getattr(args, "out", None):
+        with open(args.out, "w") as f:
+            json.dump([r.to_dict() for r in reports], f, indent=1)
+    _emit(reports, args.format)
+    # uniform contract (ISSUE 8): nonzero iff any pass reported anything
+    return 1 if any(r.diagnostics for r in reports) else 0
 
 
 if __name__ == "__main__":

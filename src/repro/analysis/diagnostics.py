@@ -34,6 +34,10 @@ class Diagnostic:
         loc = f" [{self.where}]" if self.where else ""
         return f"{self.code}{loc}: {self.message}"
 
+    def to_dict(self) -> dict[str, Any]:
+        return {"code": self.code, "message": self.message,
+                "where": self.where, "details": jsonable(self.details)}
+
 
 @dataclasses.dataclass
 class Report:
@@ -66,6 +70,33 @@ class Report:
         lines = [f"{self.subject}: {len(self.diagnostics)} violation(s)"]
         lines += [f"  {d}" for d in self.diagnostics]
         return "\n".join(lines)
+
+    def to_dict(self) -> dict[str, Any]:
+        """JSON-ready form — the ``--format=json`` CLI payload and the CI
+        artifact schema."""
+        return {"subject": self.subject, "ok": self.ok,
+                "diagnostics": [d.to_dict() for d in self.diagnostics],
+                "info": jsonable(self.info)}
+
+
+def jsonable(x: Any) -> Any:
+    """Best-effort conversion to JSON-serializable types: numpy scalars
+    and arrays, tuples, non-string dict keys, and result dataclasses that
+    expose ``to_dict`` (e.g. ``trace.TraceCost``) all flatten; anything
+    unknown falls back to ``repr`` rather than failing the dump."""
+    if x is None or isinstance(x, (bool, int, float, str)):
+        return x
+    if hasattr(x, "to_dict"):
+        return jsonable(x.to_dict())
+    if hasattr(x, "item") and not hasattr(x, "__len__"):    # numpy scalar
+        return x.item()
+    if hasattr(x, "tolist"):                                # numpy array
+        return x.tolist()
+    if isinstance(x, dict):
+        return {str(k): jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple, set, frozenset)):
+        return [jsonable(v) for v in x]
+    return repr(x)
 
 
 class PlanVerificationError(ValueError):

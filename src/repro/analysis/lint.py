@@ -18,10 +18,15 @@ an actual bugfix in the PR history:
             ``from numpy.random import shuffle``) in ``core/`` +
             ``sparse/`` schedule-building code.  Plans must be
             deterministic — use ``np.random.default_rng(seed)``.
-  REPRO004  host-sync idioms in solver paths: ``.item()`` in ``core/`` +
-            ``sparse/``, and ``float()``/``int()``/``bool()`` on traced
-            values inside explicitly ``@jit``-decorated functions.  Each
-            forces a device round-trip per CG iteration.
+  REPRO004  host-sync idioms in solver paths: ``.item()`` and
+            ``jax.device_get(...)`` in ``core/`` + ``sparse/``, and
+            ``float()``/``int()``/``bool()`` /
+            ``np.asarray(...)``/``np.array(...)`` on traced values
+            inside explicitly ``@jit``-decorated functions.  Each
+            forces a device round-trip per CG iteration (the numpy
+            coercions additionally fail with a ConcretizationError on
+            abstract values — host plan-building is where they belong,
+            and that code is never jitted).
   ========  ==============================================================
 
 Pure ``ast`` — no imports of the linted code, so it runs identically on
@@ -41,7 +46,8 @@ LINT_RULES: dict[str, str] = {
     "REPRO001": "jax.sharding/shard_map used outside compat.py",
     "REPRO002": "blanket 'except Exception: pass' swallows errors",
     "REPRO003": "unseeded global RNG in schedule-building code",
-    "REPRO004": "host-sync (.item()/float()) in jitted solver paths",
+    "REPRO004": "host-sync (.item()/float()/np.asarray/device_get) in "
+                "jitted solver paths",
 }
 
 # path-suffix -> codes sanctioned there.  Keep this near-empty: compat.py
@@ -54,6 +60,9 @@ _SEEDED_RNG = {"default_rng", "Generator", "SeedSequence", "RandomState",
                "Philox", "PCG64", "MT19937", "bit_generator"}
 _JIT_NAMES = {"jit"}          # matches jit, jax.jit, partial(jax.jit, ...)
 _HOST_COERCE = {"float", "int", "bool"}
+# numpy materializations: legitimate all over host plan-building, a host
+# sync (or ConcretizationError) on traced values — flagged inside jit only
+_NP_COERCE = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
 
 
 def _dotted(node: ast.AST) -> str:
@@ -182,6 +191,17 @@ class _Linter(ast.NodeVisitor):
                       f"{node.func.id}() on a traced value inside a "
                       "jitted function: host sync (ConcretizationError "
                       "at best, per-step round-trip at worst)")
+        if self.jit_depth and name in _NP_COERCE and node.args:
+            self._add("REPRO004", node,
+                      f"{name}() inside a jitted function materializes "
+                      "the traced value on host; use jnp for on-device "
+                      "work and keep numpy in plan construction")
+        if name.split(".")[-1] == "device_get" \
+                and (self.solver_scope or self.jit_depth):
+            self._add("REPRO004", node,
+                      f"{name}(): explicit device->host transfer in the "
+                      "solver path; keep reductions on device and fetch "
+                      "results once after the solve")
         self.generic_visit(node)
 
     def _visit_func(self, node) -> None:

@@ -1,0 +1,654 @@
+"""Jaxpr-level trace auditor + static cost model for the solver programs.
+
+PR 6's plan verifier checks ``DistPlan``/``TreePlan`` metadata against
+itself; nothing checked that the *staged program* actually implements the
+plan (the JAX-0.4.x sharding-constraint no-op shipped in exactly that
+gap).  This pass closes it without devices: every solver program (matvec
+and fused CG, every backend) is traced abstractly —
+``jax.make_jaxpr`` under ``ShapeDtypeStruct`` inputs on a
+``compat.abstract_mesh`` — and the closed jaxpr is walked (recursing
+through ``pjit`` / ``shard_map`` / ``while`` / ``scan`` / ``cond``
+sub-jaxprs) to extract every collective and every dtype transition.
+
+Three products, all on the shared :class:`~.diagnostics.Report` model:
+
+  ========  ===========================================================
+  rule      what
+  ========  ===========================================================
+  TRACE001  ppermute round count on a level's axis tuple differs from
+            the plan's non-empty ``round_perms[_lvl]`` schedule
+            (dropped/extra round, rounds staged on the wrong axes)
+  TRACE002  a staged round's permutation pairs differ from the plan's
+            round (compared as sets — pair order within a round is
+            semantically free)
+  TRACE003  a collective the plan cannot account for (ppermute on an
+            unknown axis tuple, all_gather in a halo program, any
+            collective in a single-device program)
+  TRACE004  float-width conversion on the traced dataflow (silent
+            promotion/demotion, e.g. an f32 upcast or a bf16 downcast)
+  TRACE005  float value wider than the program dtype (f64 constants /
+            results leaking in under ``JAX_ENABLE_X64``)
+  ========  ===========================================================
+
+plus a :class:`TraceCost` — per-CG-iteration FLOPs, HBM bytes, and
+per-level communication bytes counted from the jaxpr ops — consumable by
+``launch.roofline.static_roofline`` and by ``SolverService`` to price
+bucket size-classes at admission.
+
+Communication is reported two ways: *wire* bytes are what the staged
+ppermutes move (padded ``rounds x S x k x itemsize``, counted from the
+jaxpr operand shapes), *payload* bytes are the live (mask-selected) halo
+words from the plan — by construction each live slot is one (receiver,
+vertex) pair, so per level they equal
+``metrics.tree_comm_volumes(...)[level].sum() * itemsize`` exactly (the
+acceptance oracle; ``tests/test_analysis_trace.py`` asserts it).
+
+Primitive names drift across JAX versions (``psum`` vs ``psum2``), so
+collectives are matched by name prefix and the walker recurses into *any*
+jaxpr-valued equation param rather than a fixed list of HOPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from .diagnostics import Report
+
+TRACE_RULES: dict[str, str] = {
+    "TRACE001": "staged collective round count differs from the plan",
+    "TRACE002": "staged ppermute permutation differs from the plan round",
+    "TRACE003": "collective not derivable from the plan",
+    "TRACE004": "float-width conversion on the solver dataflow",
+    "TRACE005": "float wider than the program dtype (x64 leak)",
+}
+
+# collective primitive families, matched by prefix: psum is psum2 on
+# 0.4.x, and pbroadcast/reduce_scatter spellings vary.
+_COLL_KINDS = ("ppermute", "psum", "all_gather", "all_to_all",
+               "reduce_scatter", "pbroadcast")
+
+# collectives a comm mode may stage (ppermute levels are checked
+# separately against the plan's round schedule)
+_ALLOWED_KINDS = {
+    "halo": frozenset({"ppermute", "psum"}),
+    "halo_seq": frozenset({"ppermute", "psum"}),
+    "hier": frozenset({"ppermute", "psum"}),
+    "allgather": frozenset({"all_gather", "psum"}),
+    None: frozenset(),                       # single-device program
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Collective:
+    """One collective op extracted from the jaxpr, in program order."""
+
+    kind: str                    # 'ppermute' / 'psum' / 'all_gather' / ...
+    axes: tuple                  # mesh axis names it runs over
+    perm: tuple | None           # ppermute (src, dst) pairs
+    shape: tuple                 # per-device payload shape
+    dtype: str
+    nbytes: float                # per-device wire bytes
+    devices: int                 # mesh size at this nesting depth
+    in_loop: bool                # inside a while/scan body
+
+
+class _Acc:
+    """Mutable walk state: collectives + flop/byte counters, split into
+    outside-loop and per-iteration (while/scan body) buckets."""
+
+    __slots__ = ("colls", "flops", "flops_loop", "bytes", "bytes_loop")
+
+    def __init__(self):
+        self.colls: list[Collective] = []
+        self.flops = self.flops_loop = 0.0
+        self.bytes = self.bytes_loop = 0.0
+
+
+def _sub_jaxprs(val) -> list:
+    """Every Jaxpr reachable from an eqn param value (ClosedJaxpr, bare
+    Jaxpr, or tuples/lists of either) — the version-proof way to recurse
+    through pjit/shard_map/while/scan/cond/pallas_call params."""
+    if hasattr(val, "eqns"):                       # bare Jaxpr
+        return [val]
+    if hasattr(val, "jaxpr"):                      # ClosedJaxpr
+        return [val.jaxpr]
+    if isinstance(val, (tuple, list)):
+        out = []
+        for v in val:
+            out.extend(_sub_jaxprs(v))
+        return out
+    return []
+
+
+def _aval(v):
+    av = getattr(v, "aval", None)
+    if av is not None and hasattr(av, "shape") and hasattr(av, "dtype"):
+        return av
+    return None
+
+
+def _size(av) -> float:
+    return float(np.prod(av.shape)) if av.shape else 1.0
+
+
+def _nbytes(av) -> float:
+    return _size(av) * np.dtype(av.dtype).itemsize
+
+
+def _float_dtype(dt) -> bool:
+    """Float-family test that also covers the ml_dtypes extended floats
+    (bf16/f8): plain ``np.issubdtype`` reports those as non-inexact, which
+    would hide exactly the bf16 up/downcasts TRACE004 exists to catch."""
+    try:
+        return bool(jax.dtypes.issubdtype(dt, np.inexact))
+    except TypeError:
+        return bool(np.issubdtype(dt, np.inexact))
+
+
+def _inexact(av) -> bool:
+    return av is not None and _float_dtype(av.dtype)
+
+
+def _coll_kind(prim: str) -> str | None:
+    for kind in _COLL_KINDS:
+        if prim == kind or prim.startswith(kind):
+            return kind
+    return None
+
+
+def _axes_param(params: dict) -> tuple:
+    ax = params.get("axis_name", params.get("axes", ()))
+    if isinstance(ax, str):
+        return (ax,)
+    return tuple(ax)
+
+
+def _collective(kind: str, eqn, in_loop: bool, devices: int) -> Collective:
+    perm = eqn.params.get("perm")
+    if perm is not None:
+        perm = tuple((int(a), int(b)) for a, b in perm)
+    # wire convention: ppermute/psum/all_to_all move their operand,
+    # all_gather-style ops deliver their (replicated) output
+    src = (eqn.outvars if kind in ("all_gather", "pbroadcast")
+           else eqn.invars)
+    avs = [a for a in map(_aval, src) if a is not None]
+    nbytes = sum(map(_nbytes, avs))
+    shape = avs[0].shape if avs else ()
+    dtype = str(avs[0].dtype) if avs else "?"
+    return Collective(kind=kind, axes=_axes_param(eqn.params), perm=perm,
+                      shape=tuple(shape), dtype=dtype, nbytes=nbytes,
+                      devices=devices, in_loop=in_loop)
+
+
+# elementwise float primitives counted at one FLOP per output element
+_EW = frozenset((
+    "add", "sub", "mul", "div", "max", "min", "pow", "atan2", "rem",
+    "neg", "abs", "sign", "floor", "ceil", "round", "exp", "log",
+    "expm1", "log1p", "sqrt", "rsqrt", "cbrt", "square", "integer_pow",
+    "sin", "cos", "tan", "tanh", "erf", "erf_inv", "logistic",
+    "add_any", "nextafter",
+))
+
+# shape/layout plumbing that costs no HBM round-trip of its own (XLA
+# fuses these; counting them would double every operand)
+_STRUCTURAL = frozenset((
+    "reshape", "squeeze", "expand_dims", "broadcast_in_dim", "transpose",
+    "convert_element_type", "copy", "iota", "stop_gradient",
+    "bitcast_convert_type", "rev", "slice",
+))
+
+
+def _flops_of(prim: str, eqn) -> float:
+    out = _aval(eqn.outvars[0]) if eqn.outvars else None
+    if prim == "dot_general":
+        (lc, _rc), _ = eqn.params["dimension_numbers"]
+        lhs = _aval(eqn.invars[0])
+        csz = float(np.prod([lhs.shape[i] for i in lc])) if lc else 1.0
+        return 2.0 * _size(out) * csz
+    if prim.startswith("scatter"):
+        upd = _aval(eqn.invars[2]) if len(eqn.invars) > 2 else None
+        return _size(upd) if _inexact(upd) else 0.0
+    if prim.startswith("reduce_") and prim != "reduce_precision":
+        op0 = _aval(eqn.invars[0])
+        return _size(op0) if _inexact(op0) else 0.0
+    if prim in _EW:
+        return _size(out) if _inexact(out) else 0.0
+    return 0.0
+
+
+def _bytes_of(prim: str, eqn) -> float:
+    if prim in _STRUCTURAL:
+        return 0.0
+    total = 0.0
+    for v in eqn.invars:
+        if hasattr(v, "val"):                      # literal
+            continue
+        av = _aval(v)
+        if av is not None:
+            total += _nbytes(av)
+    for v in eqn.outvars:
+        av = _aval(v)
+        if av is not None:
+            total += _nbytes(av)
+    return total
+
+
+def _mesh_size(params: dict) -> int | None:
+    mesh = params.get("mesh")
+    shape = getattr(mesh, "shape", None)
+    if shape is None:
+        return None
+    return int(np.prod(list(dict(shape).values()))) or 1
+
+
+def _walk(jaxpr, acc: _Acc, in_loop: bool, devices: int) -> None:
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        kind = _coll_kind(prim)
+        if kind is not None:
+            acc.colls.append(_collective(kind, eqn, in_loop, devices))
+            continue
+        subs = _sub_jaxprs(list(eqn.params.values()))
+        if subs:
+            loop = in_loop or prim in ("while", "scan")
+            dev = _mesh_size(eqn.params) if prim.startswith("shard_map") \
+                else None
+            for sub in subs:
+                _walk(sub, acc, loop, dev or devices)
+            continue
+        f = _flops_of(prim, eqn) * devices
+        b = _bytes_of(prim, eqn) * devices
+        if in_loop:
+            acc.flops_loop += f
+            acc.bytes_loop += b
+        else:
+            acc.flops += f
+            acc.bytes += b
+
+
+# --------------------------------------------------------------------------
+# dtype-flow audit (TRACE004/005)
+# --------------------------------------------------------------------------
+
+def _dtype_audit(jaxpr, consts, base: np.dtype, rep: Report) -> None:
+    seen4: set = set()
+    seen5: set = set()
+
+    def flag5(dtype, what: str) -> None:
+        d = np.dtype(dtype)
+        if _float_dtype(d) and d.itemsize > base.itemsize \
+                and d not in seen5:
+            seen5.add(d)
+            rep.add("TRACE005",
+                    f"{what} of dtype {d.name} is wider than the "
+                    f"{base.name} program dtype — an x64/f64 leak that "
+                    "silently promotes the whole dataflow",
+                    where="dtype-flow", dtype=d.name, base=base.name)
+
+    for c in consts:
+        if hasattr(c, "dtype"):
+            flag5(c.dtype, "trace constant")
+
+    def visit(jx) -> None:
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "convert_element_type":
+                a, b = _aval(eqn.invars[0]), _aval(eqn.outvars[0])
+                if _inexact(a) and _inexact(b) and a.dtype != b.dtype \
+                        and (a.dtype, b.dtype) not in seen4:
+                    seen4.add((a.dtype, b.dtype))
+                    verb = ("promotion" if np.dtype(b.dtype).itemsize
+                            >= np.dtype(a.dtype).itemsize else "demotion")
+                    rep.add("TRACE004",
+                            f"silent float {verb} "
+                            f"{np.dtype(a.dtype).name} -> "
+                            f"{np.dtype(b.dtype).name} on the traced "
+                            "dataflow",
+                            where="dtype-flow",
+                            src=np.dtype(a.dtype).name,
+                            dst=np.dtype(b.dtype).name)
+            for v in eqn.invars:
+                if hasattr(v, "val"):
+                    av = _aval(v)
+                    if av is not None:
+                        flag5(av.dtype, "literal")
+            for v in eqn.outvars:
+                av = _aval(v)
+                if av is not None:
+                    flag5(av.dtype, "result")
+            for sub in _sub_jaxprs(list(eqn.params.values())):
+                visit(sub)
+
+    visit(jaxpr)
+
+
+# --------------------------------------------------------------------------
+# schedule conformance (TRACE001/002/003)
+# --------------------------------------------------------------------------
+
+def _expected_schedule(plan, axis):
+    """Per level: (level, axes-key, [(round_index, perm), ...] for the
+    non-empty rounds, in round order) — mirrors exactly what
+    ``_halo_exchange`` / ``_hier_exchange`` stage."""
+    from ..sparse.distributed import TreePlan
+    if isinstance(plan, TreePlan):
+        axes = tuple(axis) if not isinstance(axis, str) else (axis,)
+        h = plan.h
+        out = []
+        for lvl in range(h):
+            key = tuple(axes[h - 1 - lvl:])
+            rounds = [(c, tuple(map(tuple, p)))
+                      for c, p in enumerate(plan.round_perms_lvl[lvl]) if p]
+            out.append((lvl, key, rounds))
+        return out
+    key = (axis,) if isinstance(axis, str) else tuple(axis)
+    rounds = [(c, tuple(map(tuple, p)))
+              for c, p in enumerate(plan.round_perms) if p]
+    return [(0, key, rounds)]
+
+
+def _check_schedule(colls: list[Collective], plan, axis, comm: str | None,
+                    rep: Report) -> dict[tuple, int]:
+    """Cross-check staged collectives against the plan schedule.  Returns
+    ``{axes-key: level}`` for per-level cost attribution."""
+    groups: dict[tuple, list] = {}
+    for c in colls:
+        if c.kind == "ppermute":
+            groups.setdefault(c.axes, []).append(c.perm)
+
+    key_level: dict[tuple, int] = {}
+    if plan is not None and comm == "allgather":
+        # the gather baseline stages no ppermute rounds at all — any that
+        # appear are not derivable from this schedule (flagged below via
+        # the leftover groups), and each all_gather must run over the
+        # program's own axis
+        exp_axes = {axis} if isinstance(axis, str) else set(axis)
+        for c in colls:
+            if c.kind == "all_gather" and set(c.axes) != exp_axes:
+                rep.add("TRACE003",
+                        f"all_gather over axes {c.axes}; this program "
+                        f"gathers over {tuple(sorted(exp_axes))}",
+                        where=f"axes {c.axes}", kind=c.kind)
+    elif plan is not None:
+        for lvl, key, rounds in _expected_schedule(plan, axis):
+            key_level[key] = lvl
+            got = groups.pop(key, [])
+            if not rounds:
+                if got:
+                    rep.add("TRACE001",
+                            f"level {lvl}: plan schedules no rounds on "
+                            f"axes {key} but the program stages "
+                            f"{len(got)} ppermute(s)",
+                            where=f"level {lvl}",
+                            staged=len(got), planned=0)
+                continue
+            # the program may apply the matvec m times (e.g. the CG
+            # initial residual + the loop body) — each application must
+            # replay the full round schedule in order
+            if not got or len(got) % len(rounds):
+                rep.add("TRACE001",
+                        f"level {lvl}: program stages {len(got)} "
+                        f"ppermute round(s) on axes {key}, plan "
+                        f"schedules {len(rounds)} — dropped or extra "
+                        "rounds (or rounds staged on the wrong axes)",
+                        where=f"level {lvl}",
+                        staged=len(got), planned=len(rounds))
+                continue
+            m = len(got) // len(rounds)
+            bad: set[int] = set()
+            for a in range(m):
+                block = got[a * len(rounds):(a + 1) * len(rounds)]
+                for (c_idx, eperm), gperm in zip(rounds, block):
+                    if c_idx in bad:
+                        continue
+                    if set(gperm) != set(eperm) or len(gperm) != len(eperm):
+                        bad.add(c_idx)
+                        rep.add("TRACE002",
+                                f"level {lvl} round {c_idx}: staged "
+                                "permutation differs from the plan's "
+                                "round_perms — halo words would land on "
+                                "the wrong devices",
+                                where=f"level {lvl} round {c_idx}",
+                                staged=sorted(gperm),
+                                planned=sorted(eperm))
+    for key, got in sorted(groups.items()):
+        rep.add("TRACE003",
+                f"{len(got)} ppermute(s) over axes {key} not derivable "
+                "from the plan schedule",
+                where=f"axes {key}", staged=len(got))
+
+    allowed = _ALLOWED_KINDS.get(comm, _ALLOWED_KINDS[None])
+    flagged: set[str] = set()
+    for c in colls:
+        if c.kind == "ppermute" or c.kind in allowed or c.kind in flagged:
+            continue
+        flagged.add(c.kind)
+        what = (f"comm={comm!r} programs" if comm is not None
+                else "a single-device program")
+        rep.add("TRACE003",
+                f"{c.kind} over axes {c.axes} staged in {what}",
+                where=f"axes {c.axes}", kind=c.kind)
+    return key_level
+
+
+# --------------------------------------------------------------------------
+# static cost model
+# --------------------------------------------------------------------------
+
+_ROOFLINE_KIND = {
+    "ppermute": "collective-permute",
+    "psum": "all-reduce",
+    "all_gather": "all-gather",
+    "pbroadcast": "all-gather",
+    "reduce_scatter": "reduce-scatter",
+    "all_to_all": "all-to-all",
+}
+
+
+@dataclasses.dataclass
+class TraceCost:
+    """Static per-program cost counted from the jaxpr (global totals
+    across all devices).  ``*_per_iter`` is the while/scan body (one CG
+    iteration); for a loop-free program (a matvec) it equals the whole
+    program.  ``comm_wire_bytes_lvl`` is the staged (padded) ppermute
+    traffic per tree level and iteration; ``comm_payload_bytes_lvl`` is
+    the live mask-selected halo words from the plan — the quantity that
+    matches ``metrics.tree_comm_volumes`` exactly."""
+
+    dtype: str
+    n_devices: int
+    flops: float
+    flops_per_iter: float
+    hbm_bytes: float
+    hbm_bytes_per_iter: float
+    rounds_lvl: tuple = ()
+    comm_wire_bytes_lvl: tuple = ()
+    comm_payload_bytes_lvl: tuple = ()
+    collective_bytes: dict[str, float] = dataclasses.field(
+        default_factory=dict)          # kind -> wire bytes per iteration
+
+    def collectives(self) -> dict[str, float]:
+        """Per-iteration wire bytes keyed by HLO collective name — the
+        shape ``launch.roofline.roofline_terms`` consumes (all-reduce is
+        doubled there, so psum bytes are reported once here)."""
+        out: dict[str, float] = {}
+        for kind, b in self.collective_bytes.items():
+            name = _ROOFLINE_KIND.get(kind, kind)
+            out[name] = out.get(name, 0.0) + b
+        return out
+
+    def roofline(self) -> dict[str, Any]:
+        from ..launch.roofline import static_roofline
+        return static_roofline(self)
+
+    def to_dict(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        for key in ("rounds_lvl", "comm_wire_bytes_lvl",
+                    "comm_payload_bytes_lvl"):
+            d[key] = list(d[key])
+        return d
+
+
+def _payload_bytes_lvl(plan, itemsize: int, nb: int) -> tuple:
+    """Live halo words per level x itemsize x RHS width — each non-zero
+    send_mask slot is one (receiver, vertex) delivery, so this equals the
+    metrics-side deduplicated volume exactly."""
+    from ..sparse.distributed import TreePlan
+    if isinstance(plan, TreePlan):
+        masks = plan.send_mask_lvl
+    else:
+        masks = (plan.send_mask,)
+    return tuple(float(np.asarray(m).sum()) * itemsize * nb for m in masks)
+
+
+def _build_cost(acc: _Acc, plan, key_level: dict[tuple, int],
+                base: np.dtype, nb: int | None,
+                n_devices: int) -> TraceCost:
+    has_loop = bool(acc.flops_loop or acc.bytes_loop
+                    or any(c.in_loop for c in acc.colls))
+    iter_colls = [c for c in acc.colls if c.in_loop] if has_loop \
+        else acc.colls
+
+    by_kind: dict[str, float] = {}
+    n_lvls = len({lvl for lvl in key_level.values()}) if key_level else 0
+    wire_lvl = [0.0] * n_lvls
+    rounds_lvl = [0] * n_lvls
+    for c in iter_colls:
+        by_kind[c.kind] = by_kind.get(c.kind, 0.0) + c.nbytes * c.devices
+        if c.kind == "ppermute" and c.axes in key_level:
+            lvl = key_level[c.axes]
+            wire_lvl[lvl] += c.nbytes * c.devices
+            rounds_lvl[lvl] += 1
+
+    payload = ()
+    if plan is not None:
+        payload = _payload_bytes_lvl(plan, base.itemsize, nb or 1)
+    return TraceCost(
+        dtype=base.name, n_devices=n_devices,
+        flops=acc.flops, flops_per_iter=(acc.flops_loop if has_loop
+                                         else acc.flops),
+        hbm_bytes=acc.bytes,
+        hbm_bytes_per_iter=(acc.bytes_loop if has_loop else acc.bytes),
+        rounds_lvl=tuple(rounds_lvl),
+        comm_wire_bytes_lvl=tuple(wire_lvl),
+        comm_payload_bytes_lvl=payload,
+        collective_bytes=by_kind)
+
+
+# --------------------------------------------------------------------------
+# entry points
+# --------------------------------------------------------------------------
+
+def audit_jaxpr(closed, *, subject: str = "program", plan=None,
+                axis="pu", comm: str | None = None,
+                base_dtype=None, nb: int | None = None) -> Report:
+    """Audit one closed jaxpr against ``plan``'s schedule; the report
+    carries the :class:`TraceCost` in ``info['cost']``."""
+    jaxpr = getattr(closed, "jaxpr", closed)
+    consts = getattr(closed, "consts", ())
+    if base_dtype is None:
+        inexact = [v.aval.dtype for v in jaxpr.invars
+                   if _inexact(_aval(v))]
+        base_dtype = inexact[0] if inexact else np.float32
+    base = np.dtype(base_dtype)
+
+    rep = Report(subject=subject)
+    acc = _Acc()
+    _walk(jaxpr, acc, in_loop=False, devices=1)
+    key_level = _check_schedule(acc.colls, plan, axis, comm, rep)
+    _dtype_audit(jaxpr, consts, base, rep)
+    n_dev = max((c.devices for c in acc.colls), default=1)
+    if plan is not None:
+        n_dev = max(n_dev, plan.k)
+    rep.info["cost"] = _build_cost(acc, plan, key_level, base, nb, n_dev)
+    rep.info["n_collectives"] = len(acc.colls)
+    return rep
+
+
+def _merge(rep: Report, sub: Report, tag: str) -> None:
+    for d in sub.diagnostics:
+        where = f"{tag}: {d.where}" if d.where else tag
+        rep.diagnostics.append(dataclasses.replace(d, where=where))
+    rep.info[f"cost_{tag}"] = sub.info["cost"]
+
+
+def audit_operator(op, *, nb: int | None = None, solver: bool = True,
+                   tol: float = 1e-6, max_iters: int = 100,
+                   precondition: str | None = None,
+                   subject: str | None = None) -> Report:
+    """Trace + audit an operator's matvec and (optionally) its CG solve.
+
+    Works on any backend from ``operator.make_operator``; distributed
+    operators built over ``distributed.abstract_mesh_for(plan)`` trace
+    without devices.  ``info`` carries ``cost_matvec`` / ``cost_cg``.
+    """
+    plan = getattr(op, "plan", None)
+    comm = getattr(op, "comm", None)
+    axis = getattr(op, "axis", "pu")
+    spec = op.operand_spec(nb)
+    rep = Report(subject=subject or type(op).__name__)
+
+    mv = jax.make_jaxpr(op.matvec)(spec)
+    _merge(rep, audit_jaxpr(mv, plan=plan, axis=axis, comm=comm, nb=nb),
+           "matvec")
+    if solver:
+        if hasattr(op, "fused_solver"):
+            fn: Callable = op.fused_solver(tol, max_iters, precondition)
+        else:
+            from ..sparse.cg import cg_solve
+
+            def fn(b):
+                return cg_solve(op, b, tol=tol, max_iters=max_iters,
+                                precondition=precondition,
+                                batched=nb is not None)
+        cg = jax.make_jaxpr(fn)(spec)
+        _merge(rep, audit_jaxpr(cg, plan=plan, axis=axis, comm=comm,
+                                nb=nb), "cg")
+    return rep
+
+
+def audit_backend(backend: str, *, n: int = 144,
+                  fanouts: tuple[int, ...] = (2, 2),
+                  generator: str = "grid_2d", seed: int = 0,
+                  nb: int | None = None, part=None,
+                  tol: float = 1e-6, max_iters: int = 100,
+                  precondition: str | None = None) -> Report:
+    """Build a small fixture system + operator on an abstract mesh and
+    audit it — the ``make trace-audit`` / CLI entry point.  The default
+    partition is the benchmark's locality-preserving stripes."""
+    from .. import compat
+    from ..launch.mesh import tree_axis_names
+    from ..sparse.generators import GENERATORS
+    from ..sparse.graph import laplacian_csr
+    from ..sparse.operator import _HIER_BACKENDS, make_operator
+
+    g = GENERATORS[generator](n, seed=seed)
+    nv = len(g.indptr) - 1
+    indptr, indices, data = laplacian_csr(g, shift=0.1)
+    k = int(np.prod(fanouts))
+    if part is None:
+        part = (np.arange(nv) * k) // nv
+    subject = (f"{backend} {generator} n={nv} fanouts="
+               + "x".join(map(str, fanouts))
+               + (f" nb={nb}" if nb else "")
+               + (f" prec={precondition}" if precondition else ""))
+
+    kw: dict[str, Any] = {}
+    if backend in ("coo", "bell"):
+        op = make_operator(indptr, indices, data, backend)
+    else:
+        if backend in _HIER_BACKENDS:
+            if len(fanouts) < 2:
+                raise ValueError(f"{backend} needs >= 2 tree levels; got "
+                                 f"fanouts={fanouts}")
+            names = tree_axis_names(len(fanouts))
+            mesh = compat.abstract_mesh(dict(zip(names, fanouts)))
+            kw["fanouts"] = tuple(fanouts)
+        else:
+            mesh = compat.abstract_mesh({"pu": k})
+        op = make_operator(indptr, indices, data, backend, part=part, k=k,
+                           mesh=mesh, **kw)
+    return audit_operator(op, nb=nb, tol=tol, max_iters=max_iters,
+                          precondition=precondition, subject=subject)

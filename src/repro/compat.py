@@ -49,6 +49,35 @@ PartitionSpec = jax.sharding.PartitionSpec
 P = PartitionSpec
 NamedSharding = jax.sharding.NamedSharding
 
+# AbstractMesh: a mesh that carries axis names/sizes but no devices, so
+# shard_map programs can be traced (jax.make_jaxpr / eval_shape) on a
+# machine with none of the target topology.  The constructor changed
+# shape across releases: 0.4.x/0.5.x take a shape tuple of (name, size)
+# pairs, current JAX takes (axis_sizes, axis_names).
+_AbstractMesh = getattr(jax.sharding, "AbstractMesh", None)
+HAS_ABSTRACT_MESH: bool = _AbstractMesh is not None
+
+
+def abstract_mesh(shape) -> Any:
+    """Device-free mesh from ``{axis_name: size}`` (or (name, size) pairs).
+
+    The result carries ``axis_names`` / ``shape`` like a concrete
+    ``Mesh`` and is accepted by :func:`shard_map`, so solver programs can
+    be abstractly traced for the jaxpr-level audit
+    (``repro.analysis.trace``) without any devices.
+    """
+    if _AbstractMesh is None:
+        raise NotImplementedError(
+            "jax.sharding.AbstractMesh is unavailable on this JAX version; "
+            "device-free tracing needs jax >= 0.4.34")
+    pairs = tuple(shape.items()) if hasattr(shape, "items") else tuple(shape)
+    try:
+        return _AbstractMesh(pairs)
+    except TypeError:
+        return _AbstractMesh(tuple(s for _, s in pairs),
+                             tuple(n for n, _ in pairs))
+
+
 # Partial-manual shard_map (manual over a subset of mesh axes) only works
 # where it is a first-class API (jax.shard_map with axis_names); the 0.4.x
 # `auto=` spelling trips an XLA CHECK (IsManualSubgroup) when lowered under
@@ -231,4 +260,5 @@ def get_ambient_mesh() -> Any | None:
 
 __all__ = ["JAX_VERSION", "Mesh", "PartitionSpec", "P", "NamedSharding",
            "shard_map", "use_mesh", "get_ambient_mesh",
-           "manual_axis_names", "constrain_to_mesh"]
+           "manual_axis_names", "constrain_to_mesh",
+           "abstract_mesh", "HAS_ABSTRACT_MESH"]

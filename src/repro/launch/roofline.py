@@ -183,6 +183,28 @@ def roofline_terms(flops: float, bytes_accessed: float,
     }
 
 
+def static_roofline(cost) -> dict[str, Any]:
+    """Roofline terms from a static ``analysis.trace.TraceCost`` — the
+    device-free counterpart of :func:`analyze_compiled`: no compilation,
+    no HLO, just the jaxpr-counted per-CG-iteration FLOPs/bytes.
+
+    ``TraceCost`` totals are global (summed over all devices); the
+    roofline terms are per-device, so everything is divided by
+    ``n_devices`` first.  ``cost.collectives()`` already uses the HLO
+    collective names :func:`roofline_terms` expects (psum bytes arrive
+    once and get the all-reduce x2 there).
+    """
+    k = max(int(cost.n_devices), 1)
+    coll = {name: b / k for name, b in cost.collectives().items()}
+    out = roofline_terms(cost.flops_per_iter / k,
+                         cost.hbm_bytes_per_iter / k, coll)
+    out["static_flops_per_iter"] = cost.flops_per_iter
+    out["static_bytes_per_iter"] = cost.hbm_bytes_per_iter
+    out["n_devices"] = k
+    out["per_iteration"] = True
+    return out
+
+
 def analyze_compiled(lowered, compiled,
                      seq_len: int | None = None) -> dict[str, Any]:
     cost = compiled.cost_analysis()

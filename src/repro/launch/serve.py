@@ -134,6 +134,8 @@ class SolverService:
         # warm request would re-trace the while_loop body, and the cache
         # hit would only skip format conversion, not compilation
         self._jit: dict[str, object] = {}
+        # (fingerprint, bucket) -> static price (trace audit + roofline)
+        self._cost: dict[tuple[str, int], dict] = {}
 
     def bucket_for(self, nb: int) -> int:
         """Smallest admission class holding ``nb`` columns; oversize
@@ -162,8 +164,38 @@ class SolverService:
             old_fp, _ = self._ops.popitem(last=False)
             self._warm = {w for w in self._warm if w[0] != old_fp}
             self._jit.pop(old_fp, None)
+            self._cost = {key: v for key, v in self._cost.items()
+                          if key[0] != old_fp}
             self.stats.operator_evictions += 1
         return fp, op, False
+
+    def static_cost(self, indptr, indices, data, nb: int = 1,
+                    fingerprint: str | None = None) -> dict:
+        """Device-free price of serving a request of width ``nb``: admit
+        it into its size class, resolve the operator through the cache,
+        trace the solver on an abstract mesh (``analysis.trace``) and run
+        the static roofline over the counted per-iteration cost.  No
+        compilation, no devices — usable at admission time to pick a
+        bucket or reject oversize work.  Cached per (matrix, bucket),
+        evicted with the operator."""
+        from ..analysis.trace import audit_operator
+        from .roofline import static_roofline
+
+        bucket = self.bucket_for(int(nb))
+        fp, op, _ = self.operator_for(indptr, indices, data, fingerprint)
+        cached = self._cost.get((fp, bucket))
+        if cached is not None:
+            return cached
+        rep = audit_operator(op, nb=bucket if bucket > 1 else None,
+                             tol=self.tol, max_iters=self.max_iters,
+                             precondition=self.precondition,
+                             subject=f"serve {self.backend} nb={bucket}")
+        cost = rep.info.get("cost_cg") or rep.info.get("cost_matvec")
+        out = {"fingerprint": fp, "bucket": bucket, "ok": rep.ok,
+               "diagnostics": [str(d) for d in rep.diagnostics],
+               "cost": cost, "roofline": static_roofline(cost)}
+        self._cost[(fp, bucket)] = out
+        return out
 
     def solve(self, indptr, indices, data, b,
               fingerprint: str | None = None) -> SolveResponse:

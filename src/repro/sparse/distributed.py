@@ -1147,6 +1147,36 @@ def _validate_tree_axes(plan: "TreePlan", mesh: Mesh, axis) -> None:
     check_mesh_axes(plan, mesh, tuple(axis)).raise_for_errors()
 
 
+def abstract_mesh_for(plan: DistPlan, axis: str | tuple = "pu"):
+    """Device-free mesh shaped for ``plan``'s schedule (trace entry hook).
+
+    Returns a ``compat.abstract_mesh`` whose axis names/sizes match what
+    :func:`make_dist_spmv` / :func:`make_dist_cg` expect for this plan, so
+    the solver programs can be traced (``jax.make_jaxpr``) and audited on
+    a machine with no devices — the entry point used by
+    ``repro.analysis.trace``.
+
+    Flat plans get a single ``axis`` of size ``k``.  Tree plans get one
+    axis per level (``launch.mesh.tree_axis_names`` by default, or the
+    explicit ``axis`` tuple), outermost first; when more axes than levels
+    are named, the extra leading axes get size 1 — they fold into the
+    outermost level exactly as on a concrete mesh.
+    """
+    from .. import compat
+    if isinstance(plan, TreePlan):
+        if axis == "pu":
+            from ..launch.mesh import tree_axis_names
+            names = tree_axis_names(max(plan.h, 2))
+        else:
+            names = tuple(axis)
+        fanouts = plan.fanouts
+        if len(names) > len(fanouts):
+            fanouts = (1,) * (len(names) - len(fanouts)) + tuple(fanouts)
+        return compat.abstract_mesh(dict(zip(names, fanouts)))
+    name = axis if isinstance(axis, str) else tuple(axis)[0]
+    return compat.abstract_mesh({name: plan.k})
+
+
 def _local_matvec_builder(plan: DistPlan, comm: str, axis: str,
                           local_format: str = "coo"):
     """Shared per-device matvec for every comm/format combination.

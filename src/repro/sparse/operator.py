@@ -62,6 +62,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Protocol, runtime_checkable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -116,6 +117,13 @@ class CooOperator:
     def matvec(self, x):
         return spmv_coo(self.rows, self.cols, self.vals, x, n=self.n)
 
+    def operand_spec(self, nb: int | None = None):
+        """``ShapeDtypeStruct`` of the matvec operand — the abstract input
+        the trace auditor (``repro.analysis.trace``) feeds to
+        ``jax.make_jaxpr``; ``nb`` adds the trailing RHS-batch axis."""
+        shape = (self.n,) if nb is None else (self.n, nb)
+        return jax.ShapeDtypeStruct(shape, self.vals.dtype)
+
     def dot(self, u, v):
         return jnp.vdot(u, v)
 
@@ -166,6 +174,13 @@ class BlockEllOperator:
         from ..kernels.spmv_bell import spmv_block_ell
         return spmv_block_ell(self.blocks, self.cols, x,
                               interpret=self.interpret)
+
+    def operand_spec(self, nb: int | None = None):
+        """Abstract matvec operand for device-free tracing (the Pallas
+        kernel is single-RHS, so ``nb`` is rejected like in matvec)."""
+        if nb is not None:
+            raise ValueError("BlockEllOperator is single-RHS")
+        return jax.ShapeDtypeStruct((self.n,), self.blocks.dtype)
 
     def dot(self, u, v):
         return jnp.vdot(u, v)
@@ -267,6 +282,30 @@ class DistributedOperator:
     def matvec(self, x):
         return self._spmv(x)
 
+    def operand_spec(self, nb: int | None = None):
+        """Abstract (k, B[, nb]) operator-space operand for device-free
+        tracing: together with :func:`distributed.abstract_mesh_for` this
+        lets ``repro.analysis.trace`` audit the staged program without
+        any of the target topology present."""
+        shape = (self.plan.k, self.plan.B)
+        if nb is not None:
+            shape = shape + (nb,)
+        return jax.ShapeDtypeStruct(shape, self.plan.vals.dtype)
+
+    def fused_solver(self, tol: float = 1e-6, max_iters: int = 500,
+                     precondition: str | None = None):
+        """The cached fused whole-CG program on *operator-space* operands
+        ((k, B[, nb]) -> (x, res, iters)) — what :meth:`solve` runs after
+        scattering, exposed so the trace auditor can ``make_jaxpr`` it."""
+        key = (tol, max_iters, precondition)
+        fused = self._fused.get(key)
+        if fused is None:
+            fused = self._fused[key] = make_dist_cg(
+                self.plan, self.mesh, axis=self.axis,
+                tol=tol, max_iters=max_iters, comm=self.comm,
+                local_format=self.local_format, precondition=precondition)
+        return fused
+
     def dot(self, u, v):
         return jnp.vdot(u, v)
 
@@ -303,13 +342,7 @@ class DistributedOperator:
         ``jax.jit`` retraces per operand shape under one cache entry, so
         repeated solves with new right-hand sides (same batch width) pay
         no re-trace."""
-        key = (tol, max_iters, precondition)
-        fused = self._fused.get(key)
-        if fused is None:
-            fused = self._fused[key] = make_dist_cg(
-                self.plan, self.mesh, axis=self.axis,
-                tol=tol, max_iters=max_iters, comm=self.comm,
-                local_format=self.local_format, precondition=precondition)
+        fused = self.fused_solver(tol, max_iters, precondition)
         x, res, it = fused(self.scatter(b))
         return CGResult(x=x, iters=it, residual=res)
 

@@ -185,6 +185,66 @@ def test_repro004_float_inside_jit(tmp_path):
     assert not any(ln == 13 for _, ln in codes)
 
 
+def test_repro004_np_asarray_inside_jit(tmp_path):
+    rep = _lint_snippet(tmp_path, """\
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            return np.asarray(x)
+
+        @jax.jit
+        def g(x):
+            return np.array(x)
+    """)
+    codes = _codes_lines(rep)
+    assert ("REPRO004", 6) in codes
+    assert ("REPRO004", 10) in codes
+
+
+def test_repro004_np_asarray_outside_jit_is_fine(tmp_path):
+    # host plan-building is where np.asarray belongs — even in sparse/
+    rep = _lint_snippet(tmp_path, """\
+        import numpy as np
+
+        def build_plan(edges):
+            return np.asarray(edges)
+    """, rel="repro/sparse/foo.py")
+    assert rep.ok, str(rep)
+
+
+def test_repro004_device_get_in_solver(tmp_path):
+    rep = _lint_snippet(tmp_path, """\
+        import jax
+
+        def fetch(y):
+            return jax.device_get(y)
+    """, rel="repro/sparse/foo.py")
+    assert ("REPRO004", 4) in _codes_lines(rep)
+
+
+def test_repro004_device_get_inside_jit_anywhere(tmp_path):
+    rep = _lint_snippet(tmp_path, """\
+        import jax
+
+        @jax.jit
+        def step(y):
+            return jax.device_get(y)
+    """, rel="repro/launch/foo.py")
+    assert ("REPRO004", 5) in _codes_lines(rep)
+
+
+def test_repro004_device_get_outside_solver_not_jitted_is_fine(tmp_path):
+    rep = _lint_snippet(tmp_path, """\
+        import jax
+
+        def report(y):
+            return jax.device_get(y)
+    """, rel="repro/launch/foo.py")
+    assert rep.ok, str(rep)
+
+
 # ----------------------------------------------------------------- corpus
 
 def test_syntax_error_reported_not_raised(tmp_path):
