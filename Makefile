@@ -5,7 +5,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test tier1 deps lint verify-plans trace-audit bench-cg bench \
-        bench-hier bench-pod bench-tree bench-serve
+        bench-hier bench-pod bench-tree bench-serve bench-bottleneck \
+        bench-diff
 
 deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -60,6 +61,18 @@ bench-tree:
 # the tracked benchmarks/baselines/BENCH_serve.json
 bench-serve:
 	$(PYTHON) -m benchmarks.bench_serve
+
+# Bottleneck (makespan) vs cut refinement on the padded tree runtime:
+# B / S_lvl / round structure and measured per-CG-iteration minima
+# (ISSUE 9); writes the tracked benchmarks/baselines/BENCH_bottleneck.json
+bench-bottleneck:
+	$(PYTHON) -m benchmarks.bench_cg --objective bottleneck
+
+# Regression gate: diff fresh BENCH_*.json in the working tree against
+# the committed benchmarks/baselines/ (HEAD); >20% regressions on
+# modeled objectives / round counts fail, latency drift only warns
+bench-diff:
+	$(PYTHON) -m benchmarks.diff
 
 bench:
 	$(PYTHON) -m benchmarks.run

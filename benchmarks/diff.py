@@ -1,0 +1,131 @@
+"""Benchmark regression gate (``make bench-diff``).
+
+Diffs the *working tree* ``benchmarks/baselines/BENCH_*.json`` against
+the *committed* versions (``git show HEAD:...``).  The workflow is: run
+the benches (they overwrite the baselines in place), then run this gate
+before committing — it classifies every numeric leaf by its key path:
+
+  * **fail** — machine-independent structure: modeled objectives
+    (``*objective*``, ``*makespan*``, modeled ``price``) and schedule
+    round counts (``rounds*``).  A >20% increase fails the gate; these
+    numbers are deterministic per (graph, seed), so a regression is a
+    real quality loss, not noise.
+  * **warn** — wall-clock (``*_us``, ``*_s``, ``wall*``, ``latency*``,
+    ``*time*``): printed but never failing, since host timings drift
+    with the machine.
+  * everything else (agreement flags, shas, sizes) is ignored.
+
+Exit status: number of failing regressions (0 = gate passes).  A
+baseline file with no committed counterpart is reported as new and
+skipped; a committed file deleted from the working tree fails.
+"""
+from __future__ import annotations
+
+import json
+import re
+import subprocess
+import sys
+
+from .common import BASELINES
+
+# >20% increase on a fail-class leaf fails the gate
+THRESHOLD = 0.20
+
+_FAIL_RE = re.compile(r"objective|makespan|rounds|(^|\.)price($|\.)")
+_WARN_RE = re.compile(r"_us($|\.)|_s($|\.)|wall|latency|time")
+# measurement noise / bookkeeping that must never gate
+_SKIP_RE = re.compile(r"agreement|max_rel|error|fingerprint|sha|raw\.")
+
+
+def _leaves(node, path=""):
+    """Yield (dotted.path, value) for every numeric scalar leaf."""
+    if isinstance(node, bool):
+        return
+    if isinstance(node, (int, float)):
+        yield path, float(node)
+    elif isinstance(node, dict):
+        for k in sorted(node):
+            yield from _leaves(node[k], f"{path}.{k}" if path else str(k))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from _leaves(v, f"{path}[{i}]")
+
+
+def _committed(relpath: str) -> dict | None:
+    """The HEAD version of a repo-relative file, or None if untracked."""
+    proc = subprocess.run(["git", "show", f"HEAD:{relpath}"],
+                          capture_output=True, text=True,
+                          cwd=BASELINES.parent.parent)
+    if proc.returncode != 0:
+        return None
+    return json.loads(proc.stdout)
+
+
+def diff_payloads(old: dict, new: dict,
+                  threshold: float = THRESHOLD) -> tuple[list, list]:
+    """(failures, warnings): [(path, old, new, rel_increase), ...].
+
+    Only *increases* regress — objectives and rounds are all
+    lower-is-better, and so are the warn-class latencies.
+    """
+    old_leaves = dict(_leaves(old))
+    failures, warnings = [], []
+    for path, val in _leaves(new):
+        if _SKIP_RE.search(path.lower()):
+            continue
+        prev = old_leaves.get(path)
+        if prev is None:
+            continue                      # new metric: no baseline yet
+        rel = (val - prev) / max(abs(prev), 1e-12)
+        if rel <= threshold:
+            continue
+        low = path.lower()
+        if _FAIL_RE.search(low):
+            failures.append((path, prev, val, rel))
+        elif _WARN_RE.search(low):
+            warnings.append((path, prev, val, rel))
+    return failures, warnings
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    n_fail = 0
+    files = sorted(BASELINES.glob("BENCH_*.json"))
+    if not files:
+        print("bench-diff: no baselines in", BASELINES)
+        return 0
+    for path in files:
+        rel = path.relative_to(BASELINES.parent.parent).as_posix()
+        new = json.loads(path.read_text())
+        old = _committed(rel)
+        if old is None:
+            print(f"  NEW   {path.name} (no committed baseline; skipped)")
+            continue
+        failures, warnings = diff_payloads(old, new)
+        status = "FAIL" if failures else ("warn" if warnings else "ok")
+        print(f"  {status:5s} {path.name}")
+        for p, prev, val, r in failures:
+            print(f"        FAIL {p}: {prev:g} -> {val:g} (+{r:.0%})")
+        for p, prev, val, r in warnings:
+            print(f"        warn {p}: {prev:g} -> {val:g} (+{r:.0%})")
+        n_fail += len(failures)
+    # a committed baseline deleted from the working tree is a regression
+    ls = subprocess.run(
+        ["git", "ls-tree", "--name-only", "HEAD", "benchmarks/baselines/"],
+        capture_output=True, text=True, cwd=BASELINES.parent.parent)
+    for line in ls.stdout.splitlines():
+        name = line.rsplit("/", 1)[-1]
+        if (name.startswith("BENCH_") and name.endswith(".json")
+                and not (BASELINES / name).exists()):
+            print(f"  FAIL  {name} committed baseline missing from tree")
+            n_fail += 1
+    if n_fail:
+        print(f"bench-diff: {n_fail} regression(s) over "
+              f"{THRESHOLD:.0%} threshold")
+    else:
+        print("bench-diff: gate passes")
+    return n_fail
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,6 +5,8 @@ from .api import (HierPartition, METHODS, evaluate, partition,
 from .block_sizes import (hetero_batch_split, max_load_ratio,
                           target_block_sizes, target_block_sizes_jax,
                           tree_target_block_sizes, waterfill)
+from .costmodel import (BottleneckCost, COST_MODELS, CostModel, CutCost,
+                        cost_model_for)
 from .topology import (INTER_LINK_COST, INTRA_LINK_COST, LinkCosts, PU,
                        TABLE_III_FAST_SPECS, Topology, canonical_ancestors,
                        contiguous_pods, level_matrix, normalize_pod_of,
@@ -19,4 +21,6 @@ __all__ = [
     "scale_to_load", "canonical_ancestors", "contiguous_pods",
     "level_matrix", "normalize_pod_of", "normalize_tree_of", "LinkCosts",
     "INTRA_LINK_COST", "INTER_LINK_COST", "TABLE_III_FAST_SPECS",
+    "CostModel", "CutCost", "BottleneckCost", "COST_MODELS",
+    "cost_model_for",
 ]

@@ -147,7 +147,7 @@ def _dispatch(g: Graph, method: str, tw: np.ndarray, mems: np.ndarray,
 def partition(g: Graph, topo: Topology, method: str = "geoRef",
               tw: np.ndarray | None = None, seed: int = 0,
               eps: float = 0.03, pods=None, lam: float | None = None,
-              fanouts=None, tree=None, lams=None,
+              fanouts=None, tree=None, lams=None, objective: str = "cut",
               **kw) -> tuple[np.ndarray, np.ndarray]:
     """Two-stage LDHT solve.  Returns (part, tw).
 
@@ -156,19 +156,32 @@ def partition(g: Graph, topo: Topology, method: str = "geoRef",
     ``fanouts``/``tree`` it runs the arbitrary-depth recursion
     (:func:`partition_tree`).  Use those functions directly when you
     also need the resulting ancestor table (e.g. to feed
-    ``sparse.distributed.build_plan_tree``)."""
+    ``sparse.distributed.build_plan_tree``).
+
+    ``objective="bottleneck"`` appends a makespan refinement stage
+    (:func:`core.refinement.refine_partition` bottleneck mode — max over
+    PUs of modeled compute + weighted deduplicated receive volume,
+    ``core.costmodel.BottleneckCost``); ``"cut"`` (default) is the
+    summed lambda-cut pipeline, bit-identical to before the objective
+    became selectable."""
     if pods is not None:
         res = partition_hier(g, topo, method, pods=pods, tw=tw, seed=seed,
-                             eps=eps, lam=lam, **kw)
+                             eps=eps, lam=lam, objective=objective, **kw)
         return res.part, res.tw
     if fanouts is not None or tree is not None:
         res = partition_tree(g, topo, method, fanouts=fanouts, tree=tree,
-                             tw=tw, seed=seed, eps=eps, lams=lams, **kw)
+                             tw=tw, seed=seed, eps=eps, lams=lams,
+                             objective=objective, **kw)
         return res.part, res.tw
     if tw is None:
         tw = target_block_sizes(g.n, topo)
     part = _dispatch(g, method, tw, topo.memories, topo.fanouts, seed, eps,
                      **kw)
+    if objective == "bottleneck":
+        part = refine_partition(g, part, tw, mems=topo.memories, eps=eps,
+                                objective="bottleneck", speeds=topo.speeds)
+    elif objective != "cut":
+        raise ValueError(f"unknown objective {objective!r}")
     return part, tw
 
 
@@ -193,6 +206,7 @@ class HierPartition:
     anc: np.ndarray = None  # (h-1, k) ancestor table; pod_of == anc[0]
     lams: tuple = None      # (h,) per-level objective weights
     fanouts: tuple = ()     # (k_1, ..., k_h) of the partitioned tree
+    objective: str = "cut"  # which cost model refinement minimized
 
     def __post_init__(self):
         if self.anc is None:
@@ -288,6 +302,7 @@ def partition_tree(g: Graph, topo: Topology, method: str = "geoRef",
                    fanouts=None, tree=None, tw: np.ndarray | None = None,
                    seed: int = 0, eps: float = 0.03, lams=None,
                    refine: bool = True, validate: bool | None = None,
+                   objective: str = "cut", c_comp: float = 1.0,
                    **kw) -> HierPartition:
     """Tree-aware recursive pipeline (the tentpole of the tree runtime):
 
@@ -314,7 +329,18 @@ def partition_tree(g: Graph, topo: Topology, method: str = "geoRef",
     At depth 2 every stage is the PR 4 pod pipeline (stages C/D
     bit-identical; stages A/B replace the target rescale with the
     per-subtree water-fill).
+
+    ``objective="bottleneck"`` adds a stage E after the (unchanged) cut
+    FM: makespan refinement over the incremental volume-gain tracker
+    (``refinement.refine_partition(objective='bottleneck')``,
+    Algorithm-1 ``topo.speeds`` as the compute model; ``c_comp`` is the
+    modeled compute cost per weight unit in halo-word units —
+    ``core.costmodel.CostModel.c_comp``) — the critical PU sheds
+    load/halo first.  ``"cut"`` leaves the pipeline bit-identical to
+    before the objective became selectable.
     """
+    if objective not in ("cut", "bottleneck"):
+        raise ValueError(f"unknown objective {objective!r}")
     if tw is not None:
         tw = np.asarray(tw, dtype=np.float64)
     anc = normalize_tree_of(tree, topo.k,
@@ -353,11 +379,16 @@ def partition_tree(g: Graph, topo: Topology, method: str = "geoRef",
             tw = target_block_sizes(g.n, topo)
         part = _dispatch(g, method, tw, topo.memories, topo.fanouts, seed,
                          eps, **kw)
+        if refine and objective == "bottleneck":
+            part = refine_partition(g, part, tw, mems=topo.memories,
+                                    eps=eps, objective="bottleneck",
+                                    speeds=topo.speeds, c_comp=c_comp)
         return _maybe_verify_partition(
             HierPartition(part=part, tw=tw,
                           pod_of=np.zeros(topo.k, dtype=np.int64),
                           lam=lam, anc=np.zeros((0, topo.k), np.int64),
-                          lams=(lams[0],), fanouts=(topo.k,)),
+                          lams=(lams[0],), fanouts=(topo.k,),
+                          objective=objective),
             g.n, validate)
 
     # A/B. recurse down the tree: water-fill the level's aggregates, then
@@ -407,15 +438,24 @@ def partition_tree(g: Graph, topo: Topology, method: str = "geoRef",
         # D. vertex-level FM against the weighted tree objective
         part = refine_partition(g, part, tw, mems=mems, eps=eps,
                                 anc=anc, lams=lams)
+        # E. (bottleneck mode) makespan polish from the cut-refined
+        # start: drain modeled compute + dedup halo off the critical PU
+        if objective == "bottleneck":
+            part = refine_partition(g, part, tw, mems=mems, eps=eps,
+                                    anc=anc, lams=lams,
+                                    objective="bottleneck", speeds=speeds,
+                                    c_comp=c_comp)
     return _maybe_verify_partition(
         HierPartition(part=part, tw=tw, pod_of=anc[0], lam=lam,
-                      anc=anc, lams=lams, fanouts=fanouts), g.n, validate)
+                      anc=anc, lams=lams, fanouts=fanouts,
+                      objective=objective), g.n, validate)
 
 
 def partition_hier(g: Graph, topo: Topology, method: str = "geoRef",
                    pods=2, tw: np.ndarray | None = None, seed: int = 0,
                    eps: float = 0.03, lam: float | None = None,
-                   refine: bool = True, **kw) -> HierPartition:
+                   refine: bool = True, objective: str = "cut",
+                   **kw) -> HierPartition:
     """Pod-aware two-level pipeline — the ``h == 2`` instance of
     :func:`partition_tree` (``pods`` = pod count or explicit (k,) pod
     array; stages C/D are bit-identical to the PR 4 pod path, stages A/B
@@ -429,10 +469,10 @@ def partition_hier(g: Graph, topo: Topology, method: str = "geoRef",
     pod_of = normalize_pod_of(pods, topo.k)
     res = partition_tree(g, topo, method, tree=pod_of[None, :], tw=tw,
                          seed=seed, eps=eps, lams=(1.0, float(lam)),
-                         refine=refine, **kw)
+                         refine=refine, objective=objective, **kw)
     if res.anc.shape[0] == 0:                # pods == 1 degenerates
         return HierPartition(part=res.part, tw=res.tw, pod_of=pod_of,
-                             lam=lam)
+                             lam=lam, objective=objective)
     return res
 
 
@@ -442,7 +482,7 @@ METHODS = ("geoKM", "geoRef", "geoHier", "sfc", "rcb", "rib", "sfcRef",
 
 def evaluate(g: Graph, topo: Topology, methods=METHODS, seed: int = 0,
              pods=None, lam: float | None = None, fanouts=None,
-             tree=None, lams=None,
+             tree=None, lams=None, objective: str = "cut",
              verbose: bool = True) -> dict[str, dict]:
     """Run all methods; return {method: metrics+time} (Table IV analogue).
 
@@ -450,7 +490,9 @@ def evaluate(g: Graph, topo: Topology, methods=METHODS, seed: int = 0,
     (:func:`partition_hier`) and the metrics include the intra/inter-pod
     split plus the weighted two-level objective; with ``fanouts``/
     ``tree`` the arbitrary-depth pipeline (:func:`partition_tree`) with
-    per-level splits and the tree objective."""
+    per-level splits and the tree objective.  ``objective`` selects the
+    refinement cost model per method (the summaries always report both
+    the summed cut and the bottleneck makespan)."""
     out = {}
     tw = target_block_sizes(g.n, topo)
     tree_mode = fanouts is not None or tree is not None
@@ -458,16 +500,18 @@ def evaluate(g: Graph, topo: Topology, methods=METHODS, seed: int = 0,
         t0 = time.perf_counter()
         if pods is not None:
             res = partition_hier(g, topo, m, pods=pods, tw=tw, seed=seed,
-                                 lam=lam)
+                                 lam=lam, objective=objective)
             part = res.part
             s = summarize_hier(g, part, topo, tw, res.pod_of, lam=res.lam)
         elif tree_mode:
             res = partition_tree(g, topo, m, fanouts=fanouts, tree=tree,
-                                 tw=tw, seed=seed, lams=lams)
+                                 tw=tw, seed=seed, lams=lams,
+                                 objective=objective)
             part = res.part
             s = summarize_tree(g, part, topo, tw, res.anc, lams=res.lams)
         else:
-            part, _ = partition(g, topo, m, tw=tw, seed=seed)
+            part, _ = partition(g, topo, m, tw=tw, seed=seed,
+                                objective=objective)
             s = summarize(g, part, topo, tw)
         dt = time.perf_counter() - t0
         s["time_s"] = dt

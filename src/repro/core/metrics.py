@@ -59,6 +59,32 @@ def edge_cut(g: Graph, part: np.ndarray) -> float:
     return float(cut2) / 2.0
 
 
+# The linearized-pair dedup key is ``recv * n + vert`` in int64: it wraps
+# (silently, into negative keys that unique/sort still accept) once
+# ``k * n`` approaches 2**63.  Above this threshold the dedup switches to
+# a lexsort over the two columns — bit-identical output (same pairs, same
+# (recv, vert) order), no products formed.
+_PAIR_DEDUP_MAX = 2 ** 62
+
+
+def _dedup_recv_pairs(recv: np.ndarray, vert: np.ndarray, n: int,
+                      k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Distinct (receiving block, remote vertex) pairs, sorted by
+    (recv, vert).  Returns ``(blocks, verts)`` int64 arrays."""
+    recv = np.asarray(recv, dtype=np.int64)
+    vert = np.asarray(vert, dtype=np.int64)
+    if int(max(k, 1)) * int(n) <= _PAIR_DEDUP_MAX:   # Python ints: no wrap
+        pairs = np.unique(recv * n + vert)
+        return pairs // n, pairs % n
+    if len(recv) == 0:
+        return recv, vert
+    order = np.lexsort((vert, recv))
+    r_s, v_s = recv[order], vert[order]
+    keep = np.ones(len(r_s), dtype=bool)
+    keep[1:] = (r_s[1:] != r_s[:-1]) | (v_s[1:] != v_s[:-1])
+    return r_s[keep], v_s[keep]
+
+
 def comm_volumes(g: Graph, part: np.ndarray, k: int) -> np.ndarray:
     """Received-words per block: for block b, the number of distinct remote
     vertices adjacent to b (the halo size — exactly what distributed SpMV
@@ -67,8 +93,7 @@ def comm_volumes(g: Graph, part: np.ndarray, k: int) -> np.ndarray:
     pb, pv = part[src], part[dst]
     ext = pb != pv
     # distinct (receiving block, remote vertex) pairs
-    pairs = np.unique(pb[ext].astype(np.int64) * g.n + dst[ext].astype(np.int64))
-    blocks = pairs // g.n
+    blocks, _ = _dedup_recv_pairs(pb[ext], dst[ext], g.n, k)
     return np.bincount(blocks, minlength=k)
 
 
@@ -127,13 +152,22 @@ def boundary_mask(g: Graph, part: np.ndarray) -> np.ndarray:
 
 def summarize(g: Graph, part: np.ndarray, topo: Topology,
               tw: np.ndarray) -> dict:
+    vols = comm_volumes(g, part, topo.k)
+    compute = block_sizes_of(part, topo.k) / topo.speeds
+    total = compute + vols
     return {
         "cut": edge_cut(g, part),
-        "max_comm_volume": max_comm_volume(g, part, topo.k),
-        "total_comm_volume": total_comm_volume(g, part, topo.k),
+        "max_comm_volume": int(vols.max(initial=0)),
+        "total_comm_volume": int(vols.sum()),
         "imbalance": imbalance(part, tw),
         "load_ratio": load_ratio(part, topo),
         "mem_violations": memory_violations(part, topo, slack=0.03),
+        # per-PU modeled split of the flat (single-level) bottleneck:
+        # compute = Algorithm-1 speeds x block weight, comm = dedup halo
+        "per_pu_compute": compute.tolist(),
+        "per_pu_comm_volume": vols.tolist(),
+        "bottleneck_objective": float(total.max(initial=0.0)),
+        "critical_pu": int(total.argmax()) if len(total) else 0,
     }
 
 
@@ -171,10 +205,8 @@ def tree_comm_volumes(g: Graph, part: np.ndarray, k: int,
     src, dst, _ = g.edge_list()
     pb, pv = part[src], part[dst]
     ext = pb != pv
-    pairs = np.unique(pb[ext].astype(np.int64) * g.n
-                      + dst[ext].astype(np.int64))
-    blocks = pairs // g.n
-    owners = part[pairs % g.n]
+    blocks, verts = _dedup_recv_pairs(pb[ext], dst[ext], g.n, k)
+    owners = part[verts]
     lev_pair = lev[blocks, owners]
     return np.stack([np.bincount(blocks[lev_pair == l], minlength=k)
                      for l in range(h)])
@@ -194,6 +226,67 @@ def tree_objective(g: Graph, part: np.ndarray, anc: np.ndarray,
     for lam_l, cut_l in zip(lams, cuts):
         obj += lam_l * cut_l
     return float(obj)
+
+
+def per_pu_model_costs(g: Graph, part: np.ndarray, anc: np.ndarray,
+                       lams=None, speeds: np.ndarray | None = None,
+                       c_comp: float = 1.0,
+                       vw: np.ndarray | None = None) -> dict:
+    """Per-PU modeled cost split of the bottleneck (makespan) objective:
+
+      compute[i] = c_comp * w(b_i) / speed_i        (Algorithm-1 speeds)
+      comm[i]    = sum_l lams[l] * vols[l, i]       (deduplicated receive
+                                                     volume per tree level)
+
+    ``anc`` is the (h-1, k) ancestor table (a (0, k) table is the flat
+    single-level machine; a (k,) pod array is the two-level instance);
+    ``k`` is taken from its column count.  ``speeds`` defaults to a
+    homogeneous machine; ``c_comp`` converts one weight unit of modeled
+    compute into the cost of one innermost-level halo word (``lams[0]``
+    units), the knob a measured machine model will calibrate.  ``vw``
+    supplies per-vertex weights (coarse-level supernodes).
+
+    Returns ``{"compute": (k,), "comm": (k,), "comm_by_level": (h, k),
+    "total": (k,)}`` — ``total.max()`` is :func:`bottleneck_objective`,
+    ``total.argmax()`` the critical PU.
+    """
+    anc = np.atleast_2d(np.asarray(anc))
+    h, k = anc.shape[0] + 1, anc.shape[1]
+    lams = np.asarray(resolve_lams(lams, h), dtype=np.float64)
+    if vw is None:
+        sizes = block_sizes_of(part, k).astype(np.float64)
+    else:
+        sizes = np.bincount(part, weights=np.asarray(vw, np.float64),
+                            minlength=k)
+    speeds = (np.ones(k) if speeds is None
+              else np.asarray(speeds, dtype=np.float64))
+    vols = tree_comm_volumes(g, part, k, anc)
+    compute = float(c_comp) * sizes / speeds
+    comm = lams @ vols
+    return {"compute": compute, "comm": comm, "comm_by_level": vols,
+            "total": compute + comm}
+
+
+def bottleneck_objective(g: Graph, part: np.ndarray, anc: np.ndarray,
+                         lams=None, speeds: np.ndarray | None = None,
+                         c_comp: float = 1.0,
+                         vw: np.ndarray | None = None) -> float:
+    """The process-mapping bottleneck (makespan) objective
+    (Langguth/Schlag/Schulz): the *maximum* over PUs of modeled compute
+    plus per-level weighted deduplicated receive volume,
+
+        max_i  c_comp * w(b_i) / speed_i
+               + sum_l lams[l] * |halo_l(b_i)|.
+
+    What actually bounds a distributed CG iteration — unlike the summed
+    :func:`tree_objective`, concentrating either load or halo volume on
+    one PU is penalized even when the total stays flat.  Structurally it
+    is also what the padded tree runtime pays: the max block size sets
+    the padded rows B and the max per-level receive volume the halo slot
+    count S_lvl of ``sparse.distributed.build_plan_tree``."""
+    pp = per_pu_model_costs(g, part, anc, lams=lams, speeds=speeds,
+                            c_comp=c_comp, vw=vw)
+    return float(pp["total"].max(initial=0.0))
 
 
 def pod_cut_split(g: Graph, part: np.ndarray,
@@ -244,12 +337,20 @@ def summarize_tree(g: Graph, part: np.ndarray, topo: Topology,
     obj = 0.0
     for lam_l, cut_l in zip(lams, cuts):
         obj += lam_l * cut_l
+    # tree-aware bottleneck split: same lams, Algorithm-1 speeds
+    compute = block_sizes_of(part, topo.k) / topo.speeds
+    comm = np.asarray(lams, dtype=np.float64) @ vols
+    total = compute + comm
     out.update(
         cut_by_level=cuts.tolist(),
         comm_volume_by_level=[int(v.sum()) for v in vols],
         max_comm_volume_by_level=[int(v.max(initial=0)) for v in vols],
         tree_objective=float(obj),
         lams=list(lams),
+        per_pu_compute=compute.tolist(),
+        per_pu_comm=comm.tolist(),
+        bottleneck_objective=float(total.max(initial=0.0)),
+        critical_pu=int(total.argmax()) if len(total) else 0,
     )
     return out
 

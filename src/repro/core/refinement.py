@@ -26,6 +26,135 @@ from .metrics import block_sizes_of, edge_cut, resolve_lams
 from .topology import level_matrix
 
 
+# -- incremental volume-gain structure (bottleneck objective) ----------------
+
+class VolumeGainTracker:
+    """Net-degree-style incremental structure for the bottleneck
+    objective: tracks the *distinct* remote vertices each block receives,
+    split by the owner's tree level, updated in O(deg + k) per applied
+    move — never recomputed from scratch.
+
+    Invariants (checked by the hypothesis suite in
+    ``tests/test_volume_gains.py`` after every applied move):
+
+      * ``nbr_cnt[r, u]``  == number of neighbors of vertex u inside
+        block r (the net-degree counters);
+      * ``vols``           == ``metrics.tree_comm_volumes(g, part, k,
+        anc)`` exactly (int64, so equality is exact);
+      * ``sizes``          == per-block weights.
+
+    ``apply(v, to)`` mutates the tracked ``part`` array in place and is
+    its own inverse (``apply(v, frm)`` undoes), which is what the FM
+    rollback and the O(deg + k) tentative ``peek`` use.  Assumes a
+    simple symmetric graph with no self-loops (the CSR contract of
+    ``sparse.graph.Graph``).
+    """
+
+    def __init__(self, g: Graph, part: np.ndarray, k: int,
+                 anc: np.ndarray | None = None, lams=None,
+                 speeds: np.ndarray | None = None, c_comp: float = 1.0,
+                 vw: np.ndarray | None = None):
+        self.g = g
+        self.k = int(k)
+        self.part = part                      # shared, mutated by apply()
+        if anc is None:                       # flat machine: one level
+            anc = np.zeros((0, k), dtype=np.int64)
+        anc = np.atleast_2d(np.asarray(anc))
+        self.h = anc.shape[0] + 1
+        self.lev = np.maximum(level_matrix(anc), 0)
+        self.lams = np.asarray(resolve_lams(lams, self.h),
+                               dtype=np.float64)
+        self.c_comp = float(c_comp)
+        self.speeds = (np.ones(self.k) if speeds is None
+                       else np.asarray(speeds, dtype=np.float64))
+        self.vw = None if vw is None else np.asarray(vw, dtype=np.float64)
+        src, dst, _ = g.edge_list()
+        self.nbr_cnt = np.zeros((self.k, g.n), dtype=np.int32)
+        np.add.at(self.nbr_cnt, (part[src], dst), 1)
+        self.vols = np.zeros((self.h, self.k), dtype=np.int64)
+        for r in range(self.k):
+            remote = (self.nbr_cnt[r] > 0) & (part != r)
+            self.vols[:, r] = np.bincount(self.lev[r, part[remote]],
+                                          minlength=self.h)
+        self.sizes = (block_sizes_of(part, self.k).astype(np.float64)
+                      if self.vw is None
+                      else np.bincount(part, weights=self.vw,
+                                       minlength=self.k))
+
+    def totals(self) -> np.ndarray:
+        """(k,) per-PU modeled cost: compute + weighted receive volume
+        (== ``metrics.per_pu_model_costs(...)['total']``)."""
+        return (self.c_comp * self.sizes / self.speeds
+                + self.lams @ self.vols)
+
+    def bottleneck(self) -> float:
+        """Current ``metrics.bottleneck_objective`` value."""
+        return float(self.totals().max(initial=0.0))
+
+    def critical_pu(self) -> int:
+        return int(self.totals().argmax())
+
+    def apply(self, v: int, to: int) -> None:
+        """Move vertex ``v`` to block ``to``; O(deg(v) + k)."""
+        v, to = int(v), int(to)
+        frm = int(self.part[v])
+        if frm == to:
+            return
+        g, lev, vols = self.g, self.lev, self.vols
+        nb = g.indices[g.indptr[v]:g.indptr[v + 1]]
+        own = self.part[nb]
+        # receiver side: v stops/starts being a block-frm/-to neighbor of
+        # each u in N(v); a 1 -> 0 (0 -> 1) transition on a remote u
+        # drops (adds) u from that block's halo at the owner's level
+        cnt = self.nbr_cnt[frm, nb]
+        self.nbr_cnt[frm, nb] = cnt - 1
+        gone = (cnt == 1) & (own != frm)
+        np.subtract.at(vols, (lev[frm, own[gone]], frm), 1)
+        cnt = self.nbr_cnt[to, nb]
+        self.nbr_cnt[to, nb] = cnt + 1
+        new = (cnt == 0) & (own != to)
+        np.add.at(vols, (lev[to, own[new]], to), 1)
+        # owner side: every block adjacent to v now receives it from
+        # ``to`` instead of ``frm`` (at a possibly different level)
+        recv = np.flatnonzero(self.nbr_cnt[:, v] > 0)
+        r_rm = recv[recv != frm]
+        np.subtract.at(vols, (lev[r_rm, frm], r_rm), 1)
+        r_ad = recv[recv != to]
+        np.add.at(vols, (lev[r_ad, to], r_ad), 1)
+        w = 1.0 if self.vw is None else self.vw[v]
+        self.sizes[frm] -= w
+        self.sizes[to] += w
+        self.part[v] = to
+
+    def peek(self, v: int, to: int) -> float:
+        """Objective after tentatively moving ``v`` — state (including
+        ``part``) is restored before returning."""
+        frm = int(self.part[v])
+        self.apply(v, to)
+        val = self.bottleneck()
+        self.apply(v, frm)
+        return val
+
+    def totals_key(self) -> tuple:
+        """Per-PU totals sorted descending, as a lexicographically
+        comparable tuple.  ``key_a < key_b`` iff partition a is strictly
+        better under the bottleneck order: smaller makespan, or equal
+        makespan with a smaller second-heaviest PU, and so on.  This is
+        what the bottleneck FM minimizes — comparing only the max would
+        plateau as soon as two PUs tie at the top, and the overload
+        could never diffuse across intermediate blocks."""
+        return tuple(np.sort(self.totals())[::-1])
+
+    def peek_key(self, v: int, to: int) -> tuple:
+        """:meth:`totals_key` after tentatively moving ``v`` — state is
+        restored before returning."""
+        frm = int(self.part[v])
+        self.apply(v, to)
+        key = self.totals_key()
+        self.apply(v, frm)
+        return key
+
+
 # -- 1. quotient graph ------------------------------------------------------
 
 def quotient_graph(g: Graph, part: np.ndarray, k: int):
@@ -229,15 +358,82 @@ def _level_cost_matrix(anc: np.ndarray, lams) -> np.ndarray:
     return cost
 
 
+def _fm_pair_bottleneck(g: Graph, part: np.ndarray, a: int, b: int,
+                        caps: np.ndarray, tracker: VolumeGainTracker,
+                        bfs_hops: int = 2,
+                        max_moves: int | None = None) -> float:
+    """One bottleneck-objective FM pass between blocks a and b.
+
+    Moves route through ``tracker.apply`` (which mutates ``part`` — the
+    tracker must have been built over this very array); each step picks
+    the candidate move minimizing the *global* sorted-totals vector
+    lexicographically (``tracker.peek_key``, O(deg + k log k) per
+    evaluation): smaller makespan first, then smaller second-heaviest
+    PU, and so on — so overload drains off the critical PU and keeps
+    diffusing through intermediate blocks even while the top of the
+    order is momentarily tied.  Classic FM hill-climbing with
+    best-prefix rollback; returns the makespan drop (>= 0; an epsilon
+    when only the tail of the order improved).
+    """
+    assert tracker.part is part, "tracker must wrap the mutated part array"
+    cand = _boundary_candidates(g, part, a, b, bfs_hops)
+    if len(cand) == 0:
+        return 0.0
+    start = best = tracker.totals_key()
+    locked = np.zeros(g.n, dtype=bool)
+    history: list[tuple[int, int]] = []        # (v, frm)
+    best_len = 0
+    if max_moves is None:
+        max_moves = min(len(cand), 64)
+    vw = tracker.vw
+    while len(history) < max_moves:
+        best_v, best_to, best_key = -1, -1, None
+        for v in cand:
+            if locked[v]:
+                continue
+            frm = int(part[v])
+            to = b if frm == a else a
+            w_v = 1.0 if vw is None else vw[v]
+            if tracker.sizes[to] + w_v > caps[to]:
+                continue
+            key = tracker.peek_key(v, to)
+            if best_key is None or key < best_key:
+                best_v, best_to, best_key = int(v), to, key
+        if best_v < 0:
+            break
+        frm = int(part[best_v])
+        tracker.apply(best_v, best_to)
+        locked[best_v] = True
+        history.append((best_v, frm))
+        if best_key < best:
+            best, best_len = best_key, len(history)
+    for v, frm in reversed(history[best_len:]):
+        tracker.apply(v, frm)
+    # gain: the makespan drop; a lexicographic-only improvement (same
+    # max, smaller tail) reports an epsilon so the driver keeps passing
+    drop = start[0] - best[0]
+    if drop > 0:
+        return float(drop)
+    return 1e-12 if best < start else 0.0
+
+
 def fm_pair_refine(g: Graph, part: np.ndarray, a: int, b: int,
                    caps: np.ndarray, bfs_hops: int = 2,
                    max_moves: int | None = None,
                    pod_of: np.ndarray | None = None, lam: float = 1.0,
                    anc: np.ndarray | None = None, lams=None,
-                   vw: np.ndarray | None = None) -> float:
+                   vw: np.ndarray | None = None,
+                   objective: str = "cut",
+                   tracker: VolumeGainTracker | None = None) -> float:
     """One FM pass between blocks a and b.  Mutates ``part``.
 
     Returns the achieved gain (>= 0; rolls back to the best prefix).
+
+    ``objective="bottleneck"`` switches the gains to the makespan
+    objective (:func:`_fm_pair_bottleneck`): pass the shared
+    :class:`VolumeGainTracker` built over this ``part`` array (it holds
+    the global per-(receiver, level) volumes a bottleneck move gain
+    depends on); ``anc``/``lams`` then live on the tracker.
 
     With ``anc`` (an (h-1, k) ancestor table, + ``lams``) the gains are
     computed against the *weighted tree objective*
@@ -253,6 +449,14 @@ def fm_pair_refine(g: Graph, part: np.ndarray, a: int, b: int,
     (coarse-level supernodes in the multilevel pipeline); ``caps`` is
     then in weight units, not vertex counts.
     """
+    if objective == "bottleneck":
+        if tracker is None:
+            raise ValueError("objective='bottleneck' needs the shared "
+                             "VolumeGainTracker (tracker=)")
+        return _fm_pair_bottleneck(g, part, a, b, caps, tracker,
+                                   bfs_hops=bfs_hops, max_moves=max_moves)
+    if objective != "cut":
+        raise ValueError(f"unknown objective {objective!r}")
     if pod_of is not None:
         if anc is not None:
             raise ValueError("pass either pod_of= (two-level) or anc= "
@@ -333,6 +537,9 @@ def refine_partition(g: Graph, part: np.ndarray, tw: np.ndarray,
                      pod_of: np.ndarray | None = None, lam: float = 1.0,
                      anc: np.ndarray | None = None, lams=None,
                      vw: np.ndarray | None = None,
+                     objective: str = "cut",
+                     speeds: np.ndarray | None = None,
+                     c_comp: float = 1.0,
                      verbose: bool = False) -> np.ndarray:
     """geoRef: scheduled pairwise FM until no pass improves the objective.
 
@@ -340,12 +547,48 @@ def refine_partition(g: Graph, part: np.ndarray, tw: np.ndarray,
     (a cut edge costs ``lams[LCA level]``); ``pod_of``/``lam`` is the
     two-level sugar (see :func:`fm_pair_refine`).  ``vw`` makes the
     size/cap accounting weight-aware (coarse multilevel levels —
-    ``tw``/``mems`` are then compared against summed vertex weights)."""
+    ``tw``/``mems`` are then compared against summed vertex weights).
+
+    ``objective="bottleneck"`` refines the makespan instead: one shared
+    :class:`VolumeGainTracker` carries the per-(receiver, level)
+    deduplicated volumes and per-PU modeled compute (``speeds`` /
+    ``c_comp``) across all pair passes, and pairs run ordered by how hot
+    their heavier endpoint is — the critical PU drains first.  Pair
+    coloring is irrelevant here (the driver is host-sequential and every
+    gain is global), so the schedule is just the sort.
+    """
     part = np.asarray(part, dtype=np.int32).copy()
     k = len(tw)
     caps = np.ceil(np.asarray(tw) * (1.0 + eps))
     if mems is not None:
         caps = np.minimum(caps, np.floor(np.asarray(mems)))
+
+    if objective == "bottleneck":
+        t_anc = anc
+        if t_anc is None and pod_of is not None:
+            t_anc = np.asarray(pod_of)[None, :]
+            lams = (1.0, lam)
+        tracker = VolumeGainTracker(g, part, k, t_anc, lams=lams,
+                                    speeds=speeds, c_comp=c_comp, vw=vw)
+        for p in range(passes):
+            pairs, _w = quotient_graph(g, part, k)
+            if len(pairs) == 0:
+                break
+            totals = tracker.totals()
+            heat = np.maximum(totals[pairs[:, 0]], totals[pairs[:, 1]])
+            gain = 0.0
+            for e in np.argsort(-heat, kind="stable"):
+                gain += fm_pair_refine(g, part, int(pairs[e, 0]),
+                                       int(pairs[e, 1]), caps, bfs_hops,
+                                       vw=vw, objective="bottleneck",
+                                       tracker=tracker)
+            if verbose:
+                print(f"  refine pass {p}: gain {gain:.3f} "
+                      f"makespan {tracker.bottleneck():.3f}")
+            if gain <= 0.0:     # epsilon gains (lexicographic-only
+                break           # improvements) keep the passes coming
+        return part
+
     for p in range(passes):
         pairs, w = quotient_graph(g, part, k)
         if len(pairs) == 0:

@@ -18,6 +18,8 @@ from __future__ import annotations
 import re
 from typing import Any
 
+import numpy as np
+
 from .mesh import HW
 
 _DTYPE_BYTES = {
@@ -202,6 +204,43 @@ def static_roofline(cost) -> dict[str, Any]:
     out["static_bytes_per_iter"] = cost.hbm_bytes_per_iter
     out["n_devices"] = k
     out["per_iteration"] = True
+    return out
+
+
+def modeled_makespan(g, part, anc=None, lams=None, speeds=None,
+                     c_comp: float = 1.0) -> dict[str, Any]:
+    """Partition-level modeled makespan (``core.costmodel``) — the
+    machine-model counterpart of the jaxpr-counted :func:`static_roofline`:
+    the roofline prices the *compiled program* (FLOPs/bytes/collective
+    bytes of the padded SPMD executable), this prices the *partition*
+    (per-PU Algorithm-1 compute + per-level deduplicated halo words).
+    The two should rank partitions the same way — the padded program pays
+    max block size as B and max per-level receive volume as S_lvl, which
+    is exactly what the bottleneck model bounds.
+
+    ``g`` is the adjacency :class:`repro.sparse.graph.Graph`; ``part`` a
+    (n,) block array or a ``core.api.HierPartition`` (its ``anc``/
+    ``lams`` are used unless overridden).  Returns the
+    ``BottleneckCost.summary`` dict plus the summed-cut price under the
+    same weights (``cut_price``) for side-by-side reporting.
+    """
+    from ..core.costmodel import BottleneckCost, CutCost
+
+    if hasattr(part, "part"):              # HierPartition duck-type
+        hp = part
+        part = hp.part
+        if anc is None:
+            anc = hp.anc
+        if lams is None:
+            lams = hp.lams
+    part = np.asarray(part)
+    if anc is None:
+        anc = np.zeros((0, int(part.max(initial=0)) + 1), dtype=np.int64)
+    kw = dict(lams=None if lams is None else tuple(map(float, lams)),
+              speeds=None if speeds is None else tuple(map(float, speeds)),
+              c_comp=float(c_comp))
+    out = BottleneckCost(**kw).summary(g, part, anc)
+    out["cut_price"] = CutCost(**kw).price(g, part, np.atleast_2d(anc))
     return out
 
 

@@ -177,9 +177,15 @@ class SolverService:
         the static roofline over the counted per-iteration cost.  No
         compilation, no devices — usable at admission time to pick a
         bucket or reject oversize work.  Cached per (matrix, bucket),
-        evicted with the operator."""
+        evicted with the operator.
+
+        When the service fronts a partitioned backend (``part=`` in
+        ``op_kw``), the result also carries ``modeled`` — the
+        partition-level cost-model summary (``roofline.modeled_makespan``:
+        bottleneck makespan, critical PU, per-PU compute/comm split)
+        next to the program-level trace price."""
         from ..analysis.trace import audit_operator
-        from .roofline import static_roofline
+        from .roofline import modeled_makespan, static_roofline
 
         bucket = self.bucket_for(int(nb))
         fp, op, _ = self.operator_for(indptr, indices, data, fingerprint)
@@ -194,6 +200,15 @@ class SolverService:
         out = {"fingerprint": fp, "bucket": bucket, "ok": rep.ok,
                "diagnostics": [str(d) for d in rep.diagnostics],
                "cost": cost, "roofline": static_roofline(cost)}
+        part = self.op_kw.get("part")
+        if part is not None:
+            from ..sparse.graph import from_edges
+            n = len(indptr) - 1
+            src = np.repeat(np.arange(n), np.diff(np.asarray(indptr)))
+            g = from_edges(n, src, np.asarray(indices), symmetrize=True)
+            g.weights[:] = 1.0      # structure only: the matrix values
+            # (e.g. negative Laplacian off-diagonals) are not link costs
+            out["modeled"] = modeled_makespan(g, part)
         self._cost[(fp, bucket)] = out
         return out
 

@@ -1,0 +1,224 @@
+"""Cost-model layer (ISSUE 9): golden bit-identity for the cut path +
+unit coverage for the pluggable objective abstraction.
+
+The golden half replays the exact pre-refactor call sequences captured
+in ``tests/golden/cut_mode_golden.json`` — same generators, same rng
+draw order, same anc/lams — and requires byte-identical partitions and
+float-identical objectives.  This is what locks ``objective="cut"``
+(the default everywhere) to the pre-costmodel pipeline: any refactor
+that perturbs the cut-mode FM, even by reordering ties, fails here.
+
+Everything is host-only NumPy — no devices, no JAX.
+"""
+import hashlib
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import (BottleneckCost, COST_MODELS, CostModel, CutCost,
+                        Topology, canonical_ancestors, cost_model_for,
+                        partition_tree, scale_to_load)
+from repro.core.metrics import (bottleneck_objective, edge_cut,
+                                per_pu_model_costs, tree_comm_volumes,
+                                tree_cut_split, tree_objective)
+from repro.core.refinement import fm_pair_refine, refine_partition
+from repro.sparse.generators import aniso_grid, grid, rdg
+
+GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden" /
+     "cut_mode_golden.json").read_text())
+
+
+def sha(a):
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()[:16]
+
+
+# -- golden bit-identity (the cut-mode lock) --------------------------------
+
+def test_golden_tree_objective():
+    rng = np.random.default_rng(0)
+    anc = canonical_ancestors((2, 2, 2))
+    lams = (1.0, 2.5, 7.0)
+    for i, want in enumerate(GOLDEN["tree_objective"]):
+        g = rdg(200 + 17 * i, seed=i)
+        part = rng.integers(0, 8, g.n).astype(np.int32)
+        assert tree_objective(g, part, anc, lams) == want["obj"]
+        assert tree_objective(g, part, anc) == want["obj_default"]
+        assert tree_cut_split(g, part, anc).tolist() == want["cuts"]
+        assert sha(tree_comm_volumes(g, part, 8, anc)) == want["vols_sha"]
+
+
+def _fm_instance():
+    g = grid((24, 24))
+    part = ((np.arange(g.n) * 8) // g.n).astype(np.int32)
+    rng = np.random.default_rng(3)
+    noise = rng.choice(g.n, 60, replace=False)
+    part[noise] = rng.integers(0, 8, 60)
+    return g, part
+
+
+def test_golden_fm_pair_refine():
+    g, part = _fm_instance()
+    anc = canonical_ancestors((2, 2, 2))
+    caps = np.full(8, np.ceil(g.n / 8 * 1.05))
+    gain = fm_pair_refine(g, part, 0, 1, caps, anc=anc,
+                          lams=(1.0, 2.0, 4.0))
+    assert gain == GOLDEN["fm_pair"]["gain"]
+    assert sha(part) == GOLDEN["fm_pair"]["part_sha"]
+
+
+def test_golden_refine_partition():
+    g, part = _fm_instance()
+    anc = canonical_ancestors((2, 2, 2))
+    out = refine_partition(g, part, np.full(8, g.n / 8), anc=anc,
+                           lams=(1.0, 2.0, 4.0))
+    assert sha(out) == GOLDEN["refine_partition"]["part_sha"]
+    assert tree_objective(g, out, anc, (1.0, 2.0, 4.0)) == \
+        GOLDEN["refine_partition"]["obj"]
+
+
+@pytest.mark.parametrize("case", GOLDEN["partition_tree"],
+                         ids=lambda c: f"{c['graph']}-{c['method']}")
+def test_golden_partition_tree(case):
+    g = (grid((16, 128)) if case["graph"] == "grid16x128"
+         else aniso_grid((24, 24), (1.0, 0.05)))
+    topo = scale_to_load(Topology.homogeneous(8, fanouts=(2, 2, 2)), g.n)
+    res = partition_tree(g, topo, case["method"], seed=0)
+    assert res.objective == "cut"            # the default records itself
+    assert sha(res.part.astype(np.int32)) == case["part_sha"]
+    assert res.tw.tolist() == case["tw"]
+    assert sha(res.anc.astype(np.int64)) == case["anc_sha"]
+    assert list(res.lams) == case["lams"]
+    assert tree_objective(g, res.part, res.anc, res.lams) == case["obj"]
+
+
+# -- CostModel unit coverage ------------------------------------------------
+
+def _tree_instance(seed=0, k=8):
+    rng = np.random.default_rng(seed)
+    g = rdg(260, seed=seed)
+    part = rng.integers(0, k, g.n).astype(np.int32)
+    anc = canonical_ancestors((2, 2, 2))
+    return g, part, anc
+
+
+def test_cut_price_is_tree_objective():
+    g, part, anc = _tree_instance()
+    lams = (1.0, 3.0, 9.0)
+    m = CutCost(lams=lams)
+    assert m.price(g, part, anc) == tree_objective(g, part, anc, lams)
+    # default lams resolve through the one shared ladder
+    assert CutCost().price(g, part, anc) == tree_objective(g, part, anc)
+
+
+def test_cut_price_flat_is_edge_cut():
+    g, part, _ = _tree_instance()
+    flat = np.zeros((0, 8), dtype=np.int64)
+    assert CutCost(lams=(2.0,)).price(g, part, flat) == \
+        pytest.approx(2.0 * edge_cut(g, part))
+
+
+def test_bottleneck_price_matches_metric_and_breakdown():
+    g, part, anc = _tree_instance()
+    speeds = (1.0, 2.0, 1.0, 0.5, 1.0, 1.0, 4.0, 1.0)
+    m = BottleneckCost(lams=(1.0, 2.0, 4.0), speeds=speeds, c_comp=3.0)
+    assert m.price(g, part, anc) == bottleneck_objective(
+        g, part, anc, lams=(1.0, 2.0, 4.0),
+        speeds=np.asarray(speeds), c_comp=3.0)
+    pp = m.per_pu(g, part, anc)
+    np.testing.assert_allclose(pp["compute"] + pp["comm"], pp["total"])
+    assert m.price(g, part, anc) == pytest.approx(pp["total"].max())
+    # the comm split stacks back to the per-level dedup volumes
+    vols = tree_comm_volumes(g, part, 8, anc)
+    np.testing.assert_allclose(
+        pp["comm"], np.asarray((1.0, 2.0, 4.0)) @ vols.astype(float))
+
+
+def test_summary_schema_and_consistency():
+    g, part, anc = _tree_instance()
+    for name, cls in COST_MODELS.items():
+        s = cls().summary(g, part, anc)
+        assert s["objective"] == name == cls.kind
+        assert s["makespan"] == pytest.approx(
+            BottleneckCost().price(g, part, anc))
+        assert len(s["per_pu_compute"]) == len(s["per_pu_comm"]) == 8
+        assert len(s["lams"]) == 3 and len(
+            s["max_comm_volume_by_level"]) == 3
+        json.dumps(s)                        # JSON-friendly contract
+    # the bottleneck model's price IS its makespan
+    sb = BottleneckCost().summary(g, part, anc)
+    assert sb["price"] == sb["makespan"]
+
+
+def test_cost_model_for_resolution():
+    topo = scale_to_load(Topology.homogeneous(8, fanouts=(2, 2, 2)), 512)
+    m = cost_model_for("bottleneck", topo=topo, lams=(1, 2, 4), c_comp=5)
+    assert isinstance(m, BottleneckCost)
+    assert m.lams == (1.0, 2.0, 4.0) and m.c_comp == 5.0
+    assert m.speeds == tuple(topo.speeds)
+    assert isinstance(cost_model_for("cut"), CutCost)
+    # instances pass through unchanged (calibrated models)
+    assert cost_model_for(m) is m
+    with pytest.raises(ValueError, match="unknown objective"):
+        cost_model_for("latency")
+
+
+def test_partition_tree_bottleneck_not_worse_and_recorded():
+    g = grid((24, 24))
+    topo = scale_to_load(Topology.homogeneous(8, fanouts=(2, 2, 2)), g.n)
+    cut = partition_tree(g, topo, "greedyRef", seed=0)
+    bn = partition_tree(g, topo, "greedyRef", seed=0,
+                        objective="bottleneck")
+    assert cut.objective == "cut" and bn.objective == "bottleneck"
+    model = BottleneckCost(lams=cut.lams)
+    # stage E starts from the cut result, so it can only improve it
+    assert model.price(g, bn.part, bn.anc) <= \
+        model.price(g, cut.part, cut.anc) + 1e-9
+    with pytest.raises(ValueError, match="unknown objective"):
+        partition_tree(g, topo, "greedyRef", seed=0, objective="latency")
+
+
+def test_base_model_price_abstract():
+    g, part, anc = _tree_instance()
+    with pytest.raises(NotImplementedError):
+        CostModel().price(g, part, anc)
+
+
+# -- pair-dedup overflow regression (ISSUE 9 satellite) ---------------------
+# comm_volumes/tree_comm_volumes deduplicate (receiver, vertex) pairs via
+# the linearized key ``recv * n + vert``, which silently wraps int64 once
+# k * n approaches 2**63.  Above _PAIR_DEDUP_MAX the dedup switches to a
+# lexsort; these lock (a) bit-identical output on the same input and (b)
+# correct counts at a vertex count where the product path would wrap.
+
+def test_dedup_lexsort_path_bit_identical():
+    from repro.core import metrics as M
+    rng = np.random.default_rng(11)
+    for trial in range(20):
+        k = int(rng.integers(2, 12))
+        n = int(rng.integers(10, 5000))
+        m = int(rng.integers(0, 400))
+        recv = rng.integers(0, k, m)
+        vert = rng.integers(0, n, m)
+        fast = M._dedup_recv_pairs(recv, vert, n, k)
+        slow = M._dedup_recv_pairs(recv, vert,
+                                   n * (M._PAIR_DEDUP_MAX // n + 1), k)
+        np.testing.assert_array_equal(fast[0], slow[0])
+        np.testing.assert_array_equal(fast[1], slow[1])
+    # both paths accept empty input
+    empty = np.zeros(0, dtype=np.int64)
+    for nn in (100, M._PAIR_DEDUP_MAX + 1):
+        b, v = M._dedup_recv_pairs(empty, empty, nn, 4)
+        assert len(b) == len(v) == 0
+
+
+def test_dedup_no_int64_wrap_at_huge_n():
+    from repro.core.metrics import _dedup_recv_pairs
+    n = 2 ** 62                              # recv * n wraps for recv >= 2
+    recv = np.array([3, 0, 3, 2, 3, 0], dtype=np.int64)
+    vert = np.array([n - 1, 5, n - 1, 7, 2, 5], dtype=np.int64)
+    blocks, verts = _dedup_recv_pairs(recv, vert, n, 4)
+    np.testing.assert_array_equal(blocks, [0, 2, 3, 3])
+    np.testing.assert_array_equal(verts, [5, 7, 2, n - 1])

@@ -127,7 +127,8 @@ CROSS_BACKENDS = ("coo", "coo+jacobi", "bell", "bell+jacobi",
                   "dist_allgather", "dist_hier", "dist_hier+jacobi",
                   "dist_hier+block_jacobi_fused", "dist_hier_podaware",
                   "dist_hier_bell", "dist_tree3", "dist_tree3_bell",
-                  "dist_tree3_aware", "dist_tree3+block_jacobi_fused",
+                  "dist_tree3_aware", "dist_tree3_bottleneck",
+                  "dist_tree3+block_jacobi_fused",
                   "dist_hier_batched")
 
 CROSS_SCRIPT = textwrap.dedent("""
@@ -158,6 +159,12 @@ CROSS_SCRIPT = textwrap.dedent("""
     # tree-aware depth-3 partition driving the runtime (ISSUE 5)
     topo_t = scale_to_load(Topology.homogeneous(8, fanouts=(2, 2, 2)), g.n)
     res_tree = partition_tree(g, topo_t, "greedyRef", seed=0)
+    # bottleneck-refined depth-3 partition on the same mesh (ISSUE 9):
+    # the makespan objective must only reshape the partition, never the
+    # solution the runtime computes on it
+    res_btree = partition_tree(g, topo_t, "greedyRef", seed=0,
+                               objective="bottleneck")
+    assert res_btree.objective == "bottleneck"
 
     sols = {}
     extra = {}
@@ -194,6 +201,9 @@ CROSS_SCRIPT = textwrap.dedent("""
         elif backend == "dist_tree3_aware":
             backend = "dist_hier"            # HierPartition unpack path
             kw = dict(part=res_tree, mesh=mesh_tree)
+        elif backend == "dist_tree3_bottleneck":
+            backend = "dist_hier"
+            kw = dict(part=res_btree, mesh=mesh_tree)
         elif backend.startswith("dist_tree3"):
             backend = ("dist_hier_bell" if backend.endswith("bell")
                        else "dist_hier")

@@ -1,0 +1,172 @@
+"""Property-based suite for the bottleneck objective layer (ISSUE 9).
+
+Invariants:
+  * ``VolumeGainTracker`` stays *exactly* (int64) consistent with a
+    from-scratch ``metrics.tree_comm_volumes`` recompute after every
+    applied FM move — the net-degree counters, the per-level volume
+    table, and the sizes all match, and ``apply`` is its own inverse;
+  * ``peek``/``peek_key`` restore all state bit-for-bit;
+  * ``bottleneck_objective`` agrees with a brute-force dense NumPy
+    oracle (per-PU compute + per-level dedup halo, max over PUs);
+  * bottleneck-mode ``refine_partition`` never increases the bottleneck
+    objective and respects the caps.
+
+Each property lives in a plain ``check_*`` function with the hypothesis
+test as a thin wrapper, so the invariants can also be driven directly
+(no hypothesis) when debugging.  Host-only NumPy — runs unskipped in
+both CI matrix jobs.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import canonical_ancestors
+from repro.core.metrics import (bottleneck_objective, per_pu_model_costs,
+                                tree_comm_volumes)
+from repro.core.refinement import VolumeGainTracker, refine_partition
+from repro.core.topology import level_matrix
+from repro.sparse.graph import from_edges
+
+# (k, fanouts-or-None): flat, two-level, and depth-3 machines
+MACHINES = [(4, None), (4, (2, 2)), (6, (3, 2)), (8, (2, 2, 2))]
+
+
+def random_instance(seed: int, k: int, fanouts):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 48))
+    m = int(rng.integers(n, 4 * n))
+    g = from_edges(n, rng.integers(0, n, m), rng.integers(0, n, m),
+                   symmetrize=True)
+    part = rng.integers(0, k, n).astype(np.int32)
+    anc = None if fanouts is None else canonical_ancestors(fanouts)
+    h = 1 if anc is None else anc.shape[0] + 1
+    lams = tuple(float(x) for x in rng.uniform(0.5, 8.0, h))
+    speeds = rng.uniform(0.5, 4.0, k)
+    c_comp = float(rng.uniform(0.0, 4.0))
+    return g, part, anc, lams, speeds, c_comp
+
+
+def tracker_anc(anc, k):
+    return (np.zeros((0, k), dtype=np.int64) if anc is None else anc)
+
+
+def assert_tracker_consistent(t, g, part, k, anc):
+    """Tracker state == from-scratch recompute (exact int64)."""
+    np.testing.assert_array_equal(
+        t.vols, tree_comm_volumes(g, part, k, tracker_anc(anc, k)))
+    src, dst, _ = g.edge_list()
+    cnt = np.zeros((k, g.n), dtype=np.int32)
+    np.add.at(cnt, (part[src], dst), 1)
+    np.testing.assert_array_equal(t.nbr_cnt, cnt)
+    np.testing.assert_array_equal(t.sizes, np.bincount(part, minlength=k))
+
+
+def check_tracker_matches_recompute(seed, k, fanouts, moves=30):
+    g, part, anc, lams, speeds, c_comp = random_instance(seed, k, fanouts)
+    t = VolumeGainTracker(g, part, k, anc=anc, lams=lams, speeds=speeds,
+                          c_comp=c_comp)
+    assert t.part is part                    # shared, mutated in place
+    rng = np.random.default_rng(seed + 1)
+    for _ in range(moves):
+        v = int(rng.integers(0, g.n))
+        to = int(rng.integers(0, k))
+        t.apply(v, to)
+        assert_tracker_consistent(t, g, part, k, anc)
+        pp = per_pu_model_costs(g, part, tracker_anc(anc, k), lams=lams,
+                                speeds=speeds, c_comp=c_comp)
+        np.testing.assert_allclose(t.totals(), pp["total"])
+        assert t.bottleneck() == pytest.approx(
+            bottleneck_objective(g, part, tracker_anc(anc, k), lams=lams,
+                                 speeds=speeds, c_comp=c_comp))
+        assert t.critical_pu() == int(np.argmax(pp["total"]))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10**6), st.sampled_from(MACHINES))
+def test_tracker_matches_recompute_after_every_move(seed, machine):
+    check_tracker_matches_recompute(seed, *machine)
+
+
+def check_apply_inverse_and_peek_restores(seed, k, fanouts):
+    g, part, anc, lams, speeds, c_comp = random_instance(seed, k, fanouts)
+    t = VolumeGainTracker(g, part, k, anc=anc, lams=lams, speeds=speeds,
+                          c_comp=c_comp)
+    snap = (t.vols.copy(), t.nbr_cnt.copy(), t.sizes.copy(), part.copy())
+    rng = np.random.default_rng(seed + 2)
+    for _ in range(10):
+        v = int(rng.integers(0, g.n))
+        to = int(rng.integers(0, k))
+        frm = int(part[v])
+        # peek == bottleneck-after-apply, and restores everything
+        t.apply(v, to)
+        want = t.bottleneck()
+        want_key = t.totals_key()
+        t.apply(v, frm)                      # apply is its own inverse
+        assert t.peek(v, to) == want
+        assert t.peek_key(v, to) == want_key
+        assert want_key[0] == pytest.approx(want)
+        assert want_key == tuple(sorted(want_key, reverse=True))
+    vols, cnt, sizes, p0 = snap
+    np.testing.assert_array_equal(t.vols, vols)
+    np.testing.assert_array_equal(t.nbr_cnt, cnt)
+    np.testing.assert_array_equal(t.sizes, sizes)
+    np.testing.assert_array_equal(part, p0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10**6), st.sampled_from(MACHINES))
+def test_apply_inverse_and_peek_restores(seed, machine):
+    check_apply_inverse_and_peek_restores(seed, *machine)
+
+
+def oracle_bottleneck(g, part, anc, lams, speeds, c_comp, k):
+    """Brute-force per-PU makespan: loops over (block, vertex) pairs."""
+    lev = np.maximum(level_matrix(tracker_anc(anc, k)), 0)
+    totals = np.zeros(k)
+    for b in range(k):
+        comm = 0.0
+        for v in range(g.n):
+            if part[v] == b:
+                continue
+            nb = g.indices[g.indptr[v]:g.indptr[v + 1]]
+            if len(nb) and np.any(part[nb] == b):
+                comm += lams[lev[b, part[v]]]
+        totals[b] = c_comp * np.sum(part == b) / speeds[b] + comm
+    return totals.max(initial=0.0)
+
+
+def check_bottleneck_matches_dense_oracle(seed, k, fanouts):
+    g, part, anc, lams, speeds, c_comp = random_instance(seed, k, fanouts)
+    got = bottleneck_objective(g, part, tracker_anc(anc, k), lams=lams,
+                               speeds=speeds, c_comp=c_comp)
+    want = oracle_bottleneck(g, part, anc, lams, speeds, c_comp, k)
+    assert got == pytest.approx(want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10**6), st.sampled_from(MACHINES))
+def test_bottleneck_matches_dense_oracle(seed, machine):
+    check_bottleneck_matches_dense_oracle(seed, *machine)
+
+
+def check_bottleneck_refine_never_worse(seed, k, fanouts):
+    g, part, anc, lams, speeds, c_comp = random_instance(seed, k, fanouts)
+    sizes = np.bincount(part, minlength=k)
+    tw = np.maximum(sizes, 1).astype(np.float64)     # initially feasible
+    a = tracker_anc(anc, k)
+    before = bottleneck_objective(g, part, a, lams=lams, speeds=speeds,
+                                  c_comp=c_comp)
+    out = refine_partition(g, part, tw, eps=0.3, anc=anc, lams=lams,
+                           objective="bottleneck", speeds=speeds,
+                           c_comp=c_comp)
+    after = bottleneck_objective(g, out, a, lams=lams, speeds=speeds,
+                                 c_comp=c_comp)
+    assert after <= before + 1e-9
+    caps = np.ceil(tw * 1.3)
+    assert (np.bincount(out, minlength=k) <= caps).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10**6), st.sampled_from(MACHINES))
+def test_bottleneck_refine_never_worse(seed, machine):
+    check_bottleneck_refine_never_worse(seed, *machine)
