@@ -6,7 +6,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test tier1 deps lint verify-plans trace-audit bench-cg bench \
         bench-hier bench-pod bench-tree bench-serve bench-bottleneck \
-        bench-diff
+        bench-delta bench-diff
 
 deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -67,6 +67,14 @@ bench-serve:
 # (ISSUE 9); writes the tracked benchmarks/baselines/BENCH_bottleneck.json
 bench-bottleneck:
 	$(PYTHON) -m benchmarks.bench_cg --objective bottleneck
+
+# Incremental delta replanning: O(delta) plan patch vs fresh
+# build_plan_tree at <=1% edge churn (256x256 grid, k=8, depth-2 and
+# depth-3 meshes); asserts the value-delta patch is >= 10x faster and
+# bit-equal, writes the tracked benchmarks/baselines/BENCH_delta.json
+# (ISSUE 10).  Host-side NumPy only — no devices.
+bench-delta:
+	$(PYTHON) -m benchmarks.bench_delta
 
 # Regression gate: diff fresh BENCH_*.json in the working tree against
 # the committed benchmarks/baselines/ (HEAD); >20% regressions on

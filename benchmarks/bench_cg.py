@@ -141,12 +141,15 @@ HIER_SCRIPT = textwrap.dedent("""
                      ("dist_hier+block_jacobi", dict(mesh=mesh_hier,
                                                      pods=2))):
         backend, _, variant = name.partition("+")
+        t0 = time.perf_counter()
         op = make_operator(indptr, indices, data, backend,
                            part=part, k=8, **kw)
+        plan_build_s = time.perf_counter() - t0
         t0 = time.perf_counter()
         x, iters, res = cg_solve_global(op, b, tol=1e-7, max_iters=2000,
                                         precondition=variant or None)
         out[name] = {"iters": iters, "res": res,
+                     "plan_build_s": plan_build_s,
                      "wall_us": (time.perf_counter() - t0) * 1e6}
         sols[name] = x
         xb = op.scatter(np.random.default_rng(3).normal(
@@ -196,12 +199,14 @@ POD_SCRIPT = textwrap.dedent("""
     for name, part, pods in (("oblivious", part_s, pod_c),
                              ("pod_aware", res.part, res.pod_of)):
         _, inter_v = pod_comm_volumes(g, part, 8, pods)
+        t0 = time.perf_counter()
         if name == "pod_aware":      # partitioner output drives the runtime
             op = make_operator(indptr, indices, data, "dist_hier",
                                part=res, mesh=mesh_hier)
         else:
             op = make_operator(indptr, indices, data, "dist_hier",
                                part=part, k=8, mesh=mesh_hier, pods=pods)
+        plan_build_s = time.perf_counter() - t0
         plan = op.plan               # the HierPlan the runtime executes
         t0 = time.perf_counter()
         x, iters, resid = cg_solve_global(op, b, tol=1e-7, max_iters=2000)
@@ -218,6 +223,7 @@ POD_SCRIPT = textwrap.dedent("""
             "max_inter_comm_volume": int(inter_v.max()),
             "rounds_inter": plan.n_rounds_inter,
             "rounds_intra": plan.n_rounds_intra,
+            "plan_build_s": plan_build_s,
             "iters": iters, "res": resid, "cg_wall_us": wall,
             "spmv_us": (time.perf_counter() - t0) / 20 * 1e6,
         }
@@ -263,12 +269,14 @@ TREE_SCRIPT = textwrap.dedent("""
     for name, part, tree in (("oblivious", part_s, anc_c),
                              ("tree_aware", res.part, res.anc)):
         vols = tree_comm_volumes(g, part, 8, tree)
+        t0 = time.perf_counter()
         if name == "tree_aware":     # partitioner output drives the runtime
             op = make_operator(indptr, indices, data, "dist_hier",
                                part=res, mesh=mesh_tree)
         else:
             op = make_operator(indptr, indices, data, "dist_hier",
                                part=part, k=8, mesh=mesh_tree, tree=tree)
+        plan_build_s = time.perf_counter() - t0
         plan = op.plan               # the TreePlan the runtime executes
         t0 = time.perf_counter()
         x, iters, resid = cg_solve_global(op, b, tol=1e-7, max_iters=2000)
@@ -284,6 +292,7 @@ TREE_SCRIPT = textwrap.dedent("""
             "rounds_by_level": list(plan.n_rounds_lvl),
             "volume_by_level": [int(v.sum()) for v in vols],
             "max_volume_by_level": [int(v.max()) for v in vols],
+            "plan_build_s": plan_build_s,
             "iters": iters, "res": resid, "cg_wall_us": wall,
             "spmv_us": (time.perf_counter() - t0) / 20 * 1e6,
         }
@@ -332,8 +341,10 @@ BOTTLENECK_SCRIPT = textwrap.dedent("""
         res = partition_tree(g, topo, "greedyRef", seed=0, objective=obj,
                              eps=0.5, passes=6, **kw)
         t_part = time.perf_counter() - t0
+        t0 = time.perf_counter()
         op = make_operator(indptr, indices, data, "dist_hier",
                            part=res, mesh=mesh)
+        plan_build_s = time.perf_counter() - t0
         ops[obj] = op
         plan = op.plan
         sizes = np.bincount(res.part, minlength=8)
@@ -341,6 +352,7 @@ BOTTLENECK_SCRIPT = textwrap.dedent("""
                             lams=(1.0, 1.0, 1.0), c_comp=8.0)
         out[obj] = {
             "partition_s": t_part,
+            "plan_build_s": plan_build_s,
             "B": int(plan.B),
             "S_lvl": [int(s) for s in plan.S_lvl],
             "rounds_by_level": list(plan.n_rounds_lvl),

@@ -1,0 +1,183 @@
+"""Delta-replanning bench (``make bench-delta``) — O(delta) plan
+patching vs a fresh ``build_plan_tree`` on the mutated matrix.
+
+The streaming-graph serving story (ISSUE 10) only holds if patching a
+cached plan is much cheaper than rebuilding it.  This bench prices both
+on the 256x256 grid Laplacian (k=8, locality-preserving stripes) at <=1%
+edge churn, on a depth-2 (2, 4) and a depth-3 (2, 2, 2) mesh:
+
+  * **value-only delta** (1% of entries reweighted) — the headline gated
+    number: streaming weight updates are the common case (time-varying
+    conductances / edge weights on a fixed mesh), the patch touches no
+    structure, and must be **>= 10x** faster than the fresh build.
+  * **structural delta** (edge insertions localized to one block's tile)
+    — informational: the patch rebuilds every *affected* block, so its
+    win is locality-dependent (reported, plan-class in bench-diff, but
+    not held to the 10x bar).
+
+Every configuration also re-verifies the contract once: the patched plan
+is compared field-by-field (bitwise) against the fresh build, and runs
+the PLAN001-010 static verifier.  All host-side NumPy — no devices.
+
+The committed ``benchmarks/baselines/BENCH_delta.json`` carries
+``price.patch_vs_fresh_*`` (fail-class in ``make bench-diff``) so a
+planning-path regression that erodes the 10x gate is caught at commit
+time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+from .common import row, write_bench_json
+
+CHURN = 0.01
+REPS = 5
+_SKIP_FIELDS = {"_bell", "_bj_inv", "_cols_global", "_replan"}
+
+
+def _plans_equal(a, b) -> bool:
+    """Field-by-field bit equality (same contract as the test suites)."""
+    def eq(x, y):
+        if x is None or y is None:
+            return x is None and y is None
+        if isinstance(x, (tuple, list)):
+            return (isinstance(y, (tuple, list)) and len(x) == len(y)
+                    and all(eq(u, v) for u, v in zip(x, y)))
+        if isinstance(x, (int, float, str, bool)):
+            return x == y
+        xn, yn = np.asarray(x), np.asarray(y)
+        return (xn.dtype == yn.dtype and xn.shape == yn.shape
+                and bool(np.array_equal(xn, yn)))
+
+    return all(eq(getattr(a, f.name), getattr(b, f.name))
+               for f in dataclasses.fields(a)
+               if f.name not in _SKIP_FIELDS)
+
+
+def _grid_laplacian(side: int):
+    from repro.sparse.generators import grid
+    from repro.sparse.graph import laplacian_csr
+
+    return laplacian_csr(grid((side, side)), shift=1e-2)
+
+
+def _value_delta(rng, indptr, indices, n):
+    """Reweight CHURN of all entries — the streaming-weights case."""
+    from repro.sparse.replan import EdgeDelta
+
+    nnz = len(indices)
+    pos = rng.choice(nnz, size=int(CHURN * nnz), replace=False)
+    src = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
+    return EdgeDelta(n, set_rows=src[pos], set_cols=np.asarray(indices)[pos],
+                     set_vals=rng.uniform(-2.0, 2.0, size=len(pos)))
+
+
+def _structural_delta(rng, side: int, n: int):
+    """Insert diagonal-neighbor edges inside one 16x16 tile of the grid —
+    churn localized to a single block, the favorable structural case."""
+    from repro.sparse.replan import EdgeDelta
+
+    tile = 16
+    ii = rng.integers(0, tile - 1, size=200)
+    jj = rng.integers(0, tile - 1, size=200)
+    a = ii * side + jj
+    b = a + side + 1                      # not in the 5-point stencil
+    seen, sr, sc, sv = set(), [], [], []
+    for x, y in zip(a.tolist(), b.tolist()):
+        if (x, y) in seen:
+            continue
+        seen.add((x, y))
+        w = float(rng.uniform(0.1, 1.0))
+        sr += [x, y]
+        sc += [y, x]
+        sv += [w, w]
+    return EdgeDelta(n, set_rows=sr, set_cols=sc, set_vals=sv)
+
+
+def _min_of(fn, reps: int = REPS) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> int:
+    from repro.analysis.verify import verify_plan
+    from repro.sparse.distributed import build_plan_tree
+    from repro.sparse.replan import apply_delta_csr, apply_edge_delta
+
+    side, k = 256, 8
+    indptr, indices, data = _grid_laplacian(side)
+    n = len(indptr) - 1
+    part = ((np.arange(n) * k) // n).astype(np.int32)
+    rng = np.random.default_rng(42)
+
+    rows = ["name,us,derived"]
+    payload = {"bench": "delta", "n": n, "nnz": len(indices), "k": k,
+               "churn": CHURN, "configs": {}, "price": {}}
+    ok_10x = True
+    for label, fanouts in (("depth2", (2, 4)), ("depth3", (2, 2, 2))):
+        plan = build_plan_tree(indptr, indices, data, part, None, k,
+                               fanouts=fanouts)
+        # fresh build keeps cache=True: a serving rebuild must re-capture
+        # the replan cache too, so that's the honest alternative cost
+        fresh_s = _min_of(lambda: build_plan_tree(
+            indptr, indices, data, part, None, k, fanouts=fanouts,
+            validate=False))
+        dv = _value_delta(rng, indptr, indices, n)
+        patch_s = _min_of(lambda: apply_edge_delta(plan, dv,
+                                                   validate=False))
+        ds = _structural_delta(rng, side, n)
+        spatch_s = _min_of(lambda: apply_edge_delta(plan, ds,
+                                                    validate=False))
+
+        # contract re-check: patched == fresh, and the verifier passes
+        equal = True
+        for delta in (dv, ds):
+            patched = apply_edge_delta(plan, delta, validate=False)
+            ip2, ix2, d2 = apply_delta_csr(indptr, indices, data, delta)
+            fresh = build_plan_tree(ip2, ix2, d2, part, None, k,
+                                    fanouts=fanouts, validate=False)
+            equal = equal and _plans_equal(patched, fresh) \
+                and verify_plan(patched).ok
+
+        speedup = fresh_s / patch_s
+        ok_10x = ok_10x and equal and speedup >= 10.0
+        payload["configs"][label] = {
+            "fanouts": list(fanouts),
+            "fresh_build_s": fresh_s,
+            "patch_s": patch_s,
+            "speedup": speedup,
+            "structural_patch_s": spatch_s,
+            "structural_entries": len(ds),
+            "structural_speedup": fresh_s / spatch_s,
+            "bitwise_equal": equal,
+        }
+        payload["price"][f"patch_vs_fresh_{label}"] = patch_s / fresh_s
+        rows.append(row(f"delta_{label}_fresh_build", fresh_s * 1e6))
+        rows.append(row(f"delta_{label}_value_patch", patch_s * 1e6,
+                        f"speedup={speedup:.1f}x equal={equal}"))
+        rows.append(row(f"delta_{label}_structural_patch", spatch_s * 1e6,
+                        f"speedup={fresh_s / spatch_s:.1f}x"))
+
+    payload["meets_10x"] = ok_10x
+    print("\n".join(rows))
+    write_bench_json("delta", payload)
+    if not ok_10x:
+        print("bench-delta: FAILED — value-delta patch below the 10x bar "
+              "or patched plan not bit-equal")
+        return 1
+    print("bench-delta: value-delta patch >= 10x fresh build at both "
+          "depths, patched plans bit-equal")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

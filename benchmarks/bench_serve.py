@@ -66,6 +66,13 @@ def _measure(backend: str) -> dict:
     svc = SolverService(backend=backend, tol=1e-6, max_iters=600, **kw)
     rng = np.random.default_rng(0)
 
+    # standalone plan build + format conversion — the planning-path cost
+    # a cache miss pays before any compilation (bench-diff gates it)
+    from repro.sparse import make_operator
+    t0 = time.perf_counter()
+    make_operator(indptr, indices, data, backend, **kw)
+    plan_build_s = time.perf_counter() - t0
+
     def fresh_batch():
         return rng.normal(size=(n, NB)).astype(np.float32)
 
@@ -106,6 +113,7 @@ def _measure(backend: str) -> dict:
     s = svc.stats
     return {
         "n": n, "nb": NB,
+        "plan_build_s": plan_build_s,
         "cold_ms": cold_ms,
         "warm_p50_ms": warm_p50,
         "warm_p95_ms": float(np.percentile(lat, 95)),

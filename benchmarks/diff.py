@@ -10,6 +10,10 @@ before committing — it classifies every numeric leaf by its key path:
     round counts (``rounds*``).  A >20% increase fails the gate; these
     numbers are deterministic per (graph, seed), so a regression is a
     real quality loss, not noise.
+  * **plan** — planning-path wall time (``plan_build*``, ``patch*`` /
+    ``fresh_build*`` in the delta bench): fails only past a much looser
+    threshold (2x), so a real planning-path blow-up gates while ordinary
+    host jitter does not.
   * **warn** — wall-clock (``*_us``, ``*_s``, ``wall*``, ``latency*``,
     ``*time*``): printed but never failing, since host timings drift
     with the machine.
@@ -30,8 +34,12 @@ from .common import BASELINES
 
 # >20% increase on a fail-class leaf fails the gate
 THRESHOLD = 0.20
+# planning-path wall time is machine-timed, so it only fails past a much
+# looser bar: a doubling is a real planning regression, not host jitter
+PLAN_THRESHOLD = 1.0
 
 _FAIL_RE = re.compile(r"objective|makespan|rounds|(^|\.)price($|\.)")
+_PLAN_RE = re.compile(r"plan_build|patch_s|fresh_build")
 _WARN_RE = re.compile(r"_us($|\.)|_s($|\.)|wall|latency|time")
 # measurement noise / bookkeeping that must never gate
 _SKIP_RE = re.compile(r"agreement|max_rel|error|fingerprint|sha|raw\.")
@@ -61,17 +69,21 @@ def _committed(relpath: str) -> dict | None:
     return json.loads(proc.stdout)
 
 
-def diff_payloads(old: dict, new: dict,
-                  threshold: float = THRESHOLD) -> tuple[list, list]:
+def diff_payloads(old: dict, new: dict, threshold: float = THRESHOLD,
+                  plan_threshold: float = PLAN_THRESHOLD) -> tuple[list,
+                                                                   list]:
     """(failures, warnings): [(path, old, new, rel_increase), ...].
 
     Only *increases* regress — objectives and rounds are all
-    lower-is-better, and so are the warn-class latencies.
+    lower-is-better, and so are the warn-class latencies.  Plan-class
+    leaves (planning-path wall time) fail past ``plan_threshold`` and
+    warn between ``threshold`` and that.
     """
     old_leaves = dict(_leaves(old))
     failures, warnings = [], []
     for path, val in _leaves(new):
-        if _SKIP_RE.search(path.lower()):
+        low = path.lower()
+        if _SKIP_RE.search(low):
             continue
         prev = old_leaves.get(path)
         if prev is None:
@@ -79,8 +91,10 @@ def diff_payloads(old: dict, new: dict,
         rel = (val - prev) / max(abs(prev), 1e-12)
         if rel <= threshold:
             continue
-        low = path.lower()
-        if _FAIL_RE.search(low):
+        if _PLAN_RE.search(low):
+            (failures if rel > plan_threshold
+             else warnings).append((path, prev, val, rel))
+        elif _FAIL_RE.search(low):
             failures.append((path, prev, val, rel))
         elif _WARN_RE.search(low):
             warnings.append((path, prev, val, rel))

@@ -36,6 +36,11 @@ itself, not the modeled objective:
   PLAN009     routing: the replayed content of every halo slot is
               exactly the vertex each packed edge expects (catches slot
               aliasing that is self-consistent enough to pass PLAN006/7)
+  PLAN010     replan cache (plans built with ``cache=True``): the cached
+              host CSR/bookkeeping agrees with the plan it claims to
+              patch — same n/k/B, per-block nnz, sorted CSR keys, level
+              offsets (a stale cache makes the *next*
+              ``apply_edge_delta`` wrong, not this plan)
   ==========  ============================================================
 
 All checks are vectorized NumPy — O(nnz + rounds) plus sorts — and never
@@ -482,6 +487,41 @@ def _check_routing(plan, offs: np.ndarray, content: np.ndarray,
                 "mis-routed or aliased halo slot", count=int(bad.sum()))
 
 
+def _check_replan_cache(plan, offs: np.ndarray, rep: Report) -> None:
+    """Consistency of the incremental-replanning cache carried by plans
+    built with ``cache=True`` (PLAN010).  The cache is host bookkeeping
+    for :func:`repro.sparse.replan.apply_edge_delta`; a mismatch would
+    not make *this* plan wrong, but would corrupt the next patch."""
+    cache = getattr(plan, "_replan", None)
+    if cache is None:
+        return
+    n, k, B = int(plan.n), int(plan.k), int(plan.B)
+    if (int(cache.n), int(cache.k), int(cache.B)) != (n, k, B):
+        rep.add("PLAN010", f"cache (n, k, B)=({cache.n}, {cache.k}, "
+                           f"{cache.B}) != plan ({n}, {k}, {B})",
+                where="_replan")
+        return
+    if cache.nnz != int(np.asarray(plan.nnz_blk).sum()):
+        rep.add("PLAN010", f"cache holds {cache.nnz} CSR entries; plan's "
+                           f"nnz_blk sums to "
+                           f"{int(np.asarray(plan.nnz_blk).sum())}",
+                where="_replan")
+    if not np.array_equal(cache.per_blk, np.asarray(plan.nnz_blk)):
+        rep.add("PLAN010", "cache per_blk disagrees with plan nnz_blk",
+                where="_replan")
+    if cache.part.shape != (n,) or (cache.part.size and (
+            cache.part.min() < 0 or cache.part.max() >= k)):
+        rep.add("PLAN010", f"cache part shape {cache.part.shape} / values "
+                           f"not a valid (n,) block map", where="_replan")
+    if len(cache.keys) > 1 and not bool(np.all(np.diff(cache.keys) > 0)):
+        rep.add("PLAN010", "cache CSR keys are not strictly increasing "
+                           "(non-canonical CSR)", where="_replan")
+    if not np.array_equal(cache.offs, offs):
+        rep.add("PLAN010", f"cache level offsets {cache.offs.tolist()} != "
+                           f"plan level offsets {offs.tolist()}",
+                where="_replan")
+
+
 # --------------------------------------------------------------------------
 # entry points
 # --------------------------------------------------------------------------
@@ -513,6 +553,7 @@ def verify_plan(plan) -> Report:
         _check_reads(plan, offs, writes, rep)
         _check_tiling(plan, offs, rep)
         _check_routing(plan, offs, content, rep)
+    _check_replan_cache(plan, offs, rep)
     return rep
 
 

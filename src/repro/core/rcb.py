@@ -55,6 +55,10 @@ def _rcb(coords: np.ndarray, ids: np.ndarray, block_ids: np.ndarray,
     axis = int(np.argmax(extent))
     order = np.argsort(pts[:, axis], kind="stable")
     n_left = int(round(frac * len(ids)))
-    n_left = min(max(n_left, 0), len(ids))
+    # both sides hold blocks, so neither may receive an empty vertex set:
+    # an extreme weight skew (frac ~ 0 or ~ 1) used to round to 0 or
+    # len(ids) and emit empty blocks downstream
+    lo = 1 if len(ids) >= 2 else 0
+    n_left = min(max(n_left, lo), len(ids) - lo)
     _rcb(coords, ids[order[:n_left]], left_b, tw, part)
     _rcb(coords, ids[order[n_left:]], right_b, tw, part)

@@ -23,6 +23,13 @@ CG solves against a pool of matrices, ROADMAP's solver-as-a-service item):
     ``||b||^2 = 0`` keeps it inactive from iteration 0.
   * **counters** — :class:`ServeStats` tracks operator/bucket hits and
     misses, evictions, and real vs padded columns (padding waste).
+  * **streaming updates** — :meth:`SolverService.update_matrix` applies an
+    :class:`repro.sparse.replan.EdgeDelta` to a cached matrix: the plan is
+    patched in O(delta) when it carries a replan cache, the old
+    fingerprint is retired (no stale hits), and an optional
+    :class:`repro.core.replan_policy.DriftPolicy` prices every update so
+    a drifted partition triggers a full repartition with solver-state
+    migration instead of unbounded quality decay.
 
 Token serving (unchanged scaffold):
 
@@ -41,8 +48,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.replan_policy import DriftDecision, DriftMonitor, DriftPolicy
 from ..sparse import cg_solve, make_operator
 from ..sparse.cg import CGResult
+from ..sparse.graph import structure_graph
+from ..sparse.replan import (EdgeDelta, apply_delta_csr, apply_edge_delta,
+                             migrate_state)
 
 
 # --------------------------------------------------------------------------
@@ -77,11 +88,28 @@ class ServeStats:
     real_cols: int = 0
     padded_cols: int = 0
     solves: int = 0
+    plan_patches: int = 0           # update_matrix served by O(delta) patch
+    plan_rebuilds: int = 0          # update_matrix paid a full plan build
+    drift_trips: int = 0            # rebuilds forced by the drift monitor
 
     @property
     def padding_waste(self) -> float:
         total = self.real_cols + self.padded_cols
         return self.padded_cols / total if total else 0.0
+
+
+@dataclasses.dataclass
+class UpdateResponse:
+    """One served :meth:`SolverService.update_matrix`: the matrix moved to
+    a new fingerprint, either by an O(delta) plan patch or by a full
+    rebuild (drift trip / no replan cache)."""
+
+    fingerprint: str                # fingerprint of the mutated matrix
+    old_fingerprint: str
+    patched: bool                   # True: O(delta) patch; False: rebuild
+    repartitioned: bool             # rebuild used a fresh partition
+    drift: DriftDecision | None     # None when no drift policy is set
+    state: tuple | None             # migrated solver state (if passed in)
 
 
 @dataclasses.dataclass
@@ -113,6 +141,7 @@ class SolverService:
                  buckets: tuple[int, ...] = (1, 2, 4, 8, 16),
                  capacity: int = 8, tol: float = 1e-6,
                  max_iters: int = 500, precondition: str | None = None,
+                 drift: DriftPolicy | None = None, repartition=None,
                  **op_kw):
         if not buckets or list(buckets) != sorted(set(buckets)):
             raise ValueError(f"buckets must be sorted unique size classes; "
@@ -136,6 +165,14 @@ class SolverService:
         self._jit: dict[str, object] = {}
         # (fingerprint, bucket) -> static price (trace audit + roofline)
         self._cost: dict[tuple[str, int], dict] = {}
+        # streaming updates (update_matrix): host CSR per cached matrix,
+        # drift monitor per matrix, per-matrix partition overrides from
+        # drift-tripped repartitions
+        self.drift = drift
+        self.repartition = repartition
+        self._csr: dict[str, tuple] = {}
+        self._monitors: dict[str, DriftMonitor] = {}
+        self._parts: dict[str, np.ndarray] = {}
 
     def bucket_for(self, nb: int) -> int:
         """Smallest admission class holding ``nb`` columns; oversize
@@ -159,15 +196,123 @@ class SolverService:
         self.stats.operator_misses += 1
         op = make_operator(indptr, indices, data, self.backend,
                            **self.op_kw)
+        self._install(fp, op, (np.asarray(indptr), np.asarray(indices),
+                               np.asarray(data)))
+        return fp, op, False
+
+    def _install(self, fp: str, op, csr: tuple) -> None:
+        """Admit (fp, op) into the LRU, keeping the host CSR for
+        :meth:`update_matrix`; evicts down to capacity."""
         self._ops[fp] = op
+        self._csr[fp] = csr
         while len(self._ops) > self.capacity:
             old_fp, _ = self._ops.popitem(last=False)
-            self._warm = {w for w in self._warm if w[0] != old_fp}
-            self._jit.pop(old_fp, None)
-            self._cost = {key: v for key, v in self._cost.items()
-                          if key[0] != old_fp}
+            self._retire(old_fp)
             self.stats.operator_evictions += 1
-        return fp, op, False
+
+    def _retire(self, fp: str) -> None:
+        """Drop every per-matrix cache keyed by ``fp`` — compiled solves,
+        warm size classes, static prices, host CSR, drift state."""
+        self._warm = {w for w in self._warm if w[0] != fp}
+        self._jit.pop(fp, None)
+        self._cost = {key: v for key, v in self._cost.items()
+                      if key[0] != fp}
+        self._csr.pop(fp, None)
+        self._monitors.pop(fp, None)
+        self._parts.pop(fp, None)
+
+    def update_matrix(self, fingerprint: str, delta: EdgeDelta,
+                      state=None) -> UpdateResponse:
+        """Apply an :class:`EdgeDelta` to a cached matrix in place of a
+        full re-admission: the operator moves to the mutated matrix's
+        fingerprint via an O(delta) plan patch
+        (:func:`repro.sparse.replan.apply_edge_delta`) when its plan
+        carries a replan cache, and via a full rebuild otherwise.
+
+        With a :class:`DriftPolicy` (``drift=`` at construction) every
+        update is priced against the last full plan's baseline; a
+        threshold trip forces a rebuild on a fresh partition from the
+        ``repartition`` callable (``repartition(g) -> (n,) part``) and
+        migrates ``state`` (a sequence of operator-space solver vectors)
+        onto the new layout instead of restarting.  Trips without a
+        ``repartition`` callable are recorded (``stats.drift_trips``,
+        ``response.drift``) but still served by patching — the frozen
+        partition is all there is.
+
+        The old fingerprint is fully retired: a subsequent solve against
+        the *unmutated* matrix is an operator miss, never a stale hit.
+        """
+        csr = self._csr.get(fingerprint)
+        if csr is None:
+            raise KeyError(f"unknown or evicted fingerprint "
+                           f"{fingerprint!r}")
+        op = self._ops[fingerprint]
+        indptr, indices, data = csr
+        ip2, ix2, d2 = apply_delta_csr(indptr, indices, data, delta)
+        new_fp = matrix_fingerprint(ip2, ix2, d2)
+        plan = getattr(op, "plan", None)
+        cache = getattr(plan, "_replan", None)
+
+        decision = None
+        monitor = self._monitors.pop(fingerprint, None)
+        if self.drift is not None:
+            if cache is not None:
+                part, anc = cache.part, getattr(plan, "anc", None)
+            else:
+                part = self._parts.get(fingerprint,
+                                       self.op_kw.get("part"))
+                anc = None
+            if part is not None:
+                if monitor is None:
+                    monitor = DriftMonitor(self.drift)
+                    monitor.reset(structure_graph(indptr, indices, data),
+                                  part, anc)
+                g2 = structure_graph(ip2, ix2, d2)
+                decision = monitor.observe(g2, part, anc)
+                if decision.repartition:
+                    self.stats.drift_trips += 1
+
+        repartitioned = (decision is not None and decision.repartition
+                         and self.repartition is not None)
+        out_state = tuple(state) if state is not None else None
+        if cache is not None and not repartitioned:
+            new_plan = apply_edge_delta(plan, delta)
+            new_op = dataclasses.replace(op, plan=new_plan)
+            self.stats.plan_patches += 1
+            patched = True
+        else:
+            kw = dict(self.op_kw)
+            if fingerprint in self._parts:
+                kw["part"] = self._parts[fingerprint]
+            if repartitioned:
+                kw["part"] = np.asarray(
+                    self.repartition(structure_graph(ip2, ix2, d2)))
+                self._parts[new_fp] = kw["part"]
+            new_op = make_operator(ip2, ix2, d2, self.backend, **kw)
+            self.stats.plan_rebuilds += 1
+            patched = False
+            new_plan = getattr(new_op, "plan", None)
+            if out_state is not None and plan is not None \
+                    and new_plan is not None:
+                moved = migrate_state(plan, new_plan, *out_state)
+                out_state = moved if isinstance(moved, tuple) else (moved,)
+            if monitor is not None:
+                new_cache = getattr(new_plan, "_replan", None)
+                monitor.reset(
+                    structure_graph(ip2, ix2, d2),
+                    new_cache.part if new_cache is not None
+                    else kw.get("part"),
+                    getattr(new_plan, "anc", None))
+
+        self._ops.pop(fingerprint, None)
+        self._retire(fingerprint)
+        self._install(new_fp, new_op, (ip2, ix2, d2))
+        if monitor is not None:
+            self._monitors[new_fp] = monitor
+        return UpdateResponse(fingerprint=new_fp,
+                              old_fingerprint=fingerprint,
+                              patched=patched, repartitioned=repartitioned,
+                              drift=decision, state=out_state)
 
     def static_cost(self, indptr, indices, data, nb: int = 1,
                     fingerprint: str | None = None) -> dict:

@@ -123,6 +123,10 @@ class DistPlan:
     _cols_global: jnp.ndarray = None
     _bell: dict = dataclasses.field(default_factory=dict)
     _bj_inv: jnp.ndarray = None       # lazy (k, B, B) block-Jacobi inverses
+    # host-side intermediates for O(delta) incremental replanning
+    # (:mod:`repro.sparse.replan`); None on plans built without a cache.
+    # Never compared by the bit-equality suites — pure bookkeeping.
+    _replan: object = None
 
     @property
     def cols_global(self) -> jnp.ndarray:
@@ -864,20 +868,15 @@ def _class_schedule(t_pair: np.ndarray, t_v: np.ndarray, k: int,
             tuple(tuple(r) for r in round_pairs), slot)
 
 
-def _derive_tree_fields(rows_a: np.ndarray, cols_a: np.ndarray,
-                        vals_a: np.ndarray, per_blk: np.ndarray,
-                        B: int, offs: np.ndarray) -> dict:
-    """(h+1)-way interior / per-level boundary split.
+def _derive_tree_fields_np(rows_a: np.ndarray, cols_a: np.ndarray,
+                           vals_a: np.ndarray, per_blk: np.ndarray,
+                           B: int, offs: np.ndarray) -> dict:
+    """NumPy core of :func:`_derive_tree_fields` — host arrays only.
 
-    A row's class is the *highest* slot level any of its edges reads
-    (``offs`` are the level-range boundaries, ``offs[0] == B``; reads
-    below B are local).  Every edge of a row goes to the row's segment,
-    so the h+1 segments exactly tile the true nnz set and the PR 2
-    boundary set is the union of the level segments.  The interior
-    criterion (no halo reads at all) is identical to the flat plan's, so
-    the interior segment is bit-equal to :func:`build_plan`'s on the
-    same partition; at ``h == 2`` the level segments are exactly PR 3's
-    intra-/inter-pod split.
+    Besides the packed segments it returns the per-edge segment
+    bookkeeping (``seg_lvl``/``seg_pos``/``seg_counts``, ``row_lvl`` and
+    the diagonal entry positions) that :mod:`repro.sparse.replan` uses to
+    patch segments in place instead of re-deriving all blocks.
     """
     k, nnz_pad = rows_a.shape
     h = len(offs) - 1
@@ -893,29 +892,77 @@ def _derive_tree_fields(rows_a: np.ndarray, cols_a: np.ndarray,
 
     blk_col = np.arange(k)[:, None]
     row_lvl_of_edge = row_lvl[blk_col, rows_a]
-    pack = functools.partial(_pack_segment, rows_a, cols_a, vals_a)
-    rows_int, cols_int, vals_int = pack(valid & (row_lvl_of_edge == -1))
-    lvl_seg = [pack(valid & (row_lvl_of_edge == l)) for l in range(h)]
+    # per-edge segment (-2 padding, -1 interior, l = boundary level) and
+    # the edge's packed position inside that segment
+    seg_lvl = np.where(valid, row_lvl_of_edge, -2).astype(np.int8)
+    seg_pos = np.zeros((k, nnz_pad), dtype=np.int32)
+    seg_counts = np.zeros((h + 1, k), dtype=np.int64)
+    segs = []
+    for s in range(-1, h):
+        sel = valid & (row_lvl_of_edge == s)
+        counts = sel.sum(axis=1)
+        seg_counts[s + 1] = counts
+        pad = max(int(counts.max()) if k else 0, 1)
+        pos = np.cumsum(sel, axis=1) - 1
+        b, e = np.nonzero(sel)
+        p = pos[b, e]
+        seg_pos[b, e] = p.astype(np.int32)
+        r = np.zeros((k, pad), dtype=np.int32)
+        c = np.zeros((k, pad), dtype=np.int32)
+        v = np.zeros((k, pad), dtype=np.float32)
+        r[b, p] = rows_a[b, e]
+        c[b, p] = cols_a[b, e]
+        v[b, p] = vals_a[b, e]
+        segs.append((r, c, v))
 
     diag = np.zeros((k, B), dtype=np.float32)
     on_diag = valid & (rows_a == cols_a)
     db, de = np.nonzero(on_diag)
     np.add.at(diag, (db, rows_a[db, de]), vals_a[db, de])
     return dict(
+        int_seg=segs[0], lvl_segs=segs[1:], diag=diag,
+        nnz_blk=per_blk.copy(), row_lvl=row_lvl,
+        seg_lvl=seg_lvl, seg_pos=seg_pos, seg_counts=seg_counts,
+        diag_b=db, diag_e=de,
+    )
+
+
+def _derive_tree_fields(rows_a: np.ndarray, cols_a: np.ndarray,
+                        vals_a: np.ndarray, per_blk: np.ndarray,
+                        B: int, offs: np.ndarray) -> dict:
+    """(h+1)-way interior / per-level boundary split.
+
+    A row's class is the *highest* slot level any of its edges reads
+    (``offs`` are the level-range boundaries, ``offs[0] == B``; reads
+    below B are local).  Every edge of a row goes to the row's segment,
+    so the h+1 segments exactly tile the true nnz set and the PR 2
+    boundary set is the union of the level segments.  The interior
+    criterion (no halo reads at all) is identical to the flat plan's, so
+    the interior segment is bit-equal to :func:`build_plan`'s on the
+    same partition; at ``h == 2`` the level segments are exactly PR 3's
+    intra-/inter-pod split.  The ``_host`` entry carries the NumPy core's
+    raw output for the replan cache (popped by :func:`build_plan_tree`).
+    """
+    host = _derive_tree_fields_np(rows_a, cols_a, vals_a, per_blk, B, offs)
+    rows_int, cols_int, vals_int = host["int_seg"]
+    lvl_seg = host["lvl_segs"]
+    return dict(
         rows_int=jnp.asarray(rows_int), cols_int=jnp.asarray(cols_int),
         vals_int=jnp.asarray(vals_int),
         rows_bnd_lvl=tuple(jnp.asarray(r) for r, _, _ in lvl_seg),
         cols_bnd_lvl=tuple(jnp.asarray(c) for _, c, _ in lvl_seg),
         vals_bnd_lvl=tuple(jnp.asarray(v) for _, _, v in lvl_seg),
-        diag=jnp.asarray(diag), nnz_blk=per_blk.copy(),
-        _bnd_row=row_lvl >= 0,
+        diag=jnp.asarray(host["diag"]), nnz_blk=host["nnz_blk"],
+        _bnd_row=host["row_lvl"] >= 0,
+        _host=host,
     )
 
 
 def build_plan_tree(indptr: np.ndarray, indices: np.ndarray,
                     data: np.ndarray, part: np.ndarray,
                     tree, k: int, fanouts=None,
-                    validate: bool | None = None) -> TreePlan:
+                    validate: bool | None = None,
+                    cache: bool = True) -> TreePlan:
     """Build the arbitrary-depth distributed plan for a tree mesh.
 
     ``tree`` is anything ``core.topology.normalize_tree_of`` accepts: a
@@ -1029,7 +1076,28 @@ def build_plan_tree(indptr: np.ndarray, indices: np.ndarray,
 
     split = _derive_tree_fields(rows_a, cols_a, vals_a, per_blk, B, offs)
     bnd_row = split.pop("_bnd_row")
+    host_split = split.pop("_host")
     interior_mask = row_mask * ~bnd_row
+
+    # host-side intermediates for O(delta) patching (sparse/replan.py).
+    # ``cache=False`` drops them (saves ~2x host memory for static
+    # matrices); a canonical sorted CSR is required for patching, so a
+    # non-canonical input simply gets no cache instead of failing.
+    replan_cache = None
+    if cache:
+        from .replan import capture_replan_cache
+        replan_cache = capture_replan_cache(
+            indptr=np.asarray(indptr), indices=dst,
+            data=np.asarray(data), src=src,
+            part=part, order=order, rank_in_block=rank_in_block,
+            sizes=sizes, B=B, k=k, n=n, fanouts=fanouts_out,
+            suffix=tuple(suffix), flat=flat, o2=o2, ext=ext,
+            ext_keys=ext_keys, psrc=psrc,
+            t_pair=t_pair_all, t_v=t_v_all, t_lvl=t_lvl,
+            slot_of_trip=slot_of_trip, offs=offs,
+            rows_a=rows_a, cols_a=cols_a, vals_a=vals_a,
+            per_blk=per_blk, pos_edge=pos_edge,
+            row_mask=row_mask, host=host_split)
 
     return _maybe_verify(TreePlan(
         k=k, B=B, S=max(S_lvl), n_rounds=sum(R_lvl), n=n, perm=perm,
@@ -1044,6 +1112,7 @@ def build_plan_tree(indptr: np.ndarray, indices: np.ndarray,
         send_mask_lvl=tuple(jnp.asarray(a) for a in sm_lvl),
         round_perms_lvl=tuple(perms_lvl),
         _pack_blk=own, _pack_pos=pos_edge, _pack_dst=dst,
+        _replan=replan_cache,
     ), validate)
 
 

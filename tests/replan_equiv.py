@@ -1,0 +1,161 @@
+"""Shared helpers for the delta-replanning equality suites.
+
+Not a test module (no ``test_`` prefix): both the deterministic sweeps
+(tests/test_replan.py) and the hypothesis suite
+(tests/test_replan_properties.py) import these, and conftest.py only
+collect-skips ``test_*.py`` files when hypothesis is missing locally.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.sparse.distributed import build_plan_tree
+from repro.sparse.replan import EdgeDelta, apply_delta_csr, apply_edge_delta
+
+# plan fields that are lazy caches / replan bookkeeping, not plan content
+_SKIP_FIELDS = {"_bell", "_bj_inv", "_cols_global", "_replan"}
+
+
+def _eq(a, b, path: str):
+    if a is None or b is None:
+        assert a is None and b is None, f"{path}: {a!r} != {b!r}"
+        return
+    if isinstance(a, (tuple, list)):
+        assert isinstance(b, (tuple, list)) and len(a) == len(b), \
+            f"{path}: length {len(a)} != {len(b)}"
+        for i, (x, y) in enumerate(zip(a, b)):
+            _eq(x, y, f"{path}[{i}]")
+        return
+    if isinstance(a, (int, float, str, bool)):
+        assert a == b, f"{path}: {a!r} != {b!r}"
+        return
+    an, bn = np.asarray(a), np.asarray(b)
+    assert an.dtype == bn.dtype, f"{path}: dtype {an.dtype} != {bn.dtype}"
+    assert an.shape == bn.shape, f"{path}: shape {an.shape} != {bn.shape}"
+    assert np.array_equal(an, bn), \
+        f"{path}: values differ at {np.argwhere(an != bn)[:4].tolist()}"
+
+
+def assert_plan_equal(patched, fresh) -> None:
+    """Field-by-field bit equality of two plans (every dataclass field —
+    including the ``_pack_*`` packing bookkeeping — except lazy caches)."""
+    assert type(patched) is type(fresh)
+    for f in dataclasses.fields(fresh):
+        if f.name in _SKIP_FIELDS:
+            continue
+        _eq(getattr(patched, f.name), getattr(fresh, f.name), f.name)
+
+
+def random_csr(rng: np.random.Generator, n: int, density: float = 0.05):
+    """Random symmetric canonical CSR (Laplacian-like: symmetric
+    structure, nonzero diagonal) for the mutation suites."""
+    m = max(1, int(n * n * density / 2))
+    u = rng.integers(0, n, size=m)
+    v = rng.integers(0, n, size=m)
+    keep = u != v
+    u, v = u[keep], v[keep]
+    w = rng.uniform(0.5, 2.0, size=len(u))
+    src = np.concatenate([u, v, np.arange(n)])
+    dst = np.concatenate([v, u, np.arange(n)])
+    val = np.concatenate([w, w, rng.uniform(3.0, 9.0, size=n)])
+    key = src.astype(np.int64) * n + dst
+    order = np.argsort(key, kind="stable")
+    key, src, dst, val = key[order], src[order], dst[order], val[order]
+    uniq, start = np.unique(key, return_index=True)
+    src, dst, val = src[start], dst[start], val[start]
+    counts = np.bincount(src, minlength=n)
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return indptr, dst.astype(np.int32), val.astype(np.float32)
+
+
+def random_delta(rng: np.random.Generator, indptr, indices, n: int,
+                 n_reweight: int = 0, n_add: int = 0, n_drop: int = 0,
+                 symmetric: bool = True) -> EdgeDelta:
+    """Random mutation batch against a canonical CSR.
+
+    With ``symmetric`` every structural mutation is mirrored (the matrix
+    stays structurally symmetric, like a time-stepping mesh); reweights
+    are per-entry.  Self-edges (diagonal) can be reweighted but are
+    never added/dropped.
+    """
+    indptr = np.asarray(indptr)
+    src = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
+    dst = np.asarray(indices, dtype=np.int64)
+    keys = src * n + dst
+    nnz = len(keys)
+
+    set_r, set_c, set_v, drop_r, drop_c = [], [], [], [], []
+    used = set()
+
+    if n_reweight and nnz:
+        pos = rng.choice(nnz, size=min(n_reweight, nnz), replace=False)
+        for p in pos:
+            used.add(int(keys[p]))
+            set_r.append(int(src[p]))
+            set_c.append(int(dst[p]))
+            set_v.append(float(rng.uniform(-2.0, 2.0)))
+
+    if n_drop and nnz:
+        off = np.flatnonzero(src != dst)
+        rng.shuffle(off)
+        for p in off:
+            if len(drop_r) >= n_drop:
+                break
+            a, b = int(src[p]), int(dst[p])
+            pair = {a * n + b, b * n + a}
+            if pair & used:
+                continue
+            used |= pair
+            drop_r.append(a)
+            drop_c.append(b)
+            if symmetric:
+                drop_r.append(b)
+                drop_c.append(a)
+
+    added, tries = 0, 0
+    while added < n_add and tries < 100 * (n_add + 1):
+        tries += 1
+        a, b = int(rng.integers(0, n)), int(rng.integers(0, n))
+        if a == b:
+            continue
+        pair = {a * n + b, b * n + a}
+        if pair & used:
+            continue
+        p = int(np.searchsorted(keys, a * n + b))
+        if p < nnz and keys[p] == a * n + b:
+            continue                      # already present
+        used |= pair
+        w = float(rng.uniform(0.1, 2.0))
+        set_r.append(a)
+        set_c.append(b)
+        set_v.append(w)
+        if symmetric:
+            set_r.append(b)
+            set_c.append(a)
+            set_v.append(w)
+        else:
+            used.discard(b * n + a)
+        added += 1
+
+    return EdgeDelta(n, set_rows=set_r, set_cols=set_c, set_vals=set_v,
+                     drop_rows=drop_r, drop_cols=drop_c)
+
+
+def check_patch_equals_fresh(indptr, indices, data, part, tree, k,
+                             delta: EdgeDelta, fanouts=None):
+    """The contract: patching == fresh build on the merged CSR.
+
+    Returns (patched, fresh) for further checks.  Both are built under
+    whatever REPRO_VALIDATE says (conftest defaults it on), so the plan
+    verifier also runs on every patched plan.
+    """
+    base = build_plan_tree(indptr, indices, data, part, tree, k,
+                           fanouts=fanouts)
+    patched = apply_edge_delta(base, delta)
+    ip2, ix2, d2 = apply_delta_csr(indptr, indices, data, delta)
+    fresh = build_plan_tree(ip2, ix2, d2, part, tree, k, fanouts=fanouts)
+    assert_plan_equal(patched, fresh)
+    return patched, fresh

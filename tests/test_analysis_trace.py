@@ -311,6 +311,37 @@ def test_payload_bytes_match_flat_comm_volumes():
     assert cost.comm_payload_bytes_lvl == (expect,)
 
 
+def test_patched_plan_traces_like_fresh_build():
+    """A delta-patched plan (ISSUE 10) drives the staged program through
+    TRACE001-005 clean, and its static comm cost equals the fresh build's
+    on the mutated matrix — the audit can't tell patch from rebuild."""
+    import dataclasses
+
+    from repro.sparse.replan import (EdgeDelta, apply_delta_csr,
+                                     apply_edge_delta)
+
+    _, nv, indptr, indices, data = _system()
+    k, fanouts = 4, (2, 2)
+    part = _rng_part(nv, k)
+    mesh = compat.abstract_mesh(dict(zip(tree_axis_names(2), fanouts)))
+    op = make_operator(indptr, indices, data, "dist_hier", part=part,
+                       k=k, mesh=mesh, fanouts=fanouts)
+    # structural mutation: a new symmetric corner-to-corner edge crosses
+    # every tree level, so the patched schedules must re-trace cleanly
+    delta = EdgeDelta(nv, set_rows=[0, nv - 1], set_cols=[nv - 1, 0],
+                      set_vals=[-1.0, -1.0])
+    op2 = dataclasses.replace(op, plan=apply_edge_delta(op.plan, delta))
+    rep = audit_operator(op2, solver=False)
+    assert rep.ok, str(rep)
+    ip2, ix2, d2 = apply_delta_csr(indptr, indices, data, delta)
+    fresh = make_operator(ip2, ix2, d2, "dist_hier", part=part, k=k,
+                          mesh=mesh, fanouts=fanouts)
+    ref = audit_operator(fresh, solver=False)
+    assert ref.ok, str(ref)
+    assert rep.info["cost_matvec"].comm_payload_bytes_lvl == \
+        ref.info["cost_matvec"].comm_payload_bytes_lvl
+
+
 def test_batched_payload_scales_with_nb():
     k = 4
     _, indptr, indices, data, part = _stripes_fixture((16, 16), k)

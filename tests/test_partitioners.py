@@ -77,6 +77,23 @@ def test_heterogeneous_block_sizes_respected():
     assert abs(sizes[0] - tw[0]) / tw[0] < 0.05
 
 
+def test_rcb_extreme_weight_skew_leaves_no_empty_block():
+    """Degenerate-split regression: a target-weight ratio so extreme that
+    ``round(frac * n)`` hits 0 (or n) used to hand one side an empty
+    vertex set and emit empty blocks.  Every block must own >= 1 vertex
+    as long as it holds at least one target weight."""
+    from repro.core.rcb import partition_rcb
+
+    g = grid((8, 8))
+    for tw in ([1000.0, 1.0], [1.0, 1000.0], [1000.0, 1.0, 1.0, 1000.0]):
+        part = partition_rcb(g, np.asarray(tw))
+        sizes = np.bincount(part, minlength=len(tw))
+        assert sizes.min() >= 1, (tw, sizes.tolist())
+    # the skew still steers nearly everything to the heavy block
+    part = partition_rcb(g, np.asarray([1000.0, 1.0]))
+    assert np.bincount(part, minlength=2)[0] >= 60
+
+
 def test_comm_volume_sane(mesh2d, topo8):
     part, tw = partition(mesh2d, topo8, "geoRef")
     mcv = max_comm_volume(mesh2d, part, topo8.k)

@@ -1,0 +1,253 @@
+"""Deterministic delta-replanning suite (ISSUE 10).
+
+The contract under test is *bit-level*: ``apply_edge_delta(plan, delta)``
+must equal ``build_plan_tree`` on the mutated CSR field-by-field (same
+dtypes, same packed-edge order, same schedules, same float bits) at every
+tree depth.  ``tests/test_replan_properties.py`` is the hypothesis
+counterpart over random mutation batches; this module pins the seeded
+sweeps and the adversarial shapes (chained patches, emptied levels,
+emptied rows) plus the ``EdgeDelta`` validation surface.
+
+Host-side NumPy only — no devices (conftest's ``REPRO_VALIDATE=1``
+additionally runs the PLAN001-010 verifier on every plan built here).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.sparse.distributed import build_plan_tree
+from repro.sparse.graph import from_edges, structure_graph
+from repro.sparse.replan import (EdgeDelta, apply_delta_csr,
+                                 apply_edge_delta)
+
+from replan_equiv import (assert_plan_equal, check_patch_equals_fresh,
+                          random_csr, random_delta)
+
+DEPTHS = [(4, (4,)), (4, (2, 2)), (8, (2, 2, 2))]
+CASES = [
+    ("reweight", dict(n_reweight=6)),
+    ("add", dict(n_add=4)),
+    ("drop", dict(n_drop=4)),
+    ("mixed", dict(n_reweight=5, n_add=3, n_drop=3)),
+    ("asymmetric", dict(n_add=3, n_drop=2, symmetric=False)),
+]
+
+
+@pytest.mark.parametrize("k,fanouts", DEPTHS)
+@pytest.mark.parametrize("case,kwargs", CASES)
+def test_patch_equals_fresh(k, fanouts, case, kwargs):
+    rng = np.random.default_rng(hash((k, case)) % 2**32)
+    n = 48 if k == 4 else 64
+    for _ in range(3):
+        ip, ix, d = random_csr(rng, n, density=0.08)
+        part = rng.integers(0, k, size=n).astype(np.int32)
+        delta = random_delta(rng, ip, ix, n, **kwargs)
+        if len(delta) == 0:
+            continue
+        check_patch_equals_fresh(ip, ix, d, part, None, k, delta,
+                                 fanouts=fanouts)
+
+
+def test_chained_patches_stay_exact():
+    """Five sequential patches (each on the previous patch's output) keep
+    bit-equality — the patched replan cache is itself patch-ready."""
+    rng = np.random.default_rng(7)
+    n, k, fanouts = 64, 8, (2, 4)
+    ip, ix, d = random_csr(rng, n, density=0.08)
+    part = rng.integers(0, k, size=n).astype(np.int32)
+    plan = build_plan_tree(ip, ix, d, part, None, k, fanouts=fanouts)
+    for _ in range(5):
+        delta = random_delta(rng, ip, ix, n, n_reweight=4, n_add=3,
+                             n_drop=2)
+        plan = apply_edge_delta(plan, delta)
+        ip, ix, d = apply_delta_csr(ip, ix, d, delta)
+        fresh = build_plan_tree(ip, ix, d, part, None, k, fanouts=fanouts)
+        assert_plan_equal(plan, fresh)
+
+
+def _grid_csr(n_side=8, k=4):
+    from repro.sparse.generators import grid
+    from repro.sparse.graph import laplacian_csr
+
+    g = grid((n_side, n_side))
+    ip, ix, d = laplacian_csr(g, shift=0.1)
+    n = g.n
+    part = ((np.arange(n) * k) // n).astype(np.int32)
+    return ip, ix, d, part, n
+
+
+def test_emptying_a_level_matches_fresh():
+    """Dropping every cross-edge of the outermost level leaves that level
+    with an empty schedule — identical to the fresh build's."""
+    ip, ix, d, part, n = _grid_csr()
+    src = np.repeat(np.arange(n), np.diff(ip))
+    cross = (part[src] < 2) != (part[ix] < 2)
+    delta = EdgeDelta(n, drop_rows=src[cross], drop_cols=ix[cross])
+    patched, _fresh = check_patch_equals_fresh(ip, ix, d, part, None, 4,
+                                               delta, fanouts=(2, 2))
+    assert min(int(r) for r in patched.n_rounds_lvl) == 0
+
+
+def test_emptying_a_row_matches_fresh():
+    ip, ix, d, part, n = _grid_csr()
+    src = np.repeat(np.arange(n), np.diff(ip))
+    m = (src == 9) & (ix != 9)
+    delta = EdgeDelta(n, drop_rows=np.concatenate([src[m], ix[m]]),
+                      drop_cols=np.concatenate([ix[m], src[m]]))
+    check_patch_equals_fresh(ip, ix, d, part, None, 4, delta,
+                             fanouts=(2, 2))
+
+
+def test_patched_cache_passes_plan010():
+    """The patched plan's replan cache stays verifier-consistent, and a
+    corrupted cache is caught (PLAN010)."""
+    from repro.analysis.verify import verify_plan
+
+    ip, ix, d, part, n = _grid_csr()
+    plan = build_plan_tree(ip, ix, d, part, None, 4, fanouts=(2, 2))
+    delta = EdgeDelta(n, set_rows=[0, 1], set_cols=[1, 0],
+                      set_vals=[-0.25, -0.25])
+    patched = apply_edge_delta(plan, delta)
+    assert verify_plan(patched).ok
+    bad = dataclasses.replace(
+        patched, _replan=dataclasses.replace(
+            patched._replan, per_blk=patched._replan.per_blk + 1))
+    rep = verify_plan(bad)
+    assert not rep.ok
+    assert any("PLAN010" in str(x) for x in rep.diagnostics)
+
+
+def test_migrate_state_permutes_exactly():
+    """Solver state moved between plans with *different* partitions keeps
+    every value — only the layout changes (the post-repartition
+    warm-start path)."""
+    from repro.sparse.replan import migrate_state
+
+    ip, ix, d, part, n = _grid_csr()
+    rng = np.random.default_rng(13)
+    part2 = rng.integers(0, 4, size=n).astype(np.int32)
+    old = build_plan_tree(ip, ix, d, part, None, 4, fanouts=(2, 2))
+    new = build_plan_tree(ip, ix, d, part2, None, 4, fanouts=(2, 2))
+    x = rng.normal(size=n).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+    xs, ys = old.scatter_vec(x), old.scatter_vec(y)
+    moved = migrate_state(old, new, xs)          # single array: unwrapped
+    assert np.array_equal(np.asarray(new.gather_vec(moved)), x)
+    mx, my = migrate_state(old, new, xs, ys)     # tuple in, tuple out
+    assert np.array_equal(np.asarray(new.gather_vec(mx)), x)
+    assert np.array_equal(np.asarray(new.gather_vec(my)), y)
+    # size-mismatched plans refuse to migrate
+    ip3, ix3, d3 = random_csr(np.random.default_rng(1), n + 8,
+                              density=0.1)
+    part3 = np.zeros(n + 8, np.int32)
+    other = build_plan_tree(ip3, ix3, d3, part3, None, 4, fanouts=(2, 2))
+    with pytest.raises(ValueError):
+        migrate_state(old, other, xs)
+
+
+# --------------------------------------------------------------------------
+# EdgeDelta / apply_delta_csr surface
+# --------------------------------------------------------------------------
+
+def test_edge_delta_validation():
+    with pytest.raises(ValueError):            # set/drop overlap
+        EdgeDelta(4, set_rows=[0], set_cols=[1], set_vals=[1.0],
+                  drop_rows=[0], drop_cols=[1])
+    with pytest.raises(ValueError):            # duplicate set key
+        EdgeDelta(4, set_rows=[0, 0], set_cols=[1, 1], set_vals=[1.0, 2.0])
+    with pytest.raises(ValueError):            # out of range
+        EdgeDelta(4, set_rows=[4], set_cols=[0], set_vals=[1.0])
+    with pytest.raises(ValueError):            # ragged set triple
+        EdgeDelta(4, set_rows=[0], set_cols=[1, 2], set_vals=[1.0])
+    assert len(EdgeDelta(4)) == 0
+
+
+def test_apply_delta_csr_matches_dense():
+    rng = np.random.default_rng(3)
+    n = 12
+    ip, ix, d = random_csr(rng, n, density=0.2)
+    delta = random_delta(rng, ip, ix, n, n_reweight=3, n_add=2, n_drop=2)
+    ip2, ix2, d2 = apply_delta_csr(ip, ix, d, delta)
+
+    dense = np.zeros((n, n), dtype=np.float64)
+    src = np.repeat(np.arange(n), np.diff(ip))
+    dense[src, ix] = d
+    dense2 = np.zeros((n, n), dtype=np.float64)
+    dense2[np.repeat(np.arange(n), np.diff(ip2)), ix2] = d2
+    expect = dense.copy()
+    expect[np.asarray(delta.set_rows), np.asarray(delta.set_cols)] = \
+        np.asarray(delta.set_vals)
+    expect[np.asarray(delta.drop_rows, dtype=np.int64),
+           np.asarray(delta.drop_cols, dtype=np.int64)] = 0.0
+    np.testing.assert_allclose(dense2, expect)
+    assert d2.dtype == d.dtype and ix2.dtype == ix.dtype
+    assert ip2.dtype == ip.dtype
+
+
+def test_delta_diff_roundtrip():
+    """EdgeDelta.diff(old, new) reproduces new when applied to old."""
+    rng = np.random.default_rng(5)
+    n = 16
+    ip, ix, d = random_csr(rng, n, density=0.15)
+    fwd = random_delta(rng, ip, ix, n, n_reweight=3, n_add=2, n_drop=2)
+    ip2, ix2, d2 = apply_delta_csr(ip, ix, d, fwd)
+    back = EdgeDelta.diff(ip, ix, d, ip2, ix2, d2)
+    ip3, ix3, d3 = apply_delta_csr(ip, ix, d, back)
+    assert np.array_equal(ip2, ip3) and np.array_equal(ix2, ix3)
+    assert np.array_equal(d2, d3)
+
+
+def test_drop_missing_edge_raises():
+    ip, ix, d, _part, n = _grid_csr()
+    with pytest.raises(KeyError):
+        apply_delta_csr(ip, ix, d, EdgeDelta(n, drop_rows=[0],
+                                             drop_cols=[n - 1]))
+
+
+def test_patch_without_cache_or_wrong_n_raises():
+    ip, ix, d, part, n = _grid_csr()
+    plan = build_plan_tree(ip, ix, d, part, None, 4, fanouts=(2, 2),
+                           cache=False)
+    delta = EdgeDelta(n, set_rows=[0], set_cols=[1], set_vals=[-1.0])
+    with pytest.raises(ValueError):
+        apply_edge_delta(plan, delta)
+    cached = build_plan_tree(ip, ix, d, part, None, 4, fanouts=(2, 2))
+    with pytest.raises(ValueError):
+        apply_edge_delta(cached, EdgeDelta(n + 1, set_rows=[0],
+                                           set_cols=[1], set_vals=[1.0]))
+
+
+# --------------------------------------------------------------------------
+# Graph edge-mutation helpers
+# --------------------------------------------------------------------------
+
+def test_graph_mutation_helpers():
+    g = from_edges(5, [0, 1, 2, 3], [1, 2, 3, 4], symmetrize=True)
+    g2 = g.add_edges([0], [4], [2.0])
+    assert g2.num_edges == g.num_edges + 1
+    pos = g2._edge_positions([0], [4])
+    assert g2.weights[pos[0]] == 2.0
+    g3 = g2.remove_edges([0], [4])
+    assert g3.num_edges == g.num_edges
+    with pytest.raises(KeyError):
+        g3.remove_edges([0], [4])
+    g4 = g.reweight_edges([1], [2], [7.0])
+    assert g4.weights[g4._edge_positions([1], [2])[0]] == 7.0
+    assert g4.weights[g4._edge_positions([2], [1])[0]] == 7.0
+    assert g4.indices is g.indices          # structure shared
+    g4.validate()
+
+
+def test_structure_graph_matches_from_edges():
+    rng = np.random.default_rng(11)
+    n = 20
+    ip, ix, d = random_csr(rng, n, density=0.15)
+    g = structure_graph(ip, ix, d)
+    src = np.repeat(np.arange(n), np.diff(ip))
+    off = src != ix
+    ref = from_edges(n, src[off], ix[off], np.abs(d[off]))
+    assert np.array_equal(g.indptr, ref.indptr)
+    assert np.array_equal(g.indices, ref.indices)
+    np.testing.assert_allclose(g.weights, ref.weights)
+    g.validate()

@@ -1,0 +1,142 @@
+"""Drift-monitor policy tests (ISSUE 10) — NumPy-only, no JAX import.
+
+The :class:`repro.core.replan_policy.DriftMonitor` watches a patched
+plan's quality decay (cost-model objective + work imbalance vs the last
+full partition's baseline) and decides when delta patching should give
+way to a full repartition.
+"""
+import numpy as np
+import pytest
+
+from repro.core.replan_policy import (DriftDecision, DriftMonitor,
+                                      DriftPolicy)
+from repro.sparse.graph import from_edges, structure_graph
+
+
+def _path_graph(n=24, w=1.0):
+    src = np.arange(n - 1)
+    return from_edges(n, src, src + 1, np.full(n - 1, w, np.float32),
+                      symmetrize=True)
+
+
+def _stripes(n, k):
+    return ((np.arange(n) * k) // n).astype(np.int32)
+
+
+def test_observe_before_reset_raises():
+    mon = DriftMonitor()
+    with pytest.raises(RuntimeError):
+        mon.observe(_path_graph(), _stripes(24, 4))
+
+
+def test_no_drift_no_trip():
+    g = _path_graph()
+    part = _stripes(g.n, 4)
+    mon = DriftMonitor(DriftPolicy(max_objective_ratio=1.5))
+    mon.reset(g, part)
+    d = mon.observe(g, part)
+    assert isinstance(d, DriftDecision)
+    assert not d.repartition and d.reason is None
+    assert d.objective_ratio == pytest.approx(1.0)
+    assert d.imbalance_ratio == pytest.approx(1.0)
+    assert d.deltas_since_full == 1
+
+
+def test_objective_growth_trips():
+    """Adding cross-partition edges inflates the cut objective past the
+    threshold."""
+    g = _path_graph()
+    part = _stripes(g.n, 4)
+    mon = DriftMonitor(DriftPolicy(max_objective_ratio=1.5))
+    mon.reset(g, part)
+    # every new edge crosses the outermost boundary
+    g2 = g.add_edges(np.arange(4), g.n - 1 - np.arange(4))
+    d = mon.observe(g2, part)
+    assert d.repartition and "objective" in d.reason
+    assert d.objective_ratio > 1.5
+
+
+def test_imbalance_trips_without_objective_motion():
+    """Piling intra-block edges onto one PU moves imbalance, not cut."""
+    g = _path_graph(n=32)
+    part = _stripes(g.n, 4)
+    mon = DriftMonitor(DriftPolicy(max_objective_ratio=50.0,
+                                   max_imbalance_ratio=1.2))
+    mon.reset(g, part)
+    u = np.zeros(6, dtype=np.int64)
+    v = np.arange(2, 8, dtype=np.int64)      # all inside block 0
+    d = mon.observe(g.add_edges(u, v), part)
+    assert d.repartition and "imbalance" in d.reason
+
+
+def test_max_deltas_trips_unconditionally():
+    g = _path_graph()
+    part = _stripes(g.n, 4)
+    mon = DriftMonitor(DriftPolicy(max_objective_ratio=100.0,
+                                   max_imbalance_ratio=100.0,
+                                   max_deltas=3))
+    mon.reset(g, part)
+    assert not mon.observe(g, part).repartition
+    assert not mon.observe(g, part).repartition
+    d = mon.observe(g, part)
+    assert d.repartition and "deltas" in d.reason
+    mon.reset(g, part)
+    assert mon.deltas_since_full == 0
+
+
+def test_reset_rebaselines():
+    g = _path_graph()
+    part = _stripes(g.n, 4)
+    mon = DriftMonitor(DriftPolicy(max_objective_ratio=1.5))
+    mon.reset(g, part)
+    g2 = g.add_edges(np.arange(4), g.n - 1 - np.arange(4))
+    assert mon.observe(g2, part).repartition
+    mon.reset(g2, part)                       # as after a full repartition
+    assert not mon.observe(g2, part).repartition
+
+
+def test_hierarchical_pricing_uses_ancestors():
+    """With an ancestor table the objective prices per-level cuts; a
+    pod-crossing edge costs more than a within-pod one under skewed
+    lams."""
+    g = _path_graph(n=16)
+    part = _stripes(g.n, 4)
+    anc = np.array([[0, 0, 1, 1]])
+    # lams are innermost-first: the pod level is lams[-1]
+    pol = DriftPolicy(lams=(1.0, 10.0), max_objective_ratio=1.4)
+    inner = DriftMonitor(pol)
+    inner.reset(g, part, anc)
+    # one extra within-pod cut edge (blocks 0-1) vs one pod-crossing
+    within = g.add_edges([3], [4])            # blocks 0 | 1, same pod
+    across = g.add_edges([7], [8])            # blocks 1 | 2, pod boundary
+    d_within = inner.observe(within, part, anc)
+    inner.reset(g, part, anc)
+    d_across = inner.observe(across, part, anc)
+    assert d_across.objective > d_within.objective
+
+
+def test_structure_graph_prices_like_rebuilt_graph():
+    """The monitor's cheap structure_graph path must price identically to
+    a full from_edges rebuild."""
+    rng = np.random.default_rng(0)
+    n = 30
+    u = rng.integers(0, n, 60)
+    v = rng.integers(0, n, 60)
+    g = from_edges(n, u, v, symmetrize=True)
+    # a CSR with an explicit diagonal, like the Laplacians served
+    src, dst, w = g.edge_list()
+    all_src = np.concatenate([src, np.arange(n)])
+    all_dst = np.concatenate([dst, np.arange(n)])
+    all_val = np.concatenate([-w, np.full(n, 4.0, np.float32)])
+    order = np.lexsort((all_dst, all_src))
+    counts = np.bincount(all_src, minlength=n)
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    gs = structure_graph(indptr, all_dst[order].astype(np.int32),
+                         all_val[order])
+    part = _stripes(n, 4)
+    a = DriftMonitor()
+    a.reset(gs, part)
+    b = DriftMonitor()
+    b.reset(from_edges(n, src, dst, np.abs(w)), part)
+    assert a.baseline == pytest.approx(b.baseline)

@@ -1,0 +1,64 @@
+"""Property-based delta-replanning suite (hypothesis).
+
+The bit-level contract — ``apply_edge_delta(plan, delta)`` equals
+``build_plan_tree`` on the mutated CSR field-by-field — over *random*
+mutation batches (reweights, insertions, deletions, symmetric and not)
+against random symmetric CSR matrices and random partitions, at tree
+depths 1-3.  ``tests/test_replan.py`` holds the deterministic sweeps and
+adversarial shapes; this module searches the space between them.
+"""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from replan_equiv import check_patch_equals_fresh, random_csr, random_delta
+
+FANOUTS = {1: (4,), 2: (2, 2), 3: (2, 2, 2)}
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1),
+       depth=st.sampled_from([1, 2, 3]),
+       n_reweight=st.integers(0, 6),
+       n_add=st.integers(0, 5),
+       n_drop=st.integers(0, 5),
+       symmetric=st.booleans())
+def test_random_mutations_patch_exactly(seed, depth, n_reweight, n_add,
+                                        n_drop, symmetric):
+    rng = np.random.default_rng(seed)
+    k = int(np.prod(FANOUTS[depth]))
+    n = rng.integers(24, 56)
+    ip, ix, d = random_csr(rng, int(n), density=0.1)
+    part = rng.integers(0, k, size=int(n)).astype(np.int32)
+    delta = random_delta(rng, ip, ix, int(n), n_reweight=n_reweight,
+                         n_add=n_add, n_drop=n_drop, symmetric=symmetric)
+    if len(delta) == 0:
+        return
+    check_patch_equals_fresh(ip, ix, d, part, None, k, delta,
+                             fanouts=FANOUTS[depth])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), steps=st.integers(2, 4))
+def test_random_patch_chains_stay_exact(seed, steps):
+    """Patch-of-patch over random deltas: the cache carried by a patched
+    plan must itself be exact input for the next patch."""
+    from repro.sparse.distributed import build_plan_tree
+    from repro.sparse.replan import apply_delta_csr, apply_edge_delta
+
+    from replan_equiv import assert_plan_equal
+
+    rng = np.random.default_rng(seed)
+    n, k, fanouts = 48, 4, (2, 2)
+    ip, ix, d = random_csr(rng, n, density=0.1)
+    part = rng.integers(0, k, size=n).astype(np.int32)
+    plan = build_plan_tree(ip, ix, d, part, None, k, fanouts=fanouts)
+    for _ in range(steps):
+        delta = random_delta(rng, ip, ix, n, n_reweight=3, n_add=2,
+                             n_drop=2, symmetric=bool(rng.integers(2)))
+        if len(delta) == 0:
+            continue
+        plan = apply_edge_delta(plan, delta)
+        ip, ix, d = apply_delta_csr(ip, ix, d, delta)
+        fresh = build_plan_tree(ip, ix, d, part, None, k, fanouts=fanouts)
+        assert_plan_equal(plan, fresh)

@@ -257,6 +257,199 @@ def test_float64_agreement_subprocess():
 
 
 # --------------------------------------------------------------------------
+# streaming updates (update_matrix) — fingerprint motion under mutation
+# --------------------------------------------------------------------------
+
+def _reweight_pair(indptr, indices, data, i, j, val):
+    """EdgeDelta setting the symmetric (i, j) off-diagonal pair plus the
+    mutated CSR it should produce."""
+    from repro.sparse.replan import EdgeDelta, apply_delta_csr
+
+    n = len(indptr) - 1
+    delta = EdgeDelta(n, set_rows=[i, j], set_cols=[j, i],
+                      set_vals=[val, val])
+    return delta, apply_delta_csr(indptr, indices, data, delta)
+
+
+def test_update_matrix_moves_fingerprint():
+    """A served delta retires the old fingerprint entirely: the mutated
+    matrix hits, the *unmutated* one misses — never a stale hit."""
+    indptr, indices, data = _system(8)
+    n = len(indptr) - 1
+    rng = np.random.default_rng(2)
+    b = rng.normal(size=n).astype(np.float32)
+
+    svc = SolverService(max_iters=400, tol=1e-7)
+    r0 = svc.solve(indptr, indices, data, b)
+    delta, (ip2, ix2, d2) = _reweight_pair(indptr, indices, data,
+                                           0, 1, -0.5)
+    resp = svc.update_matrix(r0.fingerprint, delta)
+    assert resp.old_fingerprint == r0.fingerprint
+    assert resp.fingerprint == matrix_fingerprint(ip2, ix2, d2)
+    assert resp.fingerprint != r0.fingerprint
+    # coo operators carry no plan/replan cache -> full rebuild path
+    assert not resp.patched and not resp.repartitioned
+    assert resp.drift is None and resp.state is None
+    assert svc.stats.plan_rebuilds == 1 and svc.stats.plan_patches == 0
+
+    r_new = svc.solve(ip2, ix2, d2, b)
+    assert r_new.cache_hit and r_new.fingerprint == resp.fingerprint
+    r_old = svc.solve(indptr, indices, data, b)
+    assert not r_old.cache_hit            # old matrix: no stale operator
+
+    A2 = sp.csr_matrix((d2, ix2, ip2), shape=(n, n))
+    ref = sp.linalg.spsolve(A2.astype(np.float64), b.astype(np.float64))
+    assert np.abs(np.asarray(r_new.x) - ref).max() \
+        / np.abs(ref).max() < 1e-4
+
+
+def test_update_matrix_unknown_or_evicted_fingerprint_raises():
+    indptr, indices, data = _system(8)
+    B = _system(8, 0.10)
+    rng = np.random.default_rng(3)
+    b = rng.normal(size=len(indptr) - 1).astype(np.float32)
+
+    svc = SolverService(capacity=1, max_iters=200)
+    with pytest.raises(KeyError):
+        svc.update_matrix("0:0:deadbeef", _reweight_pair(
+            indptr, indices, data, 0, 1, -0.5)[0])
+    rA = svc.solve(indptr, indices, data, b)
+    svc.solve(*B, b)                       # capacity 1: evicts A
+    with pytest.raises(KeyError):          # evicted == unknown
+        svc.update_matrix(rA.fingerprint, _reweight_pair(
+            indptr, indices, data, 0, 1, -0.5)[0])
+
+
+def test_eviction_purges_update_state():
+    """LRU eviction of an updated matrix drops its CSR snapshot, drift
+    monitor, warm classes and jit programs — no stale streaming state."""
+    from repro.core.replan_policy import DriftPolicy
+
+    indptr, indices, data = _system(8)
+    B = _system(8, 0.10)
+    rng = np.random.default_rng(4)
+    b = rng.normal(size=len(indptr) - 1).astype(np.float32)
+
+    n = len(indptr) - 1
+    # part is a factory-level hint the coo backend ignores, but it lets
+    # the drift monitor price plan-less operators
+    svc = SolverService(capacity=1, max_iters=200,
+                        part=((np.arange(n) * 4) // n).astype(np.int32),
+                        drift=DriftPolicy(max_objective_ratio=1e6,
+                                          max_imbalance_ratio=1e6))
+    r0 = svc.solve(indptr, indices, data, b)
+    delta, (ip2, ix2, d2) = _reweight_pair(indptr, indices, data,
+                                           0, 1, -0.5)
+    resp = svc.update_matrix(r0.fingerprint, delta)
+    assert resp.drift is not None          # monitor priced the update
+    assert resp.fingerprint in svc._monitors
+    assert resp.old_fingerprint not in svc._csr
+    assert resp.fingerprint in svc._csr and resp.fingerprint in svc._ops
+    svc.solve(ip2, ix2, d2, b)
+
+    svc.solve(*B, b)                       # capacity 1: evicts mutated A
+    assert resp.fingerprint not in svc._ops
+    assert resp.fingerprint not in svc._csr
+    assert resp.fingerprint not in svc._monitors
+    assert not any(fp == resp.fingerprint for fp, _ in svc._warm)
+    assert resp.fingerprint not in svc._jit
+    # every auxiliary table only references live operators
+    assert set(svc._csr) == set(svc._ops)
+    assert set(svc._monitors) <= set(svc._ops)
+    assert {fp for fp, _ in svc._warm} <= set(svc._ops)
+
+
+DELTA_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import scipy.sparse as sp
+    from repro.core.replan_policy import DriftPolicy
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.serve import SolverService
+    from repro.sparse.replan import EdgeDelta, apply_delta_csr
+    from repro.sparse.generators import grid
+    from repro.sparse.graph import laplacian_csr
+
+    g = grid((16, 16))
+    indptr, indices, data = laplacian_csr(g, shift=0.1)
+    n, k = g.n, 8
+    part = ((np.arange(n) * k) // n).astype(np.int32)
+    mesh = make_test_mesh(8, fanouts=(2, 4))
+    repart_calls = []
+
+    def repartition(gs):
+        repart_calls.append(gs.n)
+        return part
+
+    svc = SolverService(backend="dist_hier", capacity=4, max_iters=400,
+                        tol=1e-7, part=part, k=k, mesh=mesh,
+                        fanouts=(2, 4),
+                        drift=DriftPolicy(max_objective_ratio=1.2),
+                        repartition=repartition)
+    rng = np.random.default_rng(0)
+    b = rng.normal(size=n).astype(np.float32)
+    r0 = svc.solve(indptr, indices, data, b)
+
+    # 1) value delta -> O(delta) plan patch, not a rebuild
+    dv = EdgeDelta(n, set_rows=[0, 1], set_cols=[1, 0],
+                   set_vals=[-0.5, -0.5])
+    ip2, ix2, d2 = apply_delta_csr(indptr, indices, data, dv)
+    r1 = svc.update_matrix(r0.fingerprint, dv)
+    assert r1.patched and not r1.repartitioned
+    assert r1.drift is not None and not r1.drift.repartition
+    hit = svc.solve(ip2, ix2, d2, b)
+    assert hit.cache_hit and hit.fingerprint == r1.fingerprint
+    miss = svc.solve(indptr, indices, data, b)
+    assert not miss.cache_hit
+    A2 = sp.csr_matrix((d2, ix2, ip2), shape=(n, n)).astype(np.float64)
+    ref = sp.linalg.spsolve(A2, b.astype(np.float64))
+    rel = float(np.abs(np.asarray(hit.x) - ref).max()
+                / np.abs(ref).max())
+
+    # 2) heavy cross-partition insertions -> drift trip -> repartition,
+    #    with CG state migrated (not restarted)
+    plan = svc._ops[r1.fingerprint].plan
+    xs = plan.scatter_vec(b)
+    u = np.arange(0, 30, dtype=np.int64)
+    v = (n - 1 - u)
+    ds = EdgeDelta(n, set_rows=np.concatenate([u, v]),
+                   set_cols=np.concatenate([v, u]),
+                   set_vals=np.full(60, -1.0))
+    r2 = svc.update_matrix(r1.fingerprint, ds, state=(xs,))
+    assert r2.drift.repartition and "objective" in r2.drift.reason
+    assert r2.repartitioned and not r2.patched
+    assert len(repart_calls) == 1
+    new_plan = svc._ops[r2.fingerprint].plan
+    migrated = np.asarray(new_plan.gather_vec(r2.state[0]))
+    state_exact = bool(np.array_equal(migrated, b))
+
+    s = svc.stats
+    print(json.dumps({
+        "rel": rel, "state_exact": state_exact,
+        "patches": s.plan_patches, "rebuilds": s.plan_rebuilds,
+        "trips": s.drift_trips,
+        "fp_moved": r2.fingerprint != r1.fingerprint != r0.fingerprint,
+    }))
+""")
+
+
+def test_update_matrix_patches_dist_plan_subprocess():
+    """dist_hier serving: a value delta is an O(delta) plan patch; a
+    drift trip forces repartition + exact CG-state migration (8 forced
+    host devices, set before jax import)."""
+    proc = subprocess.run([sys.executable, "-c", DELTA_SCRIPT],
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["rel"] < 1e-4
+    assert out["state_exact"]
+    assert (out["patches"], out["rebuilds"], out["trips"]) == (1, 1, 1)
+    assert out["fp_moved"]
+
+
+# --------------------------------------------------------------------------
 # --gen 0 guard
 # --------------------------------------------------------------------------
 
